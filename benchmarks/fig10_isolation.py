@@ -1,0 +1,16 @@
+"""Paper Fig. 10: isolate each BARISTA technique by progressive enabling."""
+from __future__ import annotations
+
+from repro.core import simulator as S
+
+
+def run(csv_rows):
+    iso = S.isolation_table()
+    labels = list(iso["geomean"].keys())
+    print("fig10_isolation (speedup over Dense, techniques added left->right)")
+    print("  " + " ".join(f"{l:>22s}" for l in ["bench"] + labels))
+    for b in S.FIG7_ORDER + ["geomean"]:
+        print("  " + " ".join(f"{v:>22s}" for v in
+                              [b] + [f"{iso[b][l]:.2f}" for l in labels]))
+        for l in labels:
+            csv_rows.append(("fig10", f"{b}/{l}", iso[b][l], ""))

@@ -1,0 +1,16 @@
+"""Paper Fig. 11: refetches vs buffer size, with/without BARISTA's opts."""
+from __future__ import annotations
+
+from repro.core import simulator as S
+
+
+def run(csv_rows):
+    out = S.buffer_sensitivity((4, 6, 8))
+    cols = list(next(iter(out.values())).keys())
+    print("fig11_buffer_sensitivity (avg refetches per chunk)")
+    print("  " + " ".join(f"{c:>14s}" for c in ["bench"] + cols))
+    for b, row in out.items():
+        print("  " + " ".join(f"{v:>14s}" for v in
+                              [b] + [f"{row[c]:.1f}" for c in cols]))
+        for c in cols:
+            csv_rows.append(("fig11", f"{b}/{c}", row[c], ""))

@@ -1,0 +1,31 @@
+"""Paper Fig. 7: speedup over Dense for every scheme x benchmark.
+
+Validates the reproduction against the paper's headline claims:
+5.4x / 2.2x / 1.7x / 2.5x over Dense / One-sided / SparTen / SparTen-Iso,
+within ~6% of Ideal.
+"""
+from __future__ import annotations
+
+from repro.core import simulator as S
+
+PAPER = {"Dense": 5.4, "One-sided": 2.2, "SparTen": 1.7, "SparTen-Iso": 2.5}
+
+
+def run(csv_rows):
+    t = S.speedup_table()
+    hdr = ["bench"] + S.SCHEMES
+    print("fig7_speedup (x over Dense)")
+    print("  " + " ".join(f"{h:>16s}" for h in hdr))
+    for b in S.FIG7_ORDER + ["geomean"]:
+        row = [b] + [f"{t[b][s]:.2f}" for s in S.SCHEMES]
+        print("  " + " ".join(f"{v:>16s}" for v in row))
+    gm = t["geomean"]
+    print("  paper-claim check (BARISTA vs X; paper -> reproduced):")
+    for base, claim in PAPER.items():
+        got = gm["BARISTA"] / gm[base]
+        flag = "OK" if abs(got - claim) / claim < 0.12 else "DEVIATES"
+        print(f"    vs {base:12s} paper {claim:.1f}x  repro {got:.2f}x  {flag}")
+        csv_rows.append(("fig7", f"barista_vs_{base}", got, claim))
+    ideal_frac = gm["BARISTA"] / gm["Ideal"]
+    print(f"    vs Ideal       paper >=0.94   repro {ideal_frac:.3f}")
+    csv_rows.append(("fig7", "barista_vs_ideal", ideal_frac, 0.94))

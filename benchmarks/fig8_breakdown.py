@@ -1,0 +1,26 @@
+"""Paper Fig. 8: execution-time breakdown (normalized to Dense) per scheme.
+
+Components: nonzero / zero compute, barrier loss, bandwidth delay, other.
+"""
+from __future__ import annotations
+
+from repro.core import simulator as S
+
+SCHEMES = ["Dense", "One-sided", "SCNN", "SparTen", "Synchronous", "BARISTA"]
+
+
+def run(csv_rows):
+    print("fig8_breakdown (fraction of Dense cycles)")
+    for b in S.FIG7_ORDER:
+        bench = S.BENCHMARKS[b]
+        dense = S.simulate(bench, "Dense").cycles
+        print(f"  {b}")
+        print(f"    {'scheme':>16s} {'nonzero':>8s} {'zero':>8s} "
+              f"{'barrier':>8s} {'bw':>8s} {'other':>8s} {'total':>8s}")
+        for s in SCHEMES:
+            r = S.simulate(bench, s)
+            parts = [r.nonzero, r.zero, r.barrier, r.bandwidth, r.other]
+            print(f"    {s:>16s} " + " ".join(f"{p / dense:8.3f}"
+                                              for p in parts)
+                  + f" {r.cycles / dense:8.3f}")
+            csv_rows.append(("fig8", f"{b}/{s}/total", r.cycles / dense, ""))

@@ -1,0 +1,45 @@
+"""Paper Fig. 9: compute + memory energy, normalized to Dense.
+
+Headline: BARISTA ~19% / 67% / 7% lower compute energy than Dense /
+One-sided / SparTen.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.core.asic_model import energy_table
+from repro.core.simulator import FIG7_ORDER
+
+SCHEMES = ["Dense", "One-sided", "SparTen", "BARISTA"]
+
+
+def run(csv_rows):
+    et = energy_table()
+    print("fig9_energy (normalized to Dense)")
+    print(f"  {'bench':>14s} " + " ".join(
+        f"{s + '(c)':>12s} {s + '(m)':>12s}" for s in SCHEMES))
+    for b in FIG7_ORDER:
+        cells = []
+        for s in SCHEMES:
+            e = et[b][s]
+            d = et[b]["Dense"]
+            cells.append(f"{e.compute_total / d.compute_total:12.3f} "
+                         f"{e.mem_total / max(d.mem_total, 1e-9):12.3f}")
+        print(f"  {b:>14s} " + " ".join(cells))
+
+    def gmean(scheme):
+        vals = [et[b][scheme].compute_total / et[b]["Dense"].compute_total
+                for b in FIG7_ORDER]
+        return math.exp(float(np.mean(np.log(vals))))
+
+    ba, one, st_ = gmean("BARISTA"), gmean("One-sided"), gmean("SparTen")
+    print("  compute-energy geomeans (paper: BARISTA 19%/67%/7% lower than "
+          "Dense/One-sided/SparTen):")
+    print(f"    vs Dense     paper -19%  repro {100 * (ba - 1):+.1f}%")
+    print(f"    vs One-sided paper -67%  repro {100 * (ba / one - 1):+.1f}%")
+    print(f"    vs SparTen   paper  -7%  repro {100 * (ba / st_ - 1):+.1f}%")
+    csv_rows.append(("fig9", "barista_vs_dense_compute_energy", ba, 0.81))
+    csv_rows.append(("fig9", "barista_vs_onesided", ba / one, 0.33))
+    csv_rows.append(("fig9", "barista_vs_sparten", ba / st_, 0.93))

@@ -1,0 +1,114 @@
+"""Roofline analysis from the compiled dry-run artifacts.
+
+For each (arch x shape) on the single-pod mesh:
+
+    compute term    = HLO_FLOPs / (chips x 197 TFLOP/s bf16)
+    memory term     = HLO_bytes / (chips x 819 GB/s HBM)
+    collective term = collective_bytes / (chips x 50 GB/s ICI per link)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` on structurally-unrolled
+1-/2-period variants extrapolated to full depth (XLA counts while-loop
+bodies once); collective bytes are parsed from the compiled HLO text.
+Also reports MODEL_FLOPS = 6*N*D (active N for MoE) and the useful-compute
+ratio, and names the dominant term.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs.base import SHAPES, load_config
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+ICI_BW = 50e9             # bytes/s / link
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6*N*D training / 2*N*D inference FLOPs (active params for MoE)."""
+    cfg = load_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_params_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+OPT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun_opt")
+
+
+def load_cells(mesh: str = "single", opt: bool = False) -> List[Dict]:
+    cells = []
+    base = OPT_DIR if opt else DRYRUN_DIR
+    for path in sorted(glob.glob(os.path.join(base, f"*_{mesh}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def terms(cell: Dict) -> Optional[Dict[str, float]]:
+    pd = cell.get("per_device")
+    if pd is None:
+        pd = cell.get("measured_scanned")
+    if pd is None:
+        return None
+    compute = pd["flops"] / PEAK_FLOPS
+    memory = pd["bytes"] / HBM_BW
+    coll = pd["collective_bytes"] / ICI_BW
+    dom = max(("compute", compute), ("memory", memory),
+              ("collective", coll), key=lambda kv: kv[1])
+    mf = model_flops(cell["arch"], cell["shape"])
+    useful = mf / max(pd["flops"] * cell["devices"], 1e-9)
+    bound = max(compute, memory, coll)
+    frac = compute / max(bound, 1e-12)
+    return {"compute_s": compute, "memory_s": memory, "collective_s": coll,
+            "dominant": dom[0], "model_flops": mf, "useful_ratio": useful,
+            "roofline_fraction": frac}
+
+
+def run(csv_rows):
+    cells = load_cells("single")
+    if not cells:
+        print("roofline: no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun` first")
+        return
+    opt = {(c["arch"], c["shape"]): c for c in load_cells("single", opt=True)}
+    print("roofline (single-pod; seconds per step; 197TF/819GBps/50GBps; "
+          "opt = head-aligned sharding + SP + flash + grouped GQA)")
+    print(f"  {'arch':>22s} {'shape':>12s} {'compute':>9s} {'memory':>9s} "
+          f"{'collect':>9s} {'dominant':>10s} {'useful':>6s} {'roofl%':>7s} "
+          f"{'opt-dom':>9s} {'opt-roofl%':>10s}")
+    for cell in cells:
+        t = terms(cell)
+        if t is None:
+            continue
+        o = opt.get((cell["arch"], cell["shape"]))
+        ot = terms(o) if o else None
+        extra = "        -          -"
+        if ot:
+            odom = max(ot["compute_s"], ot["memory_s"], ot["collective_s"])
+            extra = f"{odom:9.4f} {100 * ot['roofline_fraction']:9.1f}%"
+        print(f"  {cell['arch']:>22s} {cell['shape']:>12s} "
+              f"{t['compute_s']:9.3f} {t['memory_s']:9.3f} "
+              f"{t['collective_s']:9.3f} {t['dominant']:>10s} "
+              f"{t['useful_ratio']:6.2f} {100 * t['roofline_fraction']:6.1f}% "
+              f"{extra}")
+        csv_rows.append(("roofline",
+                         f"{cell['arch']}/{cell['shape']}/dominant_s",
+                         max(t["compute_s"], t["memory_s"],
+                             t["collective_s"]), t["dominant"]))
+        if ot:
+            csv_rows.append(("roofline_opt",
+                             f"{cell['arch']}/{cell['shape']}/dominant_s",
+                             max(ot["compute_s"], ot["memory_s"],
+                                 ot["collective_s"]), ot["dominant"]))

@@ -1,0 +1,45 @@
+"""Benchmark runner: one module per paper table/figure + roofline + kernel.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig7,roofline]
+
+Each module prints its table and appends (bench, metric, value, reference)
+rows; the runner emits a combined CSV at the end.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks import (fig7_speedup, fig8_breakdown, fig9_energy,
+                        fig10_isolation, fig11_buffers, kernel_bench,
+                        roofline, table3_asic)
+
+MODULES = {
+    "fig7": fig7_speedup, "fig8": fig8_breakdown, "fig9": fig9_energy,
+    "fig10": fig10_isolation, "fig11": fig11_buffers, "table3": table3_asic,
+    "kernel": kernel_bench, "roofline": roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(MODULES))
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(MODULES)
+
+    csv_rows = []
+    for name in names:
+        mod = MODULES[name]
+        t0 = time.time()
+        print("=" * 78)
+        mod.run(csv_rows)
+        print(f"[{name} done in {time.time() - t0:.1f}s]")
+    print("=" * 78)
+    print("bench,metric,value,reference")
+    for row in csv_rows:
+        print(",".join(str(x) for x in row))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Paper Table 3: area/power at 45 nm for BARISTA / SparTen / Dense."""
+from __future__ import annotations
+
+from repro.core.asic_model import TABLE3, totals
+
+PAPER_TOTALS = {"BARISTA": (212.9, 170.0), "SparTen": (402.7, 214.9),
+                "Dense": (154.1, 83.0)}
+
+
+def run(csv_rows):
+    print("table3_asic (45-nm, four 8K-PE clusters)")
+    for sys_ in ("BARISTA", "SparTen", "Dense"):
+        t = totals(sys_)
+        pa, pp = PAPER_TOTALS[sys_]
+        print(f"  {sys_:8s} area {t['area_mm2']:6.1f} mm^2 (paper {pa}), "
+              f"power {t['power_w']:6.1f} W (paper {pp})")
+        for comp, (a, p) in TABLE3[sys_].items():
+            print(f"      {comp:9s} {a:6.1f} mm^2 {p:6.1f} W")
+        csv_rows.append(("table3", f"{sys_}/area_mm2", t["area_mm2"], pa))
+        csv_rows.append(("table3", f"{sys_}/power_w", t["power_w"], pp))
+    ba, de = totals("BARISTA"), totals("Dense")
+    print(f"  BARISTA vs Dense: {ba['area_mm2'] / de['area_mm2']:.2f}x area "
+          f"(paper 1.38x), {ba['power_w'] / de['power_w']:.2f}x power "
+          f"(paper 2.05x)")

@@ -1,0 +1,96 @@
+"""End-to-end training driver: pruned ("sparse-filter") LM training with
+fault-tolerant checkpointing.
+
+    PYTHONPATH=src python examples/train_sparse_lm.py \
+        [--steps 300] [--d-model 256] [--layers 8] [--resume]
+
+Trains a GPT-style LM (defaults ~10M params — scale --d-model/--layers up
+to ~100M on real hardware; this container has one CPU core) on the
+deterministic synthetic pipeline with:
+  * Deep-Compression-style pruning masks applied every step (the BARISTA
+    filter-sparsity regime: weights stay exactly zero while training),
+  * atomic async checkpoints + crash-safe resume (kill it mid-run and
+    re-launch with --resume: it continues from the last commit),
+  * loss that demonstrably decreases (the synthetic stream has learnable
+    bigram structure).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as M
+from repro.optim import adamw
+from repro.sparsity import pruning
+from repro.train.loop import TrainLoopConfig, train
+from repro.train.train_step import make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--density", type=float, default=0.35)
+    ap.add_argument("--ckpt", default="/tmp/sparse_lm_ckpt")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name=f"sparse-lm-{args.d_model}d{args.layers}L", family="dense",
+        n_layers=args.layers, d_model=args.d_model,
+        n_heads=max(args.d_model // 64, 1), n_kv_heads=max(args.d_model // 128, 1),
+        d_head=64, d_ff=4 * args.d_model, vocab=4096, act="relu2",
+        dtype="float32", sparse_ffn=True)
+    n_params = cfg.params_count()
+    print(f"model {cfg.name}: ~{n_params / 1e6:.1f}M params, "
+          f"FFN density target {args.density:.0%}")
+
+    # pruning masks fixed at init (prune-then-retrain, paper's regime)
+    params0 = M.init_params(jax.random.PRNGKey(0), cfg)
+    masks = pruning.prune_masks(
+        params0, pruning.PruneConfig(density=args.density))
+    realized = pruning.density_report(params0, masks)
+    some = list(realized.items())[:2]
+    print(f"pruned {len(realized)} weight tensors, e.g. {some}")
+
+    shape = ShapeConfig("lm", args.seq, args.batch, "train")
+    loop_cfg = TrainLoopConfig(steps=args.steps, ckpt_every=50,
+                               ckpt_dir=args.ckpt, log_every=20)
+    opt_cfg = adamw.AdamWConfig(lr=args.lr, warmup_steps=20,
+                                total_steps=args.steps)
+
+    def post_step(state, metrics):
+        # re-apply masks after the optimizer step: pruned weights stay 0
+        state.params.update(pruning.apply_masks(state.params, masks))
+        return state
+
+    state = train(cfg, shape, loop_cfg, opt_cfg, post_step=post_step)
+
+    # verify the sparsity contract survived training
+    import numpy as np
+    flat_p = dict(zip(*(lambda f: (["/".join(str(getattr(k, "key", k))
+                                            for k in kp) for kp, v in f],
+                                   [v for _, v in f]))(
+        jax.tree_util.tree_flatten_with_path(state.params)[0])))
+    flat_m, _ = jax.tree_util.tree_flatten_with_path(
+        masks, is_leaf=lambda x: x is None)
+    kept = 0
+    for kp, mk in flat_m:
+        if mk is None:
+            continue
+        key = "/".join(str(getattr(k, "key", k)) for k in kp)
+        w = np.asarray(flat_p[key])
+        assert np.all(w[np.asarray(mk) == 0] == 0), key
+        kept += 1
+    print(f"sparsity contract held for {kept} tensors after "
+          f"{state.step} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,151 @@
+"""Model / run configuration system.
+
+Every assigned architecture is a :class:`ModelConfig` in its own module
+(``repro/configs/<id>.py``) exposing ``CONFIG`` plus a ``smoke()`` reduced
+variant of the same family. Shapes are :class:`ShapeConfig`; the four
+assigned input-shape cells are in :data:`SHAPES`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    every: int = 1              # MoE replaces FFN every N blocks
+    shared_dense_ff: int = 0    # arctic: dense residual FFN alongside MoE
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | encdec | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int                # 0 for attention-free
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 128
+    act: str = "swiglu"         # swiglu | geglu | relu2 | relu | gelu
+    qk_norm: bool = False
+    window: Optional[int] = None          # sliding-window attention
+    rope_theta: float = 10_000.0
+    moe: Optional[MoEConfig] = None
+    mamba: Optional[MambaConfig] = None
+    # per-period block pattern, e.g. ("attn",) or ("attn",)+("mamba",)*7
+    block_pattern: Tuple[str, ...] = ("attn",)
+    encoder_layers: int = 0               # >0 => encoder-decoder
+    frontend: Optional[str] = None        # audio | vision (stub embeddings)
+    frontend_len: int = 0                 # prefix length contributed by stub
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    # BARISTA sparse path: which FFNs may take the two-sided sparse kernel
+    sparse_ffn: bool = False              # natural activation sparsity (relu-family)
+    rwkv: bool = False
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded to 512 so the embedding shards on a 16/32-way axis."""
+        return -(-self.vocab // 512) * 512
+
+    @property
+    def periods(self) -> int:
+        assert self.n_layers % len(self.block_pattern) == 0, \
+            (self.name, self.n_layers, len(self.block_pattern))
+        return self.n_layers // len(self.block_pattern)
+
+    def params_count(self) -> float:
+        """Approximate parameter count N (roofline MODEL_FLOPS = 6*N*D)."""
+        d, f, L = self.d_model, self.d_ff, self.n_layers
+        emb = self.padded_vocab * d * (1 if self.tie_embeddings else 2)
+        per_block = 0.0
+        for kind in self.block_pattern:
+            if kind == "attn":
+                qkv = d * (self.n_heads + 2 * self.n_kv_heads) * self.d_head
+                per_block += qkv + self.n_heads * self.d_head * d
+            elif kind == "mamba":
+                m = self.mamba or MambaConfig()
+                din = m.expand * d
+                per_block += 2 * d * din + din * d + din * (2 * m.d_state + 2)
+            if kind in ("attn", "mamba"):
+                per_block += self._ffn_params(d, f)
+        total = emb + per_block * self.periods
+        if self.encoder_layers:
+            # encoder blocks + decoder cross-attention
+            enc = self.encoder_layers * (
+                d * (self.n_heads + 2 * self.n_kv_heads) * self.d_head
+                + self.n_heads * self.d_head * d + self._ffn_params(d, f))
+            cross = self.n_layers * (
+                d * (self.n_heads + 2 * self.n_kv_heads) * self.d_head
+                + self.n_heads * self.d_head * d)
+            total += enc + cross
+        return float(total)
+
+    def active_params_count(self) -> float:
+        """Active (per-token) parameters — MoE counts top_k experts only."""
+        if self.moe is None:
+            return self.params_count()
+        d = self.d_model
+        n_moe = self.n_layers // self.moe.every
+        gates = 3 if self.act in ("swiglu", "geglu") else 2
+        all_e = n_moe * self.moe.num_experts * gates * d * self.moe.d_ff_expert
+        act_e = n_moe * self.moe.top_k * gates * d * self.moe.d_ff_expert
+        return self.params_count() - all_e + act_e
+
+    def _ffn_params(self, d: int, f: int) -> float:
+        gates = 3 if self.act in ("swiglu", "geglu") else 2
+        if self.moe is not None:
+            moe_p = self.moe.num_experts * gates * d * self.moe.d_ff_expert \
+                + d * self.moe.num_experts
+            dense_p = gates * d * self.moe.shared_dense_ff
+            # averaged over the `every` period
+            return (moe_p + dense_p) / self.moe.every \
+                + gates * d * f * (1 - 1 / self.moe.every)
+        return gates * d * f
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+ARCHS = [
+    "seamless_m4t_medium", "jamba_1_5_large_398b", "nemotron_4_340b",
+    "qwen3_4b", "h2o_danube_3_4b", "yi_34b", "moonshot_v1_16b_a3b",
+    "arctic_480b", "rwkv6_3b", "paligemma_3b",
+]
+
+
+def load_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch.replace('-', '_')}")
+    return mod.CONFIG
+
+
+def load_smoke(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch.replace('-', '_')}")
+    return mod.smoke()

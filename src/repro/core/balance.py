@@ -1,0 +1,130 @@
+"""Load-balancing schemes from the paper, in software.
+
+* :func:`greedy_balance` — the GB-S variant BARISTA uses (Section 3.3.3):
+  whole-filter density sort, *no* co-location, boustrophedon assignment to
+  shards, alternating direction across consecutive inputs/steps so that the
+  systematically-dense end of the ordering does not pin the same shard.
+* :func:`fold_permutation` — scrambled output channels are repaired by
+  statically reordering the *next* layer's weights (paper: offline, layer by
+  layer, amortized over all inferences).
+* :func:`round_robin_permutation` — dynamic round-robin assignment of filter
+  sub-chunks to PEs (Section 3.3.2): sub-chunk ``i`` goes to lane
+  ``(i + step) % lanes`` so a dense sub-chunk rotates across lanes over
+  consecutive input chunks.
+* :func:`expert_placement` — the same greedy balancing applied to MoE experts
+  (expert popularity/density -> device), the framework-level analogue of
+  inter-filter balance.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def filter_density(w: np.ndarray, axis_out: int = -1) -> np.ndarray:
+    """Per-output-channel non-zero density of a weight tensor."""
+    w = np.asarray(w)
+    w = np.moveaxis(w, axis_out, -1)
+    flat = w.reshape(-1, w.shape[-1])
+    return (flat != 0).mean(axis=0)
+
+
+def greedy_balance(density: np.ndarray, num_shards: int,
+                   direction: int = 0) -> np.ndarray:
+    """GB-S variant: density-sorted boustrophedon assignment.
+
+    Returns ``perm`` such that output channel ``perm[i]`` is processed in
+    slot ``i``; consecutive slots round-robin over shards in serpentine
+    order, so every shard gets a near-identical density profile. ``direction``
+    flips the ordering (the paper alternates between increasing and
+    decreasing density for consecutive input maps — only two fixed
+    permutations, repaired by a 2-1 mux instead of a permutation network).
+    """
+    order = np.argsort(density, kind="stable")
+    if direction % 2 == 1:
+        order = order[::-1]
+    n = order.shape[0]
+    rows = -(-n // num_shards)  # ceil
+    perm = np.full(rows * num_shards, -1, np.int64)
+    # serpentine: row r runs left->right on even r, right->left on odd r,
+    # so shard s accumulates { order[r*S + f(s,r)] } with balanced density.
+    for r in range(rows):
+        lo, hi = r * num_shards, min((r + 1) * num_shards, n)
+        seg = order[lo:hi]
+        if r % 2 == 1:
+            seg = seg[::-1]
+        perm[lo : lo + seg.shape[0]] = seg
+    return perm[perm >= 0]
+
+
+def balance_cost(density: np.ndarray, perm: np.ndarray, num_shards: int) -> float:
+    """Max/mean per-shard density — 1.0 is perfect balance (simulator metric)."""
+    d = density[perm]
+    pad = (-d.shape[0]) % num_shards
+    d = np.concatenate([d, np.zeros(pad)])
+    per_shard = d.reshape(-1, num_shards).sum(axis=0)
+    return float(per_shard.max() / max(per_shard.mean(), 1e-12))
+
+
+def invert_permutation(perm: np.ndarray) -> np.ndarray:
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(perm.shape[0])
+    return inv
+
+
+def fold_permutation(next_w: np.ndarray, perm: np.ndarray,
+                     axis_in: int = 0) -> np.ndarray:
+    """Repair scrambled output channels by permuting next layer's input dim.
+
+    If this layer emits channels in order ``perm`` (i.e. slot i holds original
+    channel perm[i]), the next layer must read its input-channel axis in the
+    same order.
+    """
+    next_w = np.asarray(next_w)
+    return np.take(next_w, perm, axis=axis_in)
+
+
+def round_robin_permutation(num_subchunks: int, step: int) -> np.ndarray:
+    """Sub-chunk -> lane assignment for a given input step (Section 3.3.2)."""
+    return (np.arange(num_subchunks) + step) % num_subchunks
+
+
+def rotate_assignment(work: np.ndarray, lanes: int, steps: int) -> Tuple[float, float]:
+    """Compare static vs round-robin lane imbalance over ``steps`` inputs.
+
+    ``work``: per-sub-chunk work metric, shape [steps, num_subchunks] (the
+    per-input-chunk densities). Returns (static_imbalance, rr_imbalance) as
+    max-lane / mean-lane aggregate work — the simulator uses this to model
+    intra-filter load imbalance.
+    """
+    work = np.asarray(work, np.float64)
+    steps_n, ns = work.shape
+    assert ns % lanes == 0
+    per_lane_static = np.zeros(lanes)
+    per_lane_rr = np.zeros(lanes)
+    for t in range(steps_n):
+        for s in range(ns):
+            per_lane_static[s % lanes] += work[t, s]
+            per_lane_rr[(s + t) % lanes] += work[t, s]
+    mean = work.sum() / lanes
+    return (float(per_lane_static.max() / max(mean, 1e-12)),
+            float(per_lane_rr.max() / max(mean, 1e-12)))
+
+
+def expert_placement(expert_load: np.ndarray, num_devices: int,
+                     step: int = 0) -> np.ndarray:
+    """MoE analogue of inter-filter balancing: experts -> devices.
+
+    Returns an array ``device_of_expert`` of shape [num_experts]. Experts are
+    density(load)-sorted and dealt serpentine across devices; ``step`` rotates
+    the deal (round-robin over steps) so a persistently-hot expert does not
+    pin one device across the whole run.
+    """
+    num_experts = expert_load.shape[0]
+    perm = greedy_balance(np.asarray(expert_load, np.float64), num_devices,
+                          direction=step)
+    device_of_expert = np.empty(num_experts, np.int64)
+    for slot, e in enumerate(perm):
+        device_of_expert[e] = (slot + step) % num_devices
+    return device_of_expert

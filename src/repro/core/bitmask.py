@@ -1,0 +1,192 @@
+"""Chunked bit-mask sparse tensor representation (BARISTA / SparTen format).
+
+The paper represents sparse tensors as fixed-size *chunks* (128 cells) with a
+bit mask marking non-zero positions plus a packed vector of the non-zero
+values. Matching non-zeros between two operands is a mask AND + prefix sum.
+
+On TPU the natural chunk is 128 (the lane width); we keep that. Two layouts:
+
+* :class:`BitmaskVector` — per-scalar fidelity (mask + packed values), used by
+  the reference sparse ops and by the cycle simulator. Packed values are
+  padded to a static per-chunk capacity so every shape is trace-stable.
+* :class:`BlockSparseMatrix` — chunk-granular (block) sparsity used by the
+  Pallas kernel: a [K, N] matrix whose K dimension is cut into ``bk``-sized
+  chunks and N into ``bn`` blocks; for each N block we store the list of
+  K-chunk indices that contain any non-zero, padded to the max list length.
+
+Both are host-constructed (filters are static for inference — the paper
+pre-processes them offline) and then live as device arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+CHUNK = 128  # paper chunk size == TPU lane width
+
+
+# ---------------------------------------------------------------------------
+# Per-scalar bitmask vectors (paper-faithful representation)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class BitmaskVector:
+    """1-D sparse vector in SparTen/BARISTA bit-mask format.
+
+    mask:   bool  [num_chunks, CHUNK]   — non-zero positions
+    values: float [num_chunks, cap]     — packed non-zeros, zero-padded
+    length: original (unpadded) length
+    """
+
+    mask: jnp.ndarray
+    values: jnp.ndarray
+    length: int
+
+    @property
+    def num_chunks(self) -> int:
+        return self.mask.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.values.shape[1]
+
+    def nnz(self) -> jnp.ndarray:
+        return self.mask.sum()
+
+
+def encode(x: np.ndarray, capacity: int | None = None) -> BitmaskVector:
+    """Encode a 1-D array into bit-mask format (host side, static filters)."""
+    x = np.asarray(x)
+    assert x.ndim == 1
+    n = x.shape[0]
+    padded = int(np.ceil(n / CHUNK)) * CHUNK
+    xp = np.zeros(padded, x.dtype)
+    xp[:n] = x
+    xp = xp.reshape(-1, CHUNK)
+    mask = xp != 0
+    cap = capacity if capacity is not None else max(int(mask.sum(1).max(initial=0)), 1)
+    vals = np.zeros((xp.shape[0], cap), x.dtype)
+    for c in range(xp.shape[0]):
+        nz = xp[c][mask[c]][:cap]
+        vals[c, : nz.shape[0]] = nz
+    return BitmaskVector(jnp.asarray(mask), jnp.asarray(vals), n)
+
+
+def decode(v: BitmaskVector) -> jnp.ndarray:
+    """Inverse of :func:`encode` (pure jnp — usable inside jit)."""
+    # Positions of non-zeros within each chunk: prefix-sum of the mask gives,
+    # for each position, which packed slot holds its value (the paper's
+    # prefix-sum circuit in software).
+    mask = v.mask
+    slot = jnp.cumsum(mask, axis=1) - 1  # [-1 .. cap)
+    slot = jnp.clip(slot, 0, v.capacity - 1)
+    gathered = jnp.take_along_axis(v.values, slot, axis=1)
+    dense = jnp.where(mask, gathered, 0)
+    return dense.reshape(-1)[: v.length]
+
+
+def match_and_multiply(a: BitmaskVector, b: BitmaskVector) -> jnp.ndarray:
+    """Sparse dot product via mask AND + prefix-sum matching (the paper's PE).
+
+    This is the key primitive: find matching non-zero positions in the two
+    operands and multiply only those. Returns a scalar.
+    """
+    assert a.num_chunks == b.num_chunks
+    both = a.mask & b.mask  # the AND circuit
+    # Prefix sums locate each matched position in the packed value arrays
+    # (paper: prefix-sum + priority-encoder circuits).
+    slot_a = jnp.clip(jnp.cumsum(a.mask, axis=1) - 1, 0, a.capacity - 1)
+    slot_b = jnp.clip(jnp.cumsum(b.mask, axis=1) - 1, 0, b.capacity - 1)
+    va = jnp.take_along_axis(a.values, slot_a, axis=1)
+    vb = jnp.take_along_axis(b.values, slot_b, axis=1)
+    prod = jnp.where(both, va.astype(jnp.float32) * vb.astype(jnp.float32), 0.0)
+    return prod.sum()
+
+
+def match_count(a: BitmaskVector, b: BitmaskVector) -> jnp.ndarray:
+    """Number of effective MACs for the pair (simulator work metric)."""
+    return (a.mask & b.mask).sum()
+
+
+# ---------------------------------------------------------------------------
+# Chunk-granular block sparsity (TPU kernel layout)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class BlockSparseMatrix:
+    """[K, N] matrix, K cut into ``bk`` chunks, N into ``bn`` blocks.
+
+    indices: int32 [n_blocks, max_nz]          — K-chunk ids, -1 padded
+    vals:    dtype [n_blocks, max_nz, bk, bn]  — the non-zero chunk tiles
+    shape:   (K, N)
+    """
+
+    indices: jnp.ndarray
+    vals: jnp.ndarray
+    shape: Tuple[int, int]
+    bk: int
+    bn: int
+
+    @property
+    def n_blocks(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def max_nz(self) -> int:
+        return self.indices.shape[1]
+
+    def density(self) -> float:
+        nz = int(np.asarray(self.indices >= 0).sum())
+        total = (self.shape[0] // self.bk) * self.n_blocks
+        return nz / max(total, 1)
+
+
+def block_sparsify(w: np.ndarray, bk: int = CHUNK, bn: int = CHUNK,
+                   pad_to: int | None = None) -> BlockSparseMatrix:
+    """Host-side conversion of a dense [K, N] matrix to block-sparse layout.
+
+    A (k-chunk, n-block) tile is kept iff it contains any non-zero. All
+    per-column lists are padded to the longest list (static shapes for jit).
+    """
+    w = np.asarray(w)
+    K, N = w.shape
+    assert K % bk == 0 and N % bn == 0, (K, N, bk, bn)
+    kb, nb = K // bk, N // bn
+    tiles = w.reshape(kb, bk, nb, bn).transpose(2, 0, 1, 3)  # [nb, kb, bk, bn]
+    occupied = (tiles != 0).any(axis=(2, 3))  # [nb, kb]
+    max_nz = int(occupied.sum(1).max(initial=0))
+    if pad_to is not None:
+        max_nz = max(max_nz, pad_to)
+    max_nz = max(max_nz, 1)
+    indices = np.full((nb, max_nz), -1, np.int32)
+    vals = np.zeros((nb, max_nz, bk, bn), w.dtype)
+    for n in range(nb):
+        ks = np.nonzero(occupied[n])[0]
+        indices[n, : ks.shape[0]] = ks
+        vals[n, : ks.shape[0]] = tiles[n, ks]
+    return BlockSparseMatrix(jnp.asarray(indices), jnp.asarray(vals), (K, N), bk, bn)
+
+
+def block_densify(m: BlockSparseMatrix) -> jnp.ndarray:
+    """Pure-jnp reconstruction of the dense matrix (oracle support)."""
+    K, N = m.shape
+    kb, nb = K // m.bk, N // m.bn
+    out = jnp.zeros((nb, kb, m.bk, m.bn), m.vals.dtype)
+    valid = m.indices >= 0
+    safe = jnp.where(valid, m.indices, 0)
+    # scatter-add each stored tile into its K slot (invalid tiles are zeros)
+    contrib = jnp.where(valid[..., None, None], m.vals, 0)
+    out = out.at[jnp.arange(nb)[:, None], safe].add(contrib)
+    return out.transpose(1, 2, 0, 3).reshape(K, N)
+
+
+def chunk_occupancy(x: jnp.ndarray, bm: int, bk: int) -> jnp.ndarray:
+    """[M, K] activations -> bool [M//bm, K//bk] tile-occupancy map.
+
+    Cheap O(MK) reduction used by the two-sided kernel to skip activation
+    tiles that are entirely zero (e.g. after squared-ReLU).
+    """
+    M, K = x.shape
+    t = x.reshape(M // bm, bm, K // bk, bk)
+    return (t != 0).any(axis=(1, 3))

@@ -1,0 +1,95 @@
+"""Deterministic synthetic data pipeline.
+
+Every batch is a pure function of (step, arch, shape) — ``seed =
+hash(step, shard)`` — so any host can regenerate any shard's data at any
+time. This is the fault-tolerance story for data: node failures, elastic
+rescaling and straggler re-execution need no replay log or data-loader
+checkpoints; the restart just recomputes from the step counter (which *is*
+checkpointed).
+
+Synthetic text is a Zipf-ish token stream with a repeated-ngram structure so
+the model has something learnable (loss decreases in the e2e example).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+
+def _batch_key(cfg: DataConfig, step: int) -> jax.Array:
+    return jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+
+
+def synth_tokens(cfg: DataConfig, step: int) -> jnp.ndarray:
+    """[global_batch, seq_len+1] int32 (inputs + shifted labels)."""
+    key = _batch_key(cfg, step)
+    k1, k3 = jax.random.split(key, 2)
+    B, S = cfg.global_batch, cfg.seq_len + 1
+    # Zipf-ish marginal via squared uniform; learnable bigram structure via
+    # a FIXED (per-seed, step-independent) permutation rule applied to a
+    # random subset of positions — the model can learn the rule over steps.
+    u = jax.random.uniform(k1, (B, S))
+    toks = (u * u * (cfg.vocab - 2)).astype(jnp.int32) + 1
+    perm = jax.random.permutation(jax.random.PRNGKey(cfg.seed + 7919),
+                                  cfg.vocab)
+    follow = jax.random.bernoulli(k3, 0.5, (B, S - 1))
+    nxt = jnp.where(follow, perm[toks[:, :-1]] % cfg.vocab, toks[:, 1:])
+    return jnp.concatenate([toks[:, :1], nxt], axis=1)
+
+
+def batch_for(model_cfg: ModelConfig, shape: ShapeConfig, step: int,
+              seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Train batch: tokens/labels (+ frontend stub embeds where assigned)."""
+    text_len = shape.seq_len
+    if model_cfg.frontend == "vision":
+        text_len = shape.seq_len - model_cfg.frontend_len
+    dc = DataConfig(model_cfg.vocab, text_len, shape.global_batch, seed)
+    full = synth_tokens(dc, step)
+    out = {"tokens": full[:, :-1], "labels": full[:, 1:]}
+    key = _batch_key(dc, step)
+    if model_cfg.frontend == "vision":
+        out["prefix_embeds"] = 0.02 * jax.random.normal(
+            key, (shape.global_batch, model_cfg.frontend_len,
+                  model_cfg.d_model), jnp.float32)
+    if model_cfg.encoder_layers:
+        src = shape.seq_len  # stubbed frame embeddings at d_model
+        out["src_embeds"] = 0.02 * jax.random.normal(
+            key, (shape.global_batch, src, model_cfg.d_model), jnp.float32)
+    return out
+
+
+def input_specs(model_cfg: ModelConfig, shape: ShapeConfig
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (dry-run; no
+    allocation)."""
+    B = shape.global_batch
+    if shape.kind == "decode":
+        spec = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        return spec
+    text_len = shape.seq_len
+    if model_cfg.frontend == "vision":
+        text_len -= model_cfg.frontend_len
+    spec = {"tokens": jax.ShapeDtypeStruct((B, text_len), jnp.int32)}
+    if shape.kind == "train":
+        spec["labels"] = jax.ShapeDtypeStruct((B, text_len), jnp.int32)
+    if model_cfg.frontend == "vision":
+        spec["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (B, model_cfg.frontend_len, model_cfg.d_model), jnp.float32)
+    if model_cfg.encoder_layers:
+        spec["src_embeds"] = jax.ShapeDtypeStruct(
+            (B, shape.seq_len, model_cfg.d_model), jnp.float32)
+    return spec

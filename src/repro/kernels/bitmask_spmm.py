@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: chunk-granular two-sided sparse matmul (BARISTA core).
+
+The paper's PE matches non-zero positions per scalar with prefix-sum /
+priority-encoder circuits. The TPU's MXU is a dense 128x128 systolic array,
+so the TPU-native granularity for sparsity is the 128-wide *chunk* — exactly
+the paper's chunk unit. This kernel computes ``x @ W`` where ``W`` is stored
+chunk-block-sparse (only (k-chunk, n-block) tiles with any non-zero are
+stored; see :class:`repro.core.bitmask.BlockSparseMatrix`) and, in the
+two-sided mode, also skips tiles whose *activation* block is all-zero
+(natural sparsity from ReLU-family nonlinearities — the paper's feature-map
+sparsity).
+
+Mapping of the paper's mechanisms:
+
+* **FGR / IFGC grid** -> the Pallas grid: ``n``-blocks are the filter-group
+  rows (each owns a filter shard), ``m``-blocks the input-map columns.
+* **No broadcasts / barrier-free** -> each (m, n) grid cell walks only *its
+  own* non-zero chunk list (scalar-prefetched indices); there is no
+  synchronization between cells, and VMEM accumulators play the role of the
+  colored output buffers (a cell proceeds to its next input tile without
+  waiting for siblings).
+* **Round-robin sub-chunk assignment** -> the host-side chunk schedule can be
+  rotated per step (``core.balance.round_robin_permutation``); the kernel is
+  oblivious, which is the point — the balancing is software, as in the paper.
+* **Hierarchical buffering** -> BlockSpec tiles are the wide shared buffers
+  (chunk-wide fetches from HBM); the fp32 VMEM accumulator is the narrow
+  private buffer at the compute.
+
+Weight-stationary dataflow ("snarfing" limit case): the W tile for (n, j) is
+fetched once per m-sweep by Pallas' pipelined DMA and the m-innermost grid
+order reuses it across input blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM = 128
+LANE = 128
+
+
+def _kernel(idx_ref, occ_ref, x_ref, w_ref, o_ref, acc_ref, *, nsteps: int,
+            two_sided: bool):
+    n_i = pl.program_id(0)
+    m_i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k_idx = idx_ref[n_i, j]
+    valid = k_idx >= 0
+    if two_sided:
+        # the activation-side mask AND — skip if the input tile is all-zero
+        valid = jnp.logical_and(valid, occ_ref[m_i, jnp.maximum(k_idx, 0)] > 0)
+
+    @pl.when(valid)
+    def _mac():
+        acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32),
+                                w_ref[0, 0].astype(jnp.float32),
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(j == nsteps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "bn", "bm", "two_sided",
+                                             "interpret"))
+def bitmask_spmm(x: jnp.ndarray, indices: jnp.ndarray, vals: jnp.ndarray,
+                 *, bk: int = LANE, bn: int = LANE, bm: int = DEFAULT_BM,
+                 two_sided: bool = False, interpret: bool = True) -> jnp.ndarray:
+    """``x [M, K] @ W [K, N]`` with W in chunk-block-sparse layout.
+
+    indices: int32 [n_blocks, max_nz] (k-chunk ids, -1 padded)
+    vals:    [n_blocks, max_nz, bk, bn]
+    Returns [M, N] in x.dtype (fp32 accumulation).
+    """
+    M, K = x.shape
+    nb, max_nz = indices.shape
+    N = nb * bn
+    assert M % bm == 0 and K % bk == 0, (M, K, bm, bk)
+    mb = M // bm
+
+    # activation-side chunk occupancy (two-sided mode); tiny O(MK) reduction
+    occ = (x.reshape(mb, bm, K // bk, bk) != 0).any(axis=(1, 3)).astype(jnp.int32)
+
+    grid = (nb, mb, max_nz)
+    kernel = functools.partial(_kernel, nsteps=max_nz, two_sided=two_sided)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,  # indices, occupancy
+            grid=grid,
+            in_specs=[
+                # x tile: row block m, K-chunk chosen by the prefetched index
+                pl.BlockSpec((bm, bk),
+                             lambda n, m, j, idx, occ_: (m, jnp.maximum(idx[n, j], 0))),
+                # W tile for (n, j)
+                pl.BlockSpec((1, 1, bk, bn), lambda n, m, j, idx, occ_: (n, j, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda n, m, j, idx, occ_: (m, n)),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+    )(indices, occ, x, vals)
+    return out

@@ -1,0 +1,48 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``sparse_dense_matmul`` is the op models call for the BARISTA sparse path:
+it takes a :class:`repro.core.bitmask.BlockSparseMatrix` (built offline from
+pruned weights, optionally greedy-balanced) and dense activations, pads the
+row dimension to the kernel's block size, and dispatches to the kernel. On
+CPU (this container) the kernel runs in interpret mode; on TPU set
+``interpret=False``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitmask as bm
+from repro.kernels import ref
+from repro.kernels.bitmask_spmm import bitmask_spmm
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def sparse_dense_matmul(x: jnp.ndarray, w: bm.BlockSparseMatrix, *,
+                        two_sided: bool = True, bm_rows: int = 128,
+                        interpret: bool | None = None) -> jnp.ndarray:
+    """x [..., K] @ sparse W [K, N] -> [..., N]."""
+    if interpret is None:
+        interpret = not _ON_TPU
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    x2 = x.reshape(-1, K)
+    M = x2.shape[0]
+    pad = (-M) % bm_rows
+    pad_k = w.shape[0] - K  # packed weights are chunk-padded on K
+    assert pad_k >= 0, (K, w.shape)
+    if pad or pad_k:
+        x2 = jnp.pad(x2, ((0, pad), (0, pad_k)))
+    out = bitmask_spmm(x2, w.indices, w.vals, bk=w.bk, bn=w.bn, bm=bm_rows,
+                       two_sided=two_sided, interpret=interpret)
+    if pad:
+        out = out[:M]
+    return out.reshape(*lead, w.shape[1])
+
+
+def sparse_dense_matmul_ref(x: jnp.ndarray, w: bm.BlockSparseMatrix) -> jnp.ndarray:
+    lead = x.shape[:-1]
+    out = ref.bitmask_spmm_ref(x.reshape(-1, x.shape[-1]), w.indices, w.vals,
+                               bk=w.bk, bn=w.bn)
+    return out.reshape(*lead, w.shape[1])

@@ -1,0 +1,332 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and record memory/cost/collective analyses.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch a] [--shape s]
+        [--mesh single|multi|both] [--out experiments/dryrun]
+
+This proves the distribution config is coherent: sharding mismatches, OOM at
+compile or unsupported collectives fail here. Results (bytes-per-device,
+FLOPs, collective bytes/schedule) feed EXPERIMENTS.md §Dry-run and the
+roofline analysis.
+"""
+import argparse
+import json
+import re
+import time
+from typing import Any, Dict
+
+import contextlib
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ARCHS, SHAPES, load_config
+from repro.data.pipeline import input_specs
+from repro.dist import partitioning as part
+from repro.dist.act_sharding import act_sharding, sp_spec
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.optim import adamw
+from repro.serve.engine import make_serve_step
+from repro.train.train_step import make_train_step
+
+# per-arch training knobs chosen so the reported per-device memory fits a
+# 16-GB v5e chip (see EXPERIMENTS.md §Dry-run): FSDP for the big configs,
+# microbatching + grouped remat for the deepest ones.
+ARCH_TUNE: Dict[str, Dict[str, Any]] = {
+    "nemotron_4_340b": dict(fsdp=True, microbatches=16, remat_group=2),
+    "jamba_1_5_large_398b": dict(fsdp=True, microbatches=8, remat_group=1),
+    "arctic_480b": dict(fsdp=True, microbatches=8, remat_group=1),
+    "yi_34b": dict(fsdp=True, microbatches=4, remat_group=1),
+    "moonshot_v1_16b_a3b": dict(fsdp=True, microbatches=2, remat_group=1),
+    "qwen3_4b": dict(fsdp=False, microbatches=1, remat_group=1),
+    "h2o_danube_3_4b": dict(fsdp=False, microbatches=1, remat_group=1),
+    "rwkv6_3b": dict(fsdp=False, microbatches=1, remat_group=1),
+    "paligemma_3b": dict(fsdp=False, microbatches=1, remat_group=1),
+    "seamless_m4t_medium": dict(fsdp=False, microbatches=1, remat_group=1),
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2,
+                "u16": 2}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Any]:
+    """Sum operand bytes of every collective op in the compiled HLO.
+
+    Operands are referenced by name in the HLO text, so first build a
+    name -> bytes map from instruction definitions, then attribute each
+    collective's operand sizes (fallback: its output size).
+    """
+    sizes: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            sizes[m.group(1)] = _shape_bytes(m.group(2), m.group(3))
+    per_op: Dict[str, float] = {c: 0.0 for c in COLLECTIVES}
+    count: Dict[str, int] = {c: 0 for c in COLLECTIVES}
+    schedule = []
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        rest = stripped[stripped.index("=") + 1:]
+        opm = re.search(r"\b(" + "|".join(COLLECTIVES) + r")(?:-start)?\(", rest)
+        if not opm:
+            continue
+        op = opm.group(1)
+        # operand names inside the parens
+        args = re.findall(r"%([\w.\-]+)", rest[opm.end():])
+        in_bytes = sum(sizes.get(a, 0) for a in args)
+        out_bytes = _shape_bytes(m.group(2), m.group(3))
+        per_op[op] += float(max(in_bytes, out_bytes))
+        count[op] += 1
+        if len(schedule) < 40:
+            schedule.append(f"{op} {max(in_bytes, out_bytes)}B")
+    total = sum(per_op.values())
+    return {"collective_bytes": total, "per_op_bytes": per_op,
+            "per_op_count": count, "schedule_head": schedule}
+
+
+def _mem_dict(mem) -> Dict[str, float]:
+    return {k: float(getattr(mem, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "alias_size_in_bytes")}
+
+
+def _compile_cell(cfg, shape, mesh, *, fsdp: bool, microbatches: int = 1,
+                  remat_group: int = 1, unroll: bool = False,
+                  ssm_chunk=None, opt: bool = False):
+    """Lower + compile one configuration; returns the compiled executable.
+
+    ``opt`` enables the optimized sharding mode (§Perf): head-aligned
+    attention sharding on the factored mesh + sequence-parallel residual
+    constraints + head-sharded decode caches.
+    """
+    params_abs = M.abstract_params(cfg)
+    rules = part.make_rules(mesh, cfg.n_heads, cfg.n_kv_heads) \
+        if opt else None
+    p_sh = part.param_shardings(mesh, params_abs, fsdp=fsdp, rules=rules)
+    sp_ctx = act_sharding(mesh, sp_spec(mesh)) if (
+        opt and shape.kind != "decode") else contextlib.nullcontext()
+
+    with mesh, sp_ctx:
+        flash = 1024 if (opt and cfg.n_heads and not cfg.frontend) else None
+        if shape.kind == "train":
+            step = make_train_step(cfg, adamw.AdamWConfig(),
+                                   microbatches=microbatches,
+                                   remat_group=remat_group, unroll=unroll,
+                                   ssm_chunk=ssm_chunk, flash_chunk=flash)
+            opt_abs = jax.eval_shape(adamw.init, params_abs)
+            o_sh = adamw.OptState(NamedSharding(mesh, P()), p_sh, p_sh)
+            specs = input_specs(cfg, shape)
+            b_sh = {k: NamedSharding(mesh, part.batch_spec(mesh)
+                                     if v.ndim == 2
+                                     else P(part.dp_axes(mesh), None, None))
+                    for k, v in specs.items()}
+            jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_abs, opt_abs, specs)
+        elif shape.kind == "prefill":
+            from repro.serve.engine import make_prefill_fn
+            fn = make_prefill_fn(cfg, unroll=unroll, ssm_chunk=ssm_chunk,
+                                 flash_chunk=flash)
+
+            def prefill(params, batch):
+                tokens = batch.pop("tokens")
+                return fn(params, tokens, **batch)
+
+            specs = input_specs(cfg, shape)
+            b_sh = {k: NamedSharding(mesh, part.batch_spec(mesh)
+                                     if v.ndim == 2
+                                     else P(part.dp_axes(mesh), None, None))
+                    for k, v in specs.items()}
+            jitted = jax.jit(prefill, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(params_abs, specs)
+        else:  # decode
+            serve = make_serve_step(cfg, unroll=unroll)
+            B = shape.global_batch
+            enc_len = min(shape.seq_len, 4096) if cfg.encoder_layers else 0
+            cache_abs = jax.eval_shape(
+                lambda: M.init_cache(cfg, B, shape.seq_len, enc_len=enc_len))
+            c_sh = part.cache_shardings(mesh, cache_abs, B, rules=rules)
+            tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+            t_sh = NamedSharding(
+                mesh, part.batch_spec(mesh)
+                if B % _dp_size(mesh) == 0 else P(None, None))
+            jitted = jax.jit(serve, in_shardings=(p_sh, c_sh, t_sh, None),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_abs, cache_abs, tok, jnp.int32(0))
+
+        return lowered.compile()
+
+
+def _metrics(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis() or {}
+    coll = collective_stats(compiled.as_text())
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "collective_bytes": coll["collective_bytes"],
+            "per_op_bytes": coll["per_op_bytes"],
+            "per_op_count": coll["per_op_count"]}
+
+
+def _scaled_cfg(cfg, periods: int):
+    import dataclasses
+    rep = {"n_layers": len(cfg.block_pattern) * periods}
+    if cfg.encoder_layers:
+        rep["encoder_layers"] = periods
+    return dataclasses.replace(cfg, **rep)
+
+
+def lower_cell(arch: str, shape_name: str, mesh,
+               extrapolate: bool = True, opt: bool = False,
+               tune_override: Dict[str, Any] | None = None) -> Dict[str, Any]:
+    """Lower + compile one (arch x shape) cell on ``mesh``; return analysis.
+
+    XLA's cost analysis counts while-loop (scan) bodies ONCE, so per-device
+    FLOPs/bytes/collectives are measured on structurally-unrolled 1- and
+    2-period variants and extrapolated linearly to the full depth:
+        total(p) = f(1) + (p - 1) * (f(2) - f(1)).
+    SSM inner scans are removed by setting the chunk to the sequence length
+    (single trip) in these cost runs. The production (scanned, microbatched,
+    remat-grouped) program is ALSO compiled — that is the artifact whose
+    memory analysis and collective schedule are reported, and whose
+    successful compile is the dry-run pass.
+    """
+    cfg = load_config(arch)
+    shape = SHAPES[shape_name]
+    tune = dict(ARCH_TUNE.get(arch, {}))
+    if tune_override:
+        tune.update(tune_override)
+    fsdp = bool(tune.get("fsdp", False))
+
+    t0 = time.time()
+    compiled = _compile_cell(cfg, shape, mesh, fsdp=fsdp,
+                             microbatches=int(tune.get("microbatches", 1)),
+                             remat_group=int(tune.get("remat_group", 1)),
+                             opt=opt)
+    compile_s = time.time() - t0
+    mem = compiled.memory_analysis()
+    prod = _metrics(compiled)
+    schedule = collective_stats(compiled.as_text())["schedule_head"]
+
+    out = {
+        "arch": arch, "shape": shape_name,
+        "mesh": dict(zip(mesh.axis_names, (mesh.shape[a]
+                                           for a in mesh.axis_names))),
+        "devices": mesh.size, "fsdp": fsdp, "opt": opt,
+        "compile_seconds": round(compile_s, 1),
+        "memory": _mem_dict(mem),
+        "measured_scanned": prod,
+        "schedule_head": schedule,
+    }
+
+    if extrapolate:
+        ssm = (cfg.mamba is not None) or cfg.rwkv
+        chunk = shape.seq_len if shape.kind != "decode" else None
+        ms = []
+        for p in (1, 2):
+            c = _compile_cell(_scaled_cfg(cfg, p), shape, mesh, fsdp=fsdp,
+                              unroll=True,
+                              ssm_chunk=chunk if ssm else None, opt=opt)
+            ms.append(_metrics(c))
+        periods = cfg.periods
+        extr = {}
+        for k in ("flops", "bytes", "collective_bytes"):
+            layer = ms[1][k] - ms[0][k]
+            extr[k] = ms[0][k] + (periods - 1) * layer
+        extr["per_layer_flops"] = ms[1]["flops"] - ms[0]["flops"]
+        out["per_device"] = extr
+    return out
+
+
+def _dp_size(mesh) -> int:
+    n = 1
+    for a in part.dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=("single", "multi", "both"))
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--opt", action="store_true",
+                    help="optimized sharding: factored model axis + "
+                         "head-aligned attention + SP residuals + "
+                         "head-sharded decode caches")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--remat-group", type=int, default=None)
+    args = ap.parse_args()
+    tune_override = {}
+    if args.microbatches is not None:
+        tune_override["microbatches"] = args.microbatches
+    if args.remat_group is not None:
+        tune_override["remat_group"] = args.remat_group
+    if args.opt and args.out == "experiments/dryrun":
+        args.out = "experiments/dryrun_opt"
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = [args.arch] if args.arch else ARCHS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                tag = f"{arch}_{shape_name}_{'multi' if multi else 'single'}"
+                out_path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(out_path):
+                    print(f"[skip] {tag} (cached)")
+                    continue
+                mesh = make_production_mesh(multi_pod=multi,
+                                            split_model=args.opt)
+                try:
+                    # roofline terms are single-pod only; the multi-pod pass
+                    # is the compile proof (+ memory/collective schedule)
+                    res = lower_cell(arch, shape_name, mesh,
+                                     extrapolate=not multi, opt=args.opt,
+                                     tune_override=tune_override or None)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    failures.append((tag, str(e)[:200]))
+                    print(f"[FAIL] {tag}: {e}")
+                    continue
+                with open(out_path, "w") as f:
+                    json.dump(res, f, indent=1)
+                pd = res.get("per_device", res["measured_scanned"])
+                print(f"[ok] {tag}: compile {res['compile_seconds']}s, "
+                      f"temp/dev {res['memory']['temp_size_in_bytes']/2**30:.2f} GiB, "
+                      f"flops/dev {pd['flops']:.3g}, "
+                      f"coll {pd['collective_bytes']/2**20:.1f} MiB")
+    if failures:
+        print("FAILURES:")
+        for t, e in failures:
+            print(" ", t, e)
+        raise SystemExit(1)
+    print("dry-run complete.")
+
+
+if __name__ == "__main__":
+    main()

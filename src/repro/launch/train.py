@@ -1,0 +1,63 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3_4b \
+        [--smoke] [--steps N] [--seq S] [--batch B] [--ckpt DIR] \
+        [--mesh data,model] [--fsdp] [--microbatches M]
+
+``--smoke`` uses the reduced config of the same family (CPU-runnable); the
+full configs need the production mesh (see launch/dryrun.py for the
+compile-only proof on this host).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.base import SHAPES, ShapeConfig, load_config, load_smoke
+from repro.launch.mesh import make_debug_mesh
+from repro.optim import adamw
+from repro.train.loop import TrainLoopConfig, train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", default=None,
+                    help="data,model extents (default: single device)")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    cfg = load_smoke(args.arch) if args.smoke else load_config(args.arch)
+    if args.shape:
+        shape = SHAPES[args.shape]
+    else:
+        shape = ShapeConfig("cli", args.seq, args.batch, "train")
+
+    mesh = None
+    if args.mesh:
+        data, model = (int(x) for x in args.mesh.split(","))
+        mesh = make_debug_mesh(model=model, data=data)
+
+    loop_cfg = TrainLoopConfig(
+        steps=args.steps, ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every,
+        microbatches=args.microbatches, fsdp=args.fsdp)
+    opt_cfg = adamw.AdamWConfig(lr=args.lr, total_steps=args.steps)
+
+    print(f"arch={cfg.name} devices={jax.device_count()} "
+          f"seq={shape.seq_len} batch={shape.global_batch}")
+    state = train(cfg, shape, loop_cfg, opt_cfg, mesh=mesh)
+    print(f"finished at step {state.step}")
+
+
+if __name__ == "__main__":
+    main()

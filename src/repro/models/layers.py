@@ -1,0 +1,607 @@
+"""Layer library: attention (GQA/MQA, RoPE, qk-norm, sliding window),
+FFN variants (SwiGLU/GeGLU/ReLU/squared-ReLU), MoE, Mamba, RWKV6.
+
+Conventions:
+* params are plain dict pytrees; every layer is ``fn(params, x, ...)``.
+* compute in the config dtype, accumulate/normalize in fp32.
+* decode paths take/return explicit state (KV cache, SSM state).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, Any]
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    std = scale / (d_in ** 0.5)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x [B, S, H, dh]; positions [B, S] (or [S])."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # [dh/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B,S,dh/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    d, dh = cfg.d_model, cfg.d_head
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * dh, dtype),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * dh, dtype),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * dh, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * dh, d, dtype,
+                         scale=1.0 / (2 * cfg.n_layers) ** 0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dtype)
+        p["k_norm"] = jnp.ones((dh,), dtype)
+    return p
+
+
+def _qkv(p: Params, x: jnp.ndarray, cfg: ModelConfig, positions, *, use_rope=True):
+    B, S, _ = x.shape
+    dh = cfg.d_head
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, dh)
+    k = (x @ p["wk"]).reshape(B, S, cfg.n_kv_heads, dh)
+    v = (x @ p["wv"]).reshape(B, S, cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, n_rep: int) -> jnp.ndarray:
+    """q [B,Sq,H,dh]; k/v [B,Sk,Hkv,dh]; mask broadcastable [B,1,Sq,Sk].
+
+    GQA uses grouped einsums (q reshaped to [B,Sq,Hkv,n_rep,dh]) instead of
+    ``jnp.repeat`` on K/V — repeating materializes (and, sharded, gathers)
+    an n_rep-times-larger cache copy per layer (§Perf iteration 3).
+    """
+    B, Sq, H, dh = q.shape
+    if n_rep > 1:
+        qg = q.reshape(B, Sq, H // n_rep, n_rep, dh)
+        scores = jnp.einsum("bqgrd,bkgd->bgrqk", qg.astype(jnp.float32),
+                            k.astype(jnp.float32)) / (dh ** 0.5)
+        if mask is not None:
+            scores = jnp.where(mask[:, :, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bgrqk,bkgd->bqgrd", probs.astype(v.dtype), v)
+        return out.reshape(B, Sq, H * dh)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (dh ** 0.5)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, H * dh)
+
+
+def _flash_sdpa(q, k, v, n_rep: int, *, window: Optional[int] = None,
+                kv_chunk: int = 1024, q_offset: int = 0,
+                unroll: bool = False) -> jnp.ndarray:
+    """Online-softmax (flash-style) causal attention: the S_q x S_k score
+    matrix is never materialized in HBM — only [B,H,Sq,kv_chunk] tiles live
+    at a time, with running (max, sum, out) accumulators (EXPERIMENTS.md
+    §Perf iteration 2: the memory roofline term was dominated by fp32
+    score materialization).
+
+    q [B,Sq,H,dh]; k/v [B,Sk,Hkv,dh]; causal with optional sliding window;
+    ``q_offset`` is the absolute position of q[0] (prefill: Sq == Sk,
+    offset 0). ``unroll`` statically unrolls the chunk loop so the dry-run
+    cost analysis counts every chunk (scan bodies are counted once).
+    """
+    B, Sq, H, dh = q.shape
+    Sk = k.shape[1]
+    G = k.shape[2]                                         # kv heads
+    R = H // G                                             # group size
+    pad = (-Sk) % kv_chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nch = (Sk + pad) // kv_chunk
+    # grouped q (no K/V repeat — see _sdpa); operands stay in model dtype
+    # (bf16 on TPU: native MXU path, f32 accumulation via
+    # preferred_element_type) — upcasting them would double the HBM bytes
+    # of every score tile (§Perf iteration 5)
+    # fold the softmax scale into q once (one elementwise pass) instead of
+    # rescaling every score tile
+    qg = (q * jnp.asarray(1.0 / (dh ** 0.5), q.dtype)).reshape(B, Sq, G, R,
+                                                               dh)
+    q_pos = q_offset + jnp.arange(Sq)                      # absolute q rows
+
+    k_c = k.reshape(B, nch, kv_chunk, G, dh).transpose(1, 0, 2, 3, 4)
+    v_c = v.reshape(B, nch, kv_chunk, G, dh).transpose(1, 0, 2, 3, 4)
+
+    def chunk_step(carry, xs):
+        out_acc, m_acc, l_acc = carry                      # [B,G,R,Sq,*]
+        ci, kc, vc = xs                                    # chunk idx, tiles
+        kpos = ci * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum("bqgrd,bkgd->bgrqk", qg, kc,
+                       preferred_element_type=jnp.float32)
+        valid = kpos[None, :] <= q_pos[:, None]            # causal
+        valid &= kpos[None, :] < Sk                        # padding
+        if window is not None:
+            valid &= kpos[None, :] > q_pos[:, None] - window
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_acc, s.max(-1))              # [B,G,R,Sq]
+        alpha = jnp.exp(m_acc - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_acc * alpha + p.sum(-1)
+        out_new = out_acc * alpha[..., None] + jnp.einsum(
+            "bgrqk,bkgd->bgrqd", p, vc.astype(jnp.float32))
+        return (out_new, m_new, l_new), None
+
+    out0 = jnp.zeros((B, G, R, Sq, dh), jnp.float32)
+    m0 = jnp.full((B, G, R, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, G, R, Sq), jnp.float32)
+    carry = (out0, m0, l0)
+    idx = jnp.arange(nch)
+    if unroll:
+        for i in range(nch):
+            carry, _ = chunk_step(carry, (idx[i], k_c[i], v_c[i]))
+    else:
+        carry, _ = jax.lax.scan(chunk_step, carry, (idx, k_c, v_c))
+    out, _, l = carry
+    out = out / jnp.maximum(l[..., None], 1e-30)
+    # [B,G,R,Sq,dh] -> [B,Sq,G*R*dh] with head order (g, r) matching q
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H * dh).astype(q.dtype)
+
+
+def causal_mask(Sq: int, Sk: int, window: Optional[int] = None,
+                offset: int = 0) -> jnp.ndarray:
+    """[1, 1, Sq, Sk]; query i attends to keys <= i+offset (within window)."""
+    qi = jnp.arange(Sq)[:, None] + offset
+    ki = jnp.arange(Sk)[None, :]
+    m = ki <= qi
+    if window is not None:
+        m &= ki > qi - window
+    return m[None, None]
+
+
+def attention(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+              positions: jnp.ndarray, mask: Optional[jnp.ndarray],
+              kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+              use_rope: bool = True, flash_chunk: Optional[int] = None,
+              flash_unroll: bool = False) -> jnp.ndarray:
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    ``kv`` overrides keys/values (cross-attention uses encoder output).
+    ``flash_chunk`` switches plain-causal self-attention to the
+    online-softmax chunked path (no S x S materialization).
+    """
+    q, k, v = _qkv(p, x, cfg, positions, use_rope=use_rope)
+    if kv is not None:
+        k, v = kv
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    if flash_chunk is not None and kv is None:
+        out = _flash_sdpa(q, k, v, n_rep, window=cfg.window,
+                          kv_chunk=flash_chunk, unroll=flash_unroll)
+    else:
+        out = _sdpa(q, k, v, mask, n_rep)
+    return out @ p["wo"]
+
+
+def attention_decode(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+                     cache_k: jnp.ndarray, cache_v: jnp.ndarray,
+                     pos: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode against a KV cache.
+
+    x [B, 1, D]; cache_k/v [B, S_max, Hkv, dh]; pos scalar int32 (current
+    length). Returns (out [B,1,D], new_cache_k, new_cache_v).
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _qkv(p, x, cfg, positions)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                           (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                           (0, pos, 0, 0))
+    S = cache_k.shape[1]
+    ki = jnp.arange(S)[None, :]
+    valid = ki <= pos
+    if cfg.window is not None:
+        valid &= ki > pos - cfg.window
+    mask = valid[None, None]  # [1,1,1,S]
+    out = _sdpa(q, cache_k, cache_v, mask, cfg.n_heads // cfg.n_kv_heads)
+    return out @ p["wo"], cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+def init_ffn(key, cfg: ModelConfig, dtype, d_ff: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_in": dense_init(ks[0], d, f, dtype),
+         "w_out": dense_init(ks[1], f, d, dtype,
+                             scale=1.0 / (2 * cfg.n_layers) ** 0.5)}
+    if cfg.act in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(ks[2], d, f, dtype)
+    return p
+
+
+def _activate(h: jnp.ndarray, g: Optional[jnp.ndarray], act: str) -> jnp.ndarray:
+    if act == "swiglu":
+        return jax.nn.silu(g) * h
+    if act == "geglu":
+        return jax.nn.gelu(g) * h
+    if act == "relu":
+        return jax.nn.relu(h)
+    if act == "relu2":  # squared ReLU (nemotron / rwkv channel-mix):
+        r = jax.nn.relu(h)  # naturally sparse activations -> BARISTA path
+        return r * r
+    if act == "gelu":
+        return jax.nn.gelu(h)
+    raise ValueError(act)
+
+
+def ffn(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+        act: Optional[str] = None) -> jnp.ndarray:
+    a = act or cfg.act
+    h = x @ p["w_in"]
+    g = x @ p["w_gate"] if "w_gate" in p else None
+    return _activate(h, g, a) @ p["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# MoE (scatter/sort-based dispatch; experts shard over the `model` axis = EP)
+# ---------------------------------------------------------------------------
+def init_moe(key, cfg: ModelConfig, dtype) -> Params:
+    mc = cfg.moe
+    d, fe, E = cfg.d_model, mc.d_ff_expert, mc.num_experts
+    ks = jax.random.split(key, 5)
+    std_in, std_out = 1 / d ** 0.5, 1 / fe ** 0.5 / (2 * cfg.n_layers) ** 0.5
+
+    def e_init(k, shape, std):
+        return (jax.random.normal(k, shape, jnp.float32) * std).astype(dtype)
+
+    p = {"router": dense_init(ks[0], d, E, jnp.float32),
+         "w_in": e_init(ks[1], (E, d, fe), std_in),
+         "w_out": e_init(ks[2], (E, fe, d), std_out)}
+    if cfg.act in ("swiglu", "geglu"):
+        p["w_gate"] = e_init(ks[3], (E, d, fe), std_in)
+    if mc.shared_dense_ff:
+        sub = dataclasses.replace(cfg, moe=None)
+        p["shared"] = init_ffn(ks[4], sub, dtype, d_ff=mc.shared_dense_ff)
+    return p
+
+
+def moe_ffn(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+            expert_perm: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k MoE with capacity; returns (out, aux_loss).
+
+    ``expert_perm`` (int32 [E]) is the BARISTA greedy-balance permutation of
+    expert *slots*: logical expert e is placed at slot expert_perm[e], so
+    density-sorted experts are dealt serpentine across the EP shards
+    (inter-filter load balance in software; see core/balance.py).
+    """
+    mc = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    E, K = mc.num_experts, mc.top_k
+    xt = x.reshape(T, D)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])  # [T, E]
+    if expert_perm is not None:
+        logits = jnp.take(logits, expert_perm, axis=1)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)           # [T, K]
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # aux load-balance loss (Switch-style)
+    me = probs.mean(0)
+    ce = jnp.zeros((E,), jnp.float32).at[expert_ids.reshape(-1)].add(
+        jnp.ones((T * K,), jnp.float32)) / (T * K)
+    aux = E * jnp.sum(me * ce)
+
+    cap = int(T * K / E * mc.capacity_factor) + 1
+    flat_e = expert_ids.reshape(-1)                            # [T*K]
+    flat_g = gate_vals.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), K)
+    # position of each assignment within its expert (stable rank)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E))
+    rank_sorted = jnp.arange(T * K) - seg_start[sorted_e]
+    rank = jnp.zeros((T * K,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    keep = rank < cap
+
+    # dispatch: buffer [E, cap, D]
+    buf = jnp.zeros((E, cap, D), x.dtype)
+    safe_rank = jnp.where(keep, rank, cap - 1)
+    buf = buf.at[flat_e, safe_rank].add(
+        jnp.where(keep[:, None], xt[flat_t], 0).astype(x.dtype))
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w_in"])
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]) if "w_gate" in p else None
+    act = _activate(h, g, cfg.act)
+    eout = jnp.einsum("ecf,efd->ecd", act, p["w_out"])         # [E, cap, D]
+
+    # combine: gather back, scale by gates, scatter-add per token
+    gathered = eout[flat_e, safe_rank]                          # [T*K, D]
+    contrib = jnp.where(keep[:, None], gathered * flat_g[:, None].astype(x.dtype), 0)
+    out = jnp.zeros((T, D), x.dtype).at[flat_t].add(contrib)
+
+    if "shared" in p:
+        out = out + ffn(p["shared"], xt, cfg)
+    return out.reshape(B, S, D), aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM, chunked associative scan — exact for diagonal A)
+# ---------------------------------------------------------------------------
+def init_mamba(key, cfg: ModelConfig, dtype) -> Params:
+    m = cfg.mamba
+    d = cfg.d_model
+    din = m.expand * d
+    dt_rank = max(d // 16, 1)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * din, dtype),
+        "conv_w": (jax.random.normal(ks[1], (m.d_conv, din), jnp.float32)
+                   * 0.1).astype(dtype),
+        "x_proj": dense_init(ks[2], din, dt_rank + 2 * m.d_state, dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, din, dtype),
+        "dt_bias": jnp.zeros((din,), jnp.float32),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, m.d_state + 1, dtype=jnp.float32),
+                                  (din, 1))),
+        "D": jnp.ones((din,), jnp.float32),
+        "out_proj": dense_init(ks[4], din, d, dtype,
+                               scale=1.0 / (2 * cfg.n_layers) ** 0.5),
+    }
+
+
+def _ssm_scan_chunked(u, delta, Bm, Cm, A, chunk: int):
+    """h_t = exp(delta_t A) h_{t-1} + delta_t B_t u_t ; y_t = C_t . h_t.
+
+    u/delta [B, L, din]; Bm/Cm [B, L, ds]; A [din, ds] (negative).
+    Chunked over L; within a chunk an associative scan over
+    (decay, increment) pairs keeps memory at B*chunk*din*ds.
+    """
+    Bsz, L, din = u.shape
+    ds = Bm.shape[-1]
+    pad = (-L) % chunk
+    if pad:
+        u, delta, Bm, Cm = (jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+                            for a in (u, delta, Bm, Cm))
+    Lp = u.shape[1]
+    nch = Lp // chunk
+
+    def resh(a):
+        return a.reshape(Bsz, nch, chunk, *a.shape[2:]).swapaxes(0, 1)
+
+    u_c, d_c, B_c, C_c = resh(u), resh(delta), resh(Bm), resh(Cm)
+
+    def chunk_step(h0, xs):
+        uc, dc, bc, cc = xs  # [B, chunk, ...]
+        dA = jnp.exp(dc[..., None] * A)                       # [B,c,din,ds]
+        dBu = dc[..., None] * bc[:, :, None, :] * uc[..., None]
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+
+        decays, incs = jax.lax.associative_scan(combine, (dA, dBu), axis=1)
+        h = decays * h0[:, None] + incs                       # [B,c,din,ds]
+        y = jnp.einsum("bcds,bcs->bcd", h, cc)
+        return h[:, -1], y
+
+    h0 = jnp.zeros((Bsz, din, ds), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, h0, (u_c, d_c, B_c, C_c))
+    y = ys.swapaxes(0, 1).reshape(Bsz, Lp, din)
+    return y[:, :L]
+
+
+def mamba_block(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                chunk: int = 64) -> jnp.ndarray:
+    m = cfg.mamba
+    B, L, D = x.shape
+    din = m.expand * D
+    dt_rank = max(D // 16, 1)
+    uz = x @ p["in_proj"]
+    u, z = jnp.split(uz, 2, axis=-1)
+    # causal depthwise conv
+    upad = jnp.pad(u, ((0, 0), (m.d_conv - 1, 0), (0, 0)))
+    u = sum(upad[:, i:i + L] * p["conv_w"][i] for i in range(m.d_conv))
+    u = jax.nn.silu(u).astype(jnp.float32)
+    xp = (u.astype(x.dtype) @ p["x_proj"]).astype(jnp.float32)
+    dt, Bm, Cm = jnp.split(xp, [dt_rank, dt_rank + m.d_state], axis=-1)
+    delta = jax.nn.softplus(dt @ p["dt_proj"].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y = _ssm_scan_chunked(u, delta, Bm, Cm, A, chunk)
+    y = y + u * p["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ p["out_proj"]
+
+
+def mamba_decode(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                 conv_state: jnp.ndarray, h: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Single-token step. x [B,1,D]; conv_state [B,d_conv-1,din]; h [B,din,ds]."""
+    m = cfg.mamba
+    B, _, D = x.shape
+    dt_rank = max(D // 16, 1)
+    uz = x[:, 0] @ p["in_proj"]
+    u, z = jnp.split(uz, 2, axis=-1)
+    full = jnp.concatenate([conv_state, u[:, None]], axis=1)  # [B,d_conv,din]
+    u = jnp.einsum("bcd,cd->bd", full, p["conv_w"])
+    new_conv = full[:, 1:]
+    u = jax.nn.silu(u).astype(jnp.float32)
+    xp = (u.astype(x.dtype) @ p["x_proj"]).astype(jnp.float32)
+    dt, Bm, Cm = jnp.split(xp, [dt_rank, dt_rank + m.d_state], axis=-1)
+    delta = jax.nn.softplus(dt @ p["dt_proj"].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(delta[..., None] * A)                        # [B,din,ds]
+    h = dA * h + delta[..., None] * Bm[:, None, :] * u[..., None]
+    y = jnp.einsum("bds,bs->bd", h, Cm) + u * p["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return (y @ p["out_proj"])[:, None], new_conv, h
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch): data-dependent decay linear attention, chunked closed form
+# ---------------------------------------------------------------------------
+def init_rwkv(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    H, N = cfg.n_heads, cfg.d_head
+    ks = jax.random.split(key, 8)
+    return {
+        "mu_r": jnp.full((d,), 0.5, dtype), "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype), "mu_w": jnp.full((d,), 0.5, dtype),
+        "w_r": dense_init(ks[0], d, H * N, dtype),
+        "w_k": dense_init(ks[1], d, H * N, dtype),
+        "w_v": dense_init(ks[2], d, H * N, dtype),
+        "w_g": dense_init(ks[3], d, H * N, dtype),
+        "w_w": dense_init(ks[4], d, H * N, dtype, scale=0.1),
+        "w_decay_base": jnp.full((H * N,), -6.0, jnp.float32),
+        "u_bonus": (jax.random.normal(ks[5], (H, N), jnp.float32) * 0.1),
+        "w_o": dense_init(ks[6], H * N, d, dtype,
+                          scale=1.0 / (2 * cfg.n_layers) ** 0.5),
+        "ln_x": jnp.ones((H * N,), dtype),
+    }
+
+
+def _token_shift(x: jnp.ndarray, prev: Optional[jnp.ndarray] = None):
+    """shifted[t] = x[t-1]; prev supplies x[-1] for decode continuity."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _rwkv_projections(p, x, shifted, cfg):
+    H, N = cfg.n_heads, cfg.d_head
+    B, L, _ = x.shape
+
+    def mix(mu):
+        return x * mu + shifted * (1 - mu)
+
+    r = (mix(p["mu_r"]) @ p["w_r"]).reshape(B, L, H, N)
+    k = (mix(p["mu_k"]) @ p["w_k"]).reshape(B, L, H, N)
+    v = (mix(p["mu_v"]) @ p["w_v"]).reshape(B, L, H, N)
+    g = jax.nn.silu(mix(p["mu_w"]) @ p["w_g"])
+    # data-dependent decay in (0, 1): w = exp(-exp(base + proj))
+    wlog = -jnp.exp(p["w_decay_base"]
+                    + (mix(p["mu_w"]) @ p["w_w"]).astype(jnp.float32))
+    w = wlog.reshape(B, L, H, N)  # log-decay (negative)
+    return r, k, v, g, w
+
+
+def _rwkv_chunk(r, k, v, w_log, u, S0, chunk: int):
+    """Chunked WKV: S_t = diag(w_t) S_{t-1} + k_t v_t^T ; y_t = r_t (S_{t-1}
+    + diag(u) k_t v_t^T). All [B, L, H, N] (w_log negative); S0 [B,H,N,N].
+    """
+    B, L, H, N = r.shape
+    pad = (-L) % chunk
+    if pad:
+        r, k, v, w_log = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                          for a in (r, k, v, w_log))
+    Lp = r.shape[1]
+    nch = Lp // chunk
+
+    def resh(a):
+        return a.reshape(B, nch, chunk, H, N).swapaxes(0, 1)
+
+    r_c, k_c, v_c, w_c = map(resh, (r, k, v, w_log))
+
+    def step(S, xs):
+        rc, kc, vc, wc = (a.astype(jnp.float32) for a in xs)  # [B,c,H,N]
+        cum = jnp.cumsum(wc, axis=1)                          # log cumulative decay
+        cum_prev = cum - wc                                   # decay up to t-1
+        r_t = rc * jnp.exp(cum_prev)                          # r~
+        k_t = kc * jnp.exp(-cum)                              # k~
+        # intra-chunk: y_i += sum_{j<i} (r~_i . k~_j) v_j  (+ u bonus at j==i)
+        A = jnp.einsum("bihn,bjhn->bhij", r_t, k_t)
+        A = jnp.where(jnp.tril(jnp.ones((chunk, chunk), bool), -1)[None, None], A, 0)
+        y = jnp.einsum("bhij,bjhn->bihn", A, vc)
+        # u-bonus for the current token: y_i += (r_i . (u * k_i)) v_i
+        y += jnp.einsum("bihn,bihn->bih", rc * u[None, None], kc)[..., None] * vc
+        # cross-chunk: y_i += r~_i . S_in
+        y += jnp.einsum("bihn,bhnm->bihm", r_t, S)
+        # state update: S_out = diag(exp(cum_last)) S + sum_j exp(cum_last-cum_j) k_j v_j^T
+        last = cum[:, -1][:, :, :, None]                      # [B,H,N,1]
+        Snew = jnp.exp(last) * S + jnp.einsum(
+            "bjhn,bjhm->bhnm", kc * jnp.exp(cum[:, -1][:, None] - cum), vc)
+        return Snew, y
+
+    if S0 is None:
+        S0 = jnp.zeros((B, H, N, N), jnp.float32)
+    S, ys = jax.lax.scan(step, S0, (r_c, k_c, v_c, w_c))
+    y = ys.swapaxes(0, 1).reshape(B, Lp, H, N)[:, :L]
+    return y, S
+
+
+def rwkv_time_mix(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                  chunk: int = 64, state: Optional[Dict] = None
+                  ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    B, L, D = x.shape
+    H, N = cfg.n_heads, cfg.d_head
+    prev = state["shift"] if state is not None else None
+    shifted = _token_shift(x, prev)
+    r, k, v, g, w = _rwkv_projections(p, x, shifted, cfg)
+    S0 = state["wkv"] if state is not None else None
+    y, S = _rwkv_chunk(r, k, v, w, p["u_bonus"], S0, chunk)
+    y = y.reshape(B, L, H * N)
+    y = rmsnorm(y.astype(x.dtype), p["ln_x"], cfg.norm_eps)
+    out = (y * g.astype(y.dtype)) @ p["w_o"]
+    new_state = None
+    if state is not None:
+        new_state = {"shift": x[:, -1], "wkv": S}
+    return out, new_state
+
+
+def rwkv_channel_mix(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                     state: Optional[Dict] = None
+                     ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    prev = state["shift"] if state is not None else None
+    shifted = _token_shift(x, prev)
+    mixed = x * p["mu_in"] + shifted * (1 - p["mu_in"])
+    h = jax.nn.relu(mixed @ p["w_in"])
+    out = (h * h) @ p["w_out"]  # squared ReLU -> sparse (BARISTA path)
+    new_state = {"shift": x[:, -1]} if state is not None else None
+    return out, new_state
+
+
+def init_rwkv_channel(key, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 2)
+    return {"mu_in": jnp.full((cfg.d_model,), 0.5, dtype),
+            "w_in": dense_init(ks[0], cfg.d_model, cfg.d_ff, dtype),
+            "w_out": dense_init(ks[1], cfg.d_ff, cfg.d_model, dtype,
+                                scale=1.0 / (2 * cfg.n_layers) ** 0.5)}

@@ -1,0 +1,402 @@
+"""Whole-model builders: decoder LMs (dense/MoE/SSM/hybrid), encoder-decoder,
+and modality-prefix models, all sharing one block library.
+
+Layers repeat in *periods* (``cfg.block_pattern``); parameters are stacked
+over periods and the forward pass is a ``lax.scan`` over them, so the HLO is
+O(pattern) rather than O(n_layers) — essential for lowering 96-layer 340B
+configs on this host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.act_sharding import constrain_residual
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _uses_moe(cfg: ModelConfig, pos: int) -> bool:
+    if cfg.moe is None:
+        return False
+    every = cfg.moe.every
+    assert len(cfg.block_pattern) % every == 0 or every == 1
+    return pos % every == every - 1
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_block(key, cfg: ModelConfig, kind: str, pos: int, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"ln1": jnp.ones((cfg.d_model,), dtype)}
+    if kind == "attn":
+        p["attn"] = L.init_attention(ks[0], cfg, dtype)
+    elif kind == "mamba":
+        p["mamba"] = L.init_mamba(ks[0], cfg, dtype)
+    elif kind == "rwkv":
+        p["time_mix"] = L.init_rwkv(ks[0], cfg, dtype)
+        p["ln2"] = jnp.ones((cfg.d_model,), dtype)
+        p["channel_mix"] = L.init_rwkv_channel(ks[1], cfg, dtype)
+        return p
+    else:
+        raise ValueError(kind)
+    p["ln2"] = jnp.ones((cfg.d_model,), dtype)
+    if _uses_moe(cfg, pos):
+        p["moe"] = L.init_moe(ks[1], cfg, dtype)
+    else:
+        p["ffn"] = L.init_ffn(ks[1], cfg, dtype)
+    return p
+
+
+def _init_stack(key, cfg: ModelConfig, periods: int, pattern, dtype,
+                cross_attention: bool = False) -> Params:
+    """Stacked block params: each leaf gains a leading ``periods`` axis."""
+    def one_period(k):
+        ks = jax.random.split(k, len(pattern) + 1)
+        out = {}
+        for pos, kind in enumerate(pattern):
+            bp = _init_block(ks[pos], cfg, kind, pos, dtype)
+            if cross_attention:
+                bp["cross"] = L.init_attention(
+                    jax.random.fold_in(ks[pos], 7), cfg, dtype)
+                bp["ln_cross"] = jnp.ones((cfg.d_model,), dtype)
+            out[f"p{pos}"] = bp
+        return out
+
+    keys = jax.random.split(key, periods)
+    return jax.vmap(one_period)(keys)
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dtype = _dtype(cfg)
+    ks = jax.random.split(key, 6)
+    V = cfg.padded_vocab
+    params: Params = {
+        "embed": (jax.random.normal(ks[0], (V, cfg.d_model), jnp.float32)
+                  * 0.02).astype(dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "blocks": _init_stack(ks[1], cfg, cfg.periods, cfg.block_pattern,
+                              dtype, cross_attention=cfg.encoder_layers > 0),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ks[2], cfg.d_model, V, dtype)
+    if cfg.encoder_layers:
+        params["enc_blocks"] = _init_stack(ks[3], cfg, cfg.encoder_layers,
+                                           ("attn",), dtype)
+        params["enc_norm"] = jnp.ones((cfg.d_model,), dtype)
+    if cfg.moe is not None:
+        # BARISTA greedy-balance slot permutation (identity at init; the
+        # balancer rewrites it from observed expert load — see
+        # sparsity/expert_balance.py)
+        params["expert_perm"] = jnp.arange(cfg.moe.num_experts, dtype=jnp.int32)
+    return params
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    """ShapeDtypeStruct pytree (no allocation) — dry-run input."""
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# forward (full-sequence: train / prefill / encoder)
+# ---------------------------------------------------------------------------
+def _block_fwd(bp: Params, x, cfg: ModelConfig, kind: str, pos: int, *,
+               positions, mask, expert_perm, enc_out=None, enc_mask=None,
+               ssm_chunk: Optional[int] = None,
+               flash_chunk: Optional[int] = None, flash_unroll: bool = False):
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rmsnorm(x, bp["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        x = x + L.attention(bp["attn"], h, cfg, positions=positions,
+                            mask=mask, flash_chunk=flash_chunk,
+                            flash_unroll=flash_unroll)
+    elif kind == "mamba":
+        x = x + L.mamba_block(bp["mamba"], h, cfg, chunk=ssm_chunk or 64)
+    elif kind == "rwkv":
+        y, _ = L.rwkv_time_mix(bp["time_mix"], h, cfg, chunk=ssm_chunk or 64)
+        x = x + y
+        h2 = L.rmsnorm(x, bp["ln2"], cfg.norm_eps)
+        y2, _ = L.rwkv_channel_mix(bp["channel_mix"], h2, cfg)
+        return x + y2, aux
+    if enc_out is not None:
+        hc = L.rmsnorm(x, bp["ln_cross"], cfg.norm_eps)
+        kv = _cross_kv(bp["cross"], enc_out, cfg)
+        x = x + L.attention(bp["cross"], hc, cfg, positions=positions,
+                            mask=enc_mask, kv=kv, use_rope=False)
+    h2 = L.rmsnorm(x, bp["ln2"], cfg.norm_eps)
+    if "moe" in bp:
+        y, aux = L.moe_ffn(bp["moe"], h2, cfg, expert_perm)
+        x = x + y
+    else:
+        x = x + L.ffn(bp["ffn"], h2, cfg)
+    return x, aux
+
+
+def _cross_kv(p: Params, enc_out: jnp.ndarray, cfg: ModelConfig):
+    B, S, _ = enc_out.shape
+    k = (enc_out @ p["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    v = (enc_out @ p["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    return k, v
+
+
+def _stack_fwd(blocks: Params, x, cfg: ModelConfig, pattern, *, positions,
+               mask, expert_perm, enc_out=None, enc_mask=None,
+               remat: bool = False, remat_group: int = 1,
+               unroll: bool = False, ssm_chunk: Optional[int] = None,
+               flash_chunk: Optional[int] = None, flash_unroll: bool = False):
+    def layer_fn(carry, layer_params):
+        h, aux = carry
+        for pos, kind in enumerate(pattern):
+            h, a = _block_fwd(layer_params[f"p{pos}"], h, cfg, kind, pos,
+                              positions=positions, mask=mask,
+                              expert_perm=expert_perm,
+                              enc_out=enc_out, enc_mask=enc_mask,
+                              ssm_chunk=ssm_chunk, flash_chunk=flash_chunk,
+                              flash_unroll=flash_unroll)
+            # sequence-parallel residual (no-op unless installed; see
+            # dist/act_sharding.py): the stream lives seq-sharded between
+            # blocks so TP boundaries lower to reduce-scatter/all-gather
+            h = constrain_residual(h)
+            aux = aux + a
+        return (h, aux)
+
+    if unroll:
+        # structurally-unrolled layers (cost-analysis lowering: XLA counts
+        # while-loop bodies once, so roofline runs unroll small-depth
+        # variants and extrapolate — see launch/dryrun.py)
+        fn = jax.checkpoint(layer_fn,
+                            policy=jax.checkpoint_policies.nothing_saveable) \
+            if remat else layer_fn
+        carry = (x, jnp.zeros((), jnp.float32))
+        n = jax.tree.leaves(blocks)[0].shape[0]
+        for i in range(n):
+            carry = fn(carry, jax.tree.map(lambda a: a[i], blocks))
+        return carry
+
+    if remat_group > 1:
+        # checkpoint every `remat_group` periods: only one residual-stream
+        # carry is saved per group (memory / recompute trade-off for the
+        # deepest configs)
+        blocks = jax.tree.map(
+            lambda a: a.reshape(a.shape[0] // remat_group, remat_group,
+                                *a.shape[1:]), blocks)
+
+        def body(carry, group_params):
+            c, _ = jax.lax.scan(lambda cc, lp: (layer_fn(cc, lp), None),
+                                carry, group_params)
+            return c, None
+    else:
+        def body(carry, layer_params):
+            return layer_fn(carry, layer_params), None
+
+    if remat:
+        # activation checkpointing per scanned layer group
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), blocks)
+    return x, aux
+
+
+def encode(params: Params, src_embeds: jnp.ndarray, cfg: ModelConfig,
+           unroll: bool = False):
+    """Encoder pass (enc-dec models). ``src_embeds`` come from the modality
+    frontend stub at d_model."""
+    B, S, _ = src_embeds.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x, _ = _stack_fwd(params["enc_blocks"], src_embeds.astype(_dtype(cfg)),
+                      cfg, ("attn",), positions=positions, mask=None,
+                      expert_perm=None, unroll=unroll)
+    return L.rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(params: Params, tokens: jnp.ndarray, cfg: ModelConfig, *,
+            prefix_embeds: Optional[jnp.ndarray] = None,
+            src_embeds: Optional[jnp.ndarray] = None,
+            remat: bool = False,
+            remat_group: int = 1,
+            unroll: bool = False,
+            ssm_chunk: Optional[int] = None,
+            flash_chunk: Optional[int] = None,
+            flash_unroll: bool = False
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward -> (logits [B, S_text, V], moe_aux).
+
+    prefix_embeds: VLM/frontends prefix at d_model (full attention region).
+    src_embeds:    encoder input for enc-dec models.
+    """
+    dtype = _dtype(cfg)
+    B, S_text = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    prefix = 0
+    if prefix_embeds is not None:
+        prefix = prefix_embeds.shape[1]
+        x = jnp.concatenate([prefix_embeds.astype(dtype), x], axis=1)
+    S = S_text + prefix
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    mask = None
+    enc_out = enc_mask = None
+    # flash path handles plain causal (+window) masks; bidirectional
+    # prefixes (VLM) keep the dense masked path
+    use_flash = flash_chunk is not None and cfg.n_heads and prefix == 0
+    if cfg.n_heads and not use_flash:
+        mask = L.causal_mask(S, S, cfg.window)
+        if prefix:
+            # modality prefix attends bidirectionally (PaliGemma-style)
+            pre = (jnp.arange(S)[None, :] < prefix)[None, None]
+            mask = mask | pre
+    if cfg.encoder_layers:
+        assert src_embeds is not None
+        enc_out = encode(params, src_embeds, cfg, unroll=unroll)
+
+    expert_perm = params.get("expert_perm")
+    x, aux = _stack_fwd(params["blocks"], x, cfg, cfg.block_pattern,
+                        positions=positions, mask=mask,
+                        expert_perm=expert_perm, enc_out=enc_out,
+                        enc_mask=enc_mask, remat=remat,
+                        remat_group=remat_group, unroll=unroll,
+                        ssm_chunk=ssm_chunk,
+                        flash_chunk=flash_chunk if use_flash else None,
+                        flash_unroll=flash_unroll)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if prefix:
+        x = x[:, prefix:]
+    head = params["lm_head"] if not cfg.tie_embeddings else params["embed"].T
+    logits = (x @ head.astype(dtype)).astype(jnp.float32)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# decode (single-token step with explicit state)
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: int = 0) -> Params:
+    """Decode state pytree, stacked over periods per pattern position."""
+    dtype = _dtype(cfg)
+    P = cfg.periods
+    cache: Params = {}
+    for pos, kind in enumerate(cfg.block_pattern):
+        entry: Params = {}
+        if kind == "attn":
+            shape = (P, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+            entry["k"] = jnp.zeros(shape, dtype)
+            entry["v"] = jnp.zeros(shape, dtype)
+        elif kind == "mamba":
+            m = cfg.mamba
+            din = m.expand * cfg.d_model
+            entry["conv"] = jnp.zeros((P, batch, m.d_conv - 1, din), dtype)
+            entry["h"] = jnp.zeros((P, batch, din, m.d_state), jnp.float32)
+        elif kind == "rwkv":
+            H, N = cfg.n_heads, cfg.d_head
+            entry["wkv"] = jnp.zeros((P, batch, H, N, N), jnp.float32)
+            entry["shift_t"] = jnp.zeros((P, batch, cfg.d_model), dtype)
+            entry["shift_c"] = jnp.zeros((P, batch, cfg.d_model), dtype)
+        if cfg.encoder_layers and kind == "attn":
+            entry["cross_k"] = jnp.zeros(
+                (P, batch, enc_len, cfg.n_kv_heads, cfg.d_head), dtype)
+            entry["cross_v"] = jnp.zeros_like(entry["cross_k"])
+        cache[f"p{pos}"] = entry
+    return cache
+
+
+def prefill_cache(params: Params, cfg: ModelConfig, cache: Params,
+                  enc_out: jnp.ndarray) -> Params:
+    """Enc-dec: precompute per-layer cross K/V from the encoder output."""
+    def per_layer(bp, entry):
+        k, v = _cross_kv(bp["cross"], enc_out, cfg)
+        entry = dict(entry)
+        entry["cross_k"], entry["cross_v"] = k.astype(entry["cross_k"].dtype), \
+            v.astype(entry["cross_v"].dtype)
+        return entry
+
+    new = dict(cache)
+    for pos, kind in enumerate(cfg.block_pattern):
+        if kind != "attn" or not cfg.encoder_layers:
+            continue
+        bp_stack = params["blocks"][f"p{pos}"]
+        new[f"p{pos}"] = jax.vmap(per_layer)(bp_stack, cache[f"p{pos}"])
+    return new
+
+
+def _block_decode(bp: Params, entry: Params, x, cfg: ModelConfig, kind: str,
+                  pos_idx: jnp.ndarray, expert_perm):
+    new_entry = dict(entry)
+    h = L.rmsnorm(x, bp["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        y, new_entry["k"], new_entry["v"] = L.attention_decode(
+            bp["attn"], h, cfg, cache_k=entry["k"], cache_v=entry["v"],
+            pos=pos_idx)
+        x = x + y
+        if "cross_k" in entry:
+            hc = L.rmsnorm(x, bp["ln_cross"], cfg.norm_eps)
+            x = x + L.attention(bp["cross"], hc, cfg, positions=None,
+                                mask=None, kv=(entry["cross_k"],
+                                               entry["cross_v"]),
+                                use_rope=False)
+    elif kind == "mamba":
+        y, new_entry["conv"], new_entry["h"] = L.mamba_decode(
+            bp["mamba"], h, cfg, entry["conv"], entry["h"])
+        x = x + y
+    elif kind == "rwkv":
+        st = {"shift": entry["shift_t"], "wkv": entry["wkv"]}
+        y, st = L.rwkv_time_mix(bp["time_mix"], h, cfg, chunk=1, state=st)
+        new_entry["shift_t"], new_entry["wkv"] = st["shift"], st["wkv"]
+        x = x + y
+        h2 = L.rmsnorm(x, bp["ln2"], cfg.norm_eps)
+        y2, st2 = L.rwkv_channel_mix(bp["channel_mix"], h2, cfg,
+                                     state={"shift": entry["shift_c"]})
+        new_entry["shift_c"] = st2["shift"]
+        return x + y2, new_entry
+    h2 = L.rmsnorm(x, bp["ln2"], cfg.norm_eps)
+    if "moe" in bp:
+        y, _ = L.moe_ffn(bp["moe"], h2, cfg, expert_perm)
+        x = x + y
+    else:
+        x = x + L.ffn(bp["ffn"], h2, cfg)
+    return x, new_entry
+
+
+def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
+                cache: Params, pos: jnp.ndarray, *, unroll: bool = False
+                ) -> Tuple[jnp.ndarray, Params]:
+    """token [B, 1] int32; pos scalar int32 -> (logits [B, 1, V], cache)."""
+    dtype = _dtype(cfg)
+    x = jnp.take(params["embed"], token, axis=0).astype(dtype)
+    expert_perm = params.get("expert_perm")
+    pattern = cfg.block_pattern
+
+    def body(carry, xs):
+        h = carry
+        layer_params, layer_cache = xs
+        new_cache = {}
+        for p_i, kind in enumerate(pattern):
+            h, new_cache[f"p{p_i}"] = _block_decode(
+                layer_params[f"p{p_i}"], layer_cache[f"p{p_i}"], h, cfg,
+                kind, pos, expert_perm)
+        return h, new_cache
+
+    if unroll:
+        n = jax.tree.leaves(cache)[0].shape[0]
+        outs = []
+        for i in range(n):
+            x, nc = body(x, jax.tree.map(lambda a: a[i],
+                                         (params["blocks"], cache)))
+            outs.append(nc)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    else:
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["lm_head"] if not cfg.tie_embeddings else params["embed"].T
+    logits = (x @ head.astype(dtype)).astype(jnp.float32)
+    return logits, new_cache

@@ -1,0 +1,97 @@
+"""Shard-aware AdamW with decoupled weight decay, global-norm clipping and
+warmup-cosine schedule. Moments live in fp32 with the same sharding as the
+params (each leaf's optimizer state is elementwise -> inherits the spec).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def init(params) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(jnp.zeros((), jnp.int32),
+                    jax.tree.map(zeros, params), jax.tree.map(zeros, params))
+
+
+def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(tree)
+             if g.dtype != jax.dtypes.float0
+             and jnp.issubdtype(g.dtype, jnp.inexact))
+    return jnp.sqrt(sq)
+
+
+def _decayable(path) -> bool:
+    name = getattr(path[-1], "key", "")
+    return name not in ("ln1", "ln2", "ln_cross", "ln_x", "final_norm",
+                        "enc_norm", "q_norm", "k_norm", "dt_bias", "D",
+                        "u_bonus", "expert_perm") and "mu_" not in str(name)
+
+
+def apply(cfg: AdamWConfig, params, grads, state: OptState):
+    """One AdamW step -> (new_params, new_state, metrics)."""
+    # int leaves (e.g. expert_perm) pass through untouched
+    is_float = lambda p: jnp.issubdtype(p.dtype, jnp.floating)
+    gnorm = global_norm(grads)
+    scale = jnp.ones((), jnp.float32)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(path, p, g, mu, nu):
+        if not is_float(p):
+            return p, mu, nu
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        u = (mu / b1c) / (jnp.sqrt(nu / b2c) + cfg.eps)
+        if cfg.weight_decay and _decayable(path):
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), mu, nu
+
+    flat = jax.tree_util.tree_map_with_path(
+        lambda path, p, g, mu, nu: upd(path, p, g, mu, nu),
+        params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], flat,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], flat,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(step, new_mu, new_nu), \
+        {"grad_norm": gnorm, "lr": lr}

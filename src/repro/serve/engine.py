@@ -1,0 +1,66 @@
+"""Serving engine: prefill + decode steps with batched requests.
+
+``serve_step`` (the decode step the dry-run lowers) processes one new token
+per sequence against a KV cache of ``seq_len`` — the assigned ``decode_*`` /
+``long_*`` shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+
+def make_prefill_fn(cfg: ModelConfig, unroll: bool = False, ssm_chunk=None,
+                    flash_chunk=None):
+    """Full-sequence forward returning last-position logits (prefill)."""
+    def prefill(params, tokens, **extras):
+        logits, _ = M.forward(params, tokens, cfg, unroll=unroll,
+                              ssm_chunk=ssm_chunk, flash_chunk=flash_chunk,
+                              flash_unroll=unroll, **extras)
+        return logits[:, -1]
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig, greedy: bool = True,
+                    unroll: bool = False):
+    """One decode iteration: (params, cache, token, pos[, rng]) ->
+    (next_token, cache)."""
+    def serve_step(params, cache, token, pos, rng=None):
+        logits, cache = M.decode_step(params, cfg, token, cache, pos,
+                                      unroll=unroll)
+        if greedy or rng is None:
+            nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(rng, logits[:, 0]).astype(jnp.int32)
+        return nxt[:, None], cache
+    return serve_step
+
+
+def generate(params, cfg: ModelConfig, prompt: jnp.ndarray, max_new: int,
+             *, greedy: bool = True, rng: Optional[jax.Array] = None,
+             src_embeds=None, prefix_embeds=None) -> jnp.ndarray:
+    """Batched generation: prefill the prompt token-by-token into the cache
+    (keeps one compiled decode fn), then sample ``max_new`` tokens."""
+    B, S0 = prompt.shape
+    total = S0 + max_new
+    cache = M.init_cache(cfg, B, total,
+                         enc_len=src_embeds.shape[1] if src_embeds is not None
+                         else 0)
+    if cfg.encoder_layers:
+        enc_out = M.encode(params, src_embeds, cfg)
+        cache = M.prefill_cache(params, cfg, cache, enc_out)
+    step = jax.jit(make_serve_step(cfg, greedy))
+    out = [prompt]
+    tok = prompt[:, :1]
+    for t in range(total - 1):
+        nxt, cache = step(params, cache, tok, jnp.int32(t))
+        tok = prompt[:, t + 1:t + 2] if t + 1 < S0 else nxt
+        if t + 1 >= S0:
+            out.append(tok)
+    return jnp.concatenate(out, axis=1)

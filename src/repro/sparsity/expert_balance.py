@@ -1,0 +1,72 @@
+"""MoE expert balancing — the paper's inter-filter balance, at EP scale.
+
+BARISTA's Greedy-Balance-Software sorts filters by density and deals them
+serpentine across shards so each shard's total work matches. For MoE the
+"density" is the observed expert load (token routing counts); the "shards"
+are the EP devices on the ``model`` axis. ``rebalance`` produces the slot
+permutation the model's router consumes (``params['expert_perm']``) and the
+framework rotates the deal every N steps (dynamic round-robin) so a
+persistently-hot expert does not pin one device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import balance
+
+
+@dataclasses.dataclass
+class ExpertLoadTracker:
+    """EMA of per-expert token counts (host-side, tiny)."""
+
+    num_experts: int
+    decay: float = 0.9
+    load: Optional[np.ndarray] = None
+
+    def update(self, counts: np.ndarray) -> None:
+        counts = np.asarray(counts, np.float64)
+        if self.load is None:
+            self.load = counts.copy()
+        else:
+            self.load = self.decay * self.load + (1 - self.decay) * counts
+
+    def imbalance(self, num_shards: int) -> float:
+        """Max/mean per-shard load under the *identity* placement."""
+        if self.load is None:
+            return 1.0
+        return balance.balance_cost(self.load,
+                                    np.arange(self.num_experts), num_shards)
+
+
+def expert_counts(expert_ids: jnp.ndarray, num_experts: int) -> jnp.ndarray:
+    """Histogram of routed expert ids ([T, K] -> [E])."""
+    return jnp.zeros((num_experts,), jnp.int32).at[
+        expert_ids.reshape(-1)].add(1)
+
+
+def rebalance(tracker: ExpertLoadTracker, num_shards: int,
+              step: int = 0) -> np.ndarray:
+    """New slot permutation: logical expert e -> slot perm_slots[e].
+
+    Slots are laid out shard-major (slot s lives on device s % num_shards
+    when the expert dim is sharded over ``model``), so the serpentine deal
+    of density-sorted experts balances per-device work.
+    """
+    if tracker.load is None:
+        return np.arange(tracker.num_experts, dtype=np.int32)
+    order = balance.greedy_balance(tracker.load, num_shards, direction=step)
+    perm_slots = balance.invert_permutation(order)
+    return perm_slots.astype(np.int32)
+
+
+def placement_imbalance(load: np.ndarray, perm_slots: np.ndarray,
+                        num_shards: int) -> float:
+    """Max/mean per-shard load under a slot permutation (diagnostic)."""
+    order = balance.invert_permutation(np.asarray(perm_slots, np.int64))
+    return balance.balance_cost(np.asarray(load, np.float64), order,
+                                num_shards)

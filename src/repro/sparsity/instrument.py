@@ -1,0 +1,63 @@
+"""Activation-sparsity instrumentation.
+
+The paper's feature-map sparsity comes from ReLU; the transformer analogue is
+ReLU/squared-ReLU FFN activations (nemotron, rwkv channel-mix, seamless).
+These helpers measure (a) per-scalar activation density and (b) the
+chunk-granular (128-wide tile) density the TPU kernel can actually exploit —
+the gap between them is the cost of adapting per-scalar sparsity to the MXU
+(recorded in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitmask as bm
+
+
+def scalar_density(x: jnp.ndarray) -> jnp.ndarray:
+    """Fraction of non-zero scalars (the paper's feature-map density)."""
+    return jnp.mean((x != 0).astype(jnp.float32))
+
+
+def tile_density(x: jnp.ndarray, block_m: int = 128,
+                 block_k: int = 128) -> jnp.ndarray:
+    """Fraction of non-zero (row-block x k-chunk) tiles — what the kernel
+    skips. Always >= scalar density."""
+    x2 = x.reshape(-1, x.shape[-1])
+    m, k = x2.shape
+    x2 = jnp.pad(x2, (((0, (-m) % block_m), (0, (-k) % block_k))))
+    occ = bm.chunk_occupancy(x2, block_m, block_k)
+    return jnp.mean(occ.astype(jnp.float32))
+
+
+def lane_density(x: jnp.ndarray, block_k: int = 128) -> jnp.ndarray:
+    """Per-row chunk density (row-granular skipping, e.g. token-level):
+    fraction of (row, k-chunk) pairs with any non-zero."""
+    x2 = x.reshape(-1, x.shape[-1])
+    m, k = x2.shape
+    x2 = jnp.pad(x2, ((0, 0), (0, (-k) % block_k)))
+    t = x2.reshape(m, -1, block_k)
+    return jnp.mean((t != 0).any(-1).astype(jnp.float32))
+
+
+def ffn_sparsity_probe(h: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """All three densities for a post-activation FFN hidden tensor."""
+    return {"scalar": scalar_density(h),
+            "tile_128": tile_density(h),
+            "row_chunk": lane_density(h)}
+
+
+def effective_flop_fraction(h: jnp.ndarray, w_chunk_density: float,
+                            block_m: int = 128, block_k: int = 128
+                            ) -> jnp.ndarray:
+    """Two-sided effective compute fraction at chunk granularity.
+
+    The kernel computes a tile iff (weight chunk non-zero) AND (activation
+    tile non-zero); with independent placement the expected fraction is the
+    product — this is the TPU-adapted version of the paper's
+    density-product compute reduction.
+    """
+    return tile_density(h, block_m, block_k) * w_chunk_density

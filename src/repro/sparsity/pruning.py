@@ -1,0 +1,100 @@
+"""Deep-Compression-style magnitude pruning of model parameters.
+
+BARISTA's filter sparsity comes from pruning + retraining [22, 23]. Here the
+same applies to transformer FFN / expert weights: prune to a target density,
+(optionally) fine-tune with the mask fixed, then hand the pruned matrices to
+the BARISTA block-sparse path (``core.bitmask.block_sparsify`` +
+``kernels.bitmask_spmm``) and to the inter-filter balancer
+(``core.balance.greedy_balance``).
+
+The mask is per-output-channel (each "filter" pruned independently), matching
+the paper's reference pruning, so the cross-filter density *distribution* that
+drives the paper's load-imbalance story is realistic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparse import prune_by_magnitude
+
+Params = Dict[str, Any]
+
+# FFN/expert weight leaf names eligible for the BARISTA sparse path.
+PRUNABLE = ("w_in", "w_gate", "w_out")
+
+
+@dataclasses.dataclass(frozen=True)
+class PruneConfig:
+    density: float = 0.35          # paper Table 1 filter densities ~0.33-0.57
+    names: Sequence[str] = PRUNABLE
+    min_size: int = 1024           # skip tiny leaves (norms, smoke configs)
+
+
+def _is_prunable(path: Tuple, leaf, cfg: PruneConfig) -> bool:
+    name = str(getattr(path[-1], "key", path[-1]))
+    return (name in cfg.names and hasattr(leaf, "ndim") and leaf.ndim >= 2
+            and leaf.size >= cfg.min_size
+            and jnp.issubdtype(leaf.dtype, jnp.floating))
+
+
+def prune_masks(params: Params, cfg: PruneConfig = PruneConfig()) -> Params:
+    """Binary masks (same pytree as params; ``None`` for unpruned leaves)."""
+    def mask_of(path, leaf):
+        if not _is_prunable(path, leaf, cfg):
+            return None
+        w = np.asarray(leaf, np.float32)
+        if w.ndim == 2:
+            return jnp.asarray(prune_by_magnitude(w, cfg.density, axis_out=-1))
+        # stacked ([periods, ...]) or expert ([E, in, out]) tensors: prune
+        # each slice independently (per-filter pruning within each).
+        flat = w.reshape(-1, w.shape[-2], w.shape[-1])
+        m = np.stack([prune_by_magnitude(s, cfg.density, axis_out=-1)
+                      for s in flat])
+        return jnp.asarray(m.reshape(w.shape))
+
+    return jax.tree_util.tree_map_with_path(mask_of, params)
+
+
+def apply_masks(params: Params, masks: Params) -> Params:
+    """Elementwise ``w * mask``; ``None`` masks pass through."""
+    return jax.tree.map(
+        lambda p, m: p if m is None else (p * m.astype(p.dtype)),
+        params, masks, is_leaf=lambda x: x is None)
+
+
+def mask_gradients(grads: Params, masks: Params) -> Params:
+    """Zero gradients at pruned positions (fixed-mask fine-tuning — the
+    paper's retraining step keeps pruned weights at zero)."""
+    return jax.tree.map(
+        lambda g, m: g if (m is None or g.dtype == jax.dtypes.float0)
+        else (g * m.astype(g.dtype)),
+        grads, masks, is_leaf=lambda x: x is None)
+
+
+def density_report(params: Params, masks: Params) -> Dict[str, float]:
+    """Per-leaf realized density (diagnostics / EXPERIMENTS)."""
+    out: Dict[str, float] = {}
+    flat, _ = jax.tree_util.tree_flatten_with_path(masks, is_leaf=lambda x: x is None)
+    for kp, m in flat:
+        if m is None:
+            continue
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        out[key] = float(jnp.mean(m))
+    return out
+
+
+def make_pruned_train_step(base_step: Callable, masks: Params) -> Callable:
+    """Wrap a train step so params re-enter pruned every step.
+
+    Masking *after* the optimizer update (rather than masking gradients
+    alone) also cancels weight-decay / momentum drift on pruned positions.
+    """
+    def step(params, opt_state, batch):
+        new_params, new_opt, metrics = base_step(params, opt_state, batch)
+        return apply_masks(new_params, masks), new_opt, metrics
+    return step

@@ -1,0 +1,129 @@
+"""BARISTA sparse-FFN swap-in: run eligible FFNs through the two-sided
+chunk-sparse Pallas kernel.
+
+Offline (per the paper — filters are static for inference, pre-processing is
+amortized over all inferences):
+
+  1. prune weights to a target density (``sparsity.pruning``),
+  2. greedy-balance output channels across the ``model``-axis shards
+     (``core.balance.greedy_balance``) and fold the inverse permutation into
+     the next matrix (``fold_permutation``) — inter-filter load balance,
+  3. pack into the chunk-block-sparse layout (``core.bitmask``), with the
+     chunk->lane schedule rotated per call site (round-robin).
+
+Online the layer calls ``kernels.ops.sparse_dense_matmul`` which skips
+(weight-chunk x activation-tile) pairs that are zero on either side —
+two-sided sparsity at the TPU's native 128-chunk granularity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import balance, bitmask as bm
+from repro.core.sparse import prune_by_magnitude
+from repro.kernels import ops
+
+
+@dataclasses.dataclass
+class SparseFFN:
+    """Inference-time FFN with block-sparse weights (one transformer block).
+
+    ``w_in``/``w_gate`` are channel-permuted by the greedy balance ``perm``;
+    ``w_out`` has the inverse permutation folded into its *input* axis, so
+    the block output is numerically identical to the unpermuted FFN.
+    """
+
+    w_in: bm.BlockSparseMatrix
+    w_out: bm.BlockSparseMatrix
+    w_gate: Optional[bm.BlockSparseMatrix]
+    act: str
+    perm: np.ndarray
+
+    def __call__(self, x: jnp.ndarray, *, interpret: Optional[bool] = None
+                 ) -> jnp.ndarray:
+        h = ops.sparse_dense_matmul(x, self.w_in, two_sided=True,
+                                    interpret=interpret)
+        if self.act == "relu":
+            h = jax.nn.relu(h)
+        elif self.act == "relu2":
+            r = jax.nn.relu(h)
+            h = r * r
+        elif self.act in ("swiglu", "geglu"):
+            g = ops.sparse_dense_matmul(x, self.w_gate, two_sided=True,
+                                        interpret=interpret)
+            h = (jax.nn.silu(g) if self.act == "swiglu"
+                 else jax.nn.gelu(g)) * h
+        else:
+            raise ValueError(self.act)
+        # h is sparse after relu-family activations -> two-sided pays off here
+        return ops.sparse_dense_matmul(h, self.w_out, two_sided=True,
+                                       interpret=interpret)
+
+
+def _pad_to(x: np.ndarray, mult: int, axis: int) -> np.ndarray:
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return np.pad(x, widths)
+
+
+def build_sparse_ffn(params_ffn: Dict[str, Any], act: str, *,
+                     density: float = 0.35, num_shards: int = 16,
+                     chunk: int = bm.CHUNK, step: int = 0) -> SparseFFN:
+    """Offline pipeline: prune -> balance -> fold -> pack.
+
+    ``params_ffn`` holds dense ``w_in`` [D, F], ``w_out`` [F, D] and
+    optionally ``w_gate`` [D, F] (one block's FFN params).
+    """
+    w_in = np.asarray(params_ffn["w_in"], np.float32)
+    w_out = np.asarray(params_ffn["w_out"], np.float32)
+    w_gate = params_ffn.get("w_gate")
+
+    # 1. prune (per output channel, Deep-Compression style)
+    w_in = w_in * prune_by_magnitude(w_in, density, axis_out=-1)
+    w_out = w_out * prune_by_magnitude(w_out, density, axis_out=-1)
+    if w_gate is not None:
+        w_gate = np.asarray(w_gate, np.float32)
+        w_gate = w_gate * prune_by_magnitude(w_gate, density, axis_out=-1)
+
+    # 2. greedy balance the hidden (F) channels across shards; alternate
+    #    direction by `step` (the paper's two fixed permutations)
+    dens = balance.filter_density(w_in, axis_out=-1)
+    perm = balance.greedy_balance(dens, num_shards, direction=step)
+
+    w_in = w_in[:, perm]
+    if w_gate is not None:
+        w_gate = w_gate[:, perm]
+    # 3. fold: w_out reads its input (F) axis in the same permuted order
+    w_out = balance.fold_permutation(w_out, perm, axis_in=0)
+
+    # 4. pack (pad every dim to the chunk so BlockSpecs tile exactly)
+    w_in = _pad_to(_pad_to(w_in, chunk, 0), chunk, 1)
+    w_out = _pad_to(_pad_to(w_out, chunk, 0), chunk, 1)
+    pack = lambda w: bm.block_sparsify(w, bk=chunk, bn=chunk)
+    gate = None
+    if w_gate is not None:
+        gate = pack(_pad_to(_pad_to(w_gate, chunk, 0), chunk, 1))
+    return SparseFFN(pack(w_in), pack(w_out), gate, act, perm)
+
+
+def dense_reference(ffn: SparseFFN, x: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for a SparseFFN (densify both matmuls, same activation)."""
+    x = jnp.pad(x, ((0, 0), (0, ffn.w_in.shape[0] - x.shape[-1])))
+    h = x @ bm.block_densify(ffn.w_in).astype(x.dtype)
+    if ffn.act == "relu":
+        h = jax.nn.relu(h)
+    elif ffn.act == "relu2":
+        r = jax.nn.relu(h)
+        h = r * r
+    else:
+        g = x @ bm.block_densify(ffn.w_gate).astype(x.dtype)
+        h = (jax.nn.silu(g) if ffn.act == "swiglu" else jax.nn.gelu(g)) * h
+    return h @ bm.block_densify(ffn.w_out).astype(x.dtype)

@@ -1,0 +1,135 @@
+"""Checkpointed training loop with fault tolerance.
+
+Wires together: deterministic data pipeline (pure function of the step),
+sharded train step, atomic async checkpoints, straggler detection hooks, and
+restart/elastic-reshape logic. The loop is intentionally host-side simple —
+all the heavy machinery is in the jitted step; the loop only sequences it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt import checkpoint as ckpt
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.data.pipeline import batch_for
+from repro.dist import partitioning as part
+from repro.models import model as M
+from repro.optim import adamw
+from repro.train.train_step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    log_every: int = 10
+    microbatches: int = 1
+    remat_group: int = 1
+    fsdp: bool = False
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: adamw.OptState
+    step: int
+
+
+def init_state(cfg: ModelConfig, mesh=None, *, fsdp: bool = False,
+               seed: int = 0) -> TrainState:
+    """Initialize (optionally sharded) params + optimizer."""
+    key = jax.random.PRNGKey(seed)
+    if mesh is None:
+        params = M.init_params(key, cfg)
+    else:
+        abs_p = M.abstract_params(cfg)
+        shardings = part.param_shardings(mesh, abs_p, fsdp=fsdp)
+        params = jax.jit(lambda k: M.init_params(k, cfg),
+                         out_shardings=shardings)(key)
+    return TrainState(params, adamw.init(params), 0)
+
+
+def restore_or_init(cfg: ModelConfig, loop_cfg: TrainLoopConfig,
+                    mesh=None) -> TrainState:
+    """Fault-tolerant start: resume from the newest complete checkpoint if
+    one exists (works across mesh changes — elastic restart), else init."""
+    state = init_state(cfg, mesh, fsdp=loop_cfg.fsdp, seed=loop_cfg.seed)
+    if loop_cfg.ckpt_dir:
+        last = ckpt.latest_step(loop_cfg.ckpt_dir)
+        if last is not None:
+            shardings = None
+            opt_sh = None
+            if mesh is not None:
+                shardings = part.param_shardings(
+                    mesh, M.abstract_params(cfg), fsdp=loop_cfg.fsdp)
+                opt_sh = adamw.OptState(
+                    None, shardings, shardings)
+            params, opt, man = ckpt.restore(
+                loop_cfg.ckpt_dir, last, state.params, state.opt,
+                shardings=shardings, opt_shardings=opt_sh)
+            return TrainState(params, opt, int(man["step"]))
+    return state
+
+
+def train(cfg: ModelConfig, shape: ShapeConfig,
+          loop_cfg: TrainLoopConfig = TrainLoopConfig(),
+          opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig(),
+          mesh=None,
+          step_hook: Optional[Callable[[int, Dict], None]] = None,
+          post_step: Optional[Callable] = None) -> TrainState:
+    """Run the loop; returns the final state.
+
+    ``post_step(params, metrics, step)`` lets callers re-apply pruning
+    masks or rotate the MoE expert permutation (the BARISTA round-robin)
+    outside the jitted step.
+    """
+    state = restore_or_init(cfg, loop_cfg, mesh)
+    step_fn = make_train_step(cfg, opt_cfg,
+                              microbatches=loop_cfg.microbatches,
+                              remat_group=loop_cfg.remat_group)
+    if mesh is not None:
+        p_sh = jax.tree.map(lambda a: a.sharding, state.params)
+        o_sh = adamw.OptState(
+            state.opt.step.sharding,
+            jax.tree.map(lambda a: a.sharding, state.opt.mu),
+            jax.tree.map(lambda a: a.sharding, state.opt.nu))
+        step_fn = jax.jit(step_fn, in_shardings=(p_sh, o_sh, None),
+                          out_shardings=(p_sh, o_sh, None),
+                          donate_argnums=(0, 1))
+    else:
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    pending_save = None
+    history = []
+    while state.step < loop_cfg.steps:
+        batch = batch_for(cfg, shape, state.step, seed=loop_cfg.seed)
+        t0 = time.time()
+        params, opt, metrics = step_fn(state.params, state.opt, batch)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        dt = time.time() - t0
+        state = TrainState(params, opt, state.step + 1)
+        if post_step is not None:
+            state = post_step(state, metrics) or state
+        history.append(metrics["loss"])
+        if step_hook:
+            step_hook(state.step, {**metrics, "sec": dt})
+        elif state.step % loop_cfg.log_every == 0:
+            print(f"step {state.step:5d} loss {metrics['loss']:.4f} "
+                  f"gnorm {metrics.get('grad_norm', 0):.2f} {dt*1e3:.0f} ms")
+        if (loop_cfg.ckpt_dir and loop_cfg.ckpt_every
+                and state.step % loop_cfg.ckpt_every == 0):
+            if pending_save is not None:
+                pending_save.join()  # one in-flight save at a time
+            pending_save = ckpt.save_async(
+                loop_cfg.ckpt_dir, state.step, state.params, state.opt,
+                extra={"arch": cfg.name, "loss": metrics["loss"]})
+    if pending_save is not None:
+        pending_save.join()
+    return state

@@ -1,0 +1,97 @@
+"""Training step factory: loss, microbatch gradient accumulation, remat.
+
+``make_train_step(cfg, opt_cfg, microbatches)`` returns a pure
+``step(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable
+for jit/pjit — the launcher wires in shardings and donation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.optim import adamw
+
+MOE_AUX_WEIGHT = 0.01
+Z_LOSS_WEIGHT = 1e-4
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean CE over tokens + z-loss (fp32)."""
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(lse - gold)
+    z = jnp.mean(lse * lse)
+    return ce, z
+
+
+def loss_fn(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            remat: bool = True, remat_group: int = 1, unroll: bool = False,
+            ssm_chunk=None, flash_chunk=None):
+    extras = {k: batch[k] for k in ("prefix_embeds", "src_embeds")
+              if k in batch}
+    logits, aux = M.forward(params, batch["tokens"], cfg, remat=remat,
+                            remat_group=remat_group, unroll=unroll,
+                            ssm_chunk=ssm_chunk, flash_chunk=flash_chunk,
+                            flash_unroll=unroll, **extras)
+    ce, z = cross_entropy(logits, batch["labels"])
+    loss = ce + MOE_AUX_WEIGHT * aux + Z_LOSS_WEIGHT * z
+    return loss, {"ce": ce, "moe_aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    microbatches: int = 1, remat_group: int = 1,
+                    unroll: bool = False, ssm_chunk=None, flash_chunk=None):
+    def _loss(params, batch, cfg):
+        return loss_fn(params, batch, cfg, remat_group=remat_group,
+                       remat=not unroll, unroll=unroll, ssm_chunk=ssm_chunk,
+                       flash_chunk=flash_chunk)
+    # allow_int: integer leaves (expert_perm) get float0 grads, which the
+    # optimizer and the accumulator below ignore.
+    grad_fn = jax.value_and_grad(_loss, has_aux=True, allow_int=True)
+
+    def step(params, opt_state: adamw.OptState, batch):
+        if microbatches == 1:
+            (loss, aux_m), grads = grad_fn(params, batch, cfg)
+        else:
+            # gradient accumulation: scan over microbatches; the accumulator
+            # doubles as the BARISTA "colored output buffer" — each
+            # microbatch's partial gradients land in their own fp32 buffer
+            # slot without a cross-microbatch barrier inside the layer.
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def body(acc, mbatch):
+                g_acc, l_acc = acc
+                (loss, _), grads = grad_fn(params, mbatch, cfg)
+                g_acc = jax.tree.map(
+                    lambda a, g: a if g.dtype == jax.dtypes.float0
+                    else a + g.astype(jnp.float32) / microbatches,
+                    g_acc, grads)
+                return (g_acc, l_acc + loss / microbatches), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            (grads, loss), _ = jax.lax.scan(body, (zero, 0.0), mb)
+            aux_m = {"ce": loss, "moe_aux": jnp.zeros((), jnp.float32)}
+
+        new_params, new_opt, om = adamw.apply(opt_cfg, params, grads, opt_state)
+        metrics = {"loss": loss, **aux_m, **om}
+        return new_params, new_opt, metrics
+
+    return step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def step(params, batch):
+        loss, aux = loss_fn(params, batch, cfg, remat=False)
+        return {"loss": loss, **aux}
+    return step

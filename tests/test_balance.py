@@ -1,0 +1,94 @@
+"""Load-balancing invariants (paper Sections 3.3.2/3.3.3): greedy balance
+beats identity, round-robin beats static, permutation folding is exact."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import balance
+
+
+@given(st.integers(2, 512), st.integers(2, 32), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_greedy_balance_is_permutation(n, shards, seed):
+    rng = np.random.default_rng(seed)
+    d = rng.random(n)
+    perm = balance.greedy_balance(d, shards)
+    assert sorted(perm.tolist()) == list(range(n))
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 16))
+@settings(max_examples=30, deadline=None)
+def test_greedy_balance_near_lower_bound(seed, shards):
+    """GB-S on realistic filter densities (bounded in (0,1], as produced by
+    pruning) lands within 2% of perfect balance."""
+    rng = np.random.default_rng(seed)
+    d = rng.random(shards * 32) * 0.9 + 0.05
+    bal = balance.balance_cost(d, balance.greedy_balance(d, shards), shards)
+    assert bal <= 1.02
+
+
+def test_greedy_balance_improves_on_average():
+    """Statistically, the serpentine deal beats identity placement."""
+    wins, total = 0, 50
+    for seed in range(total):
+        rng = np.random.default_rng(seed)
+        d = rng.lognormal(0, 1.0, size=256)
+        ident = balance.balance_cost(d, np.arange(256), 8)
+        bal = balance.balance_cost(d, balance.greedy_balance(d, 8), 8)
+        wins += bal <= ident
+    assert wins >= int(0.9 * total)
+
+
+def test_alternating_direction_gives_two_fixed_perms():
+    d = np.random.default_rng(3).random(64)
+    p0 = balance.greedy_balance(d, 8, direction=0)
+    p1 = balance.greedy_balance(d, 8, direction=1)
+    p2 = balance.greedy_balance(d, 8, direction=2)
+    assert np.array_equal(p0, p2)          # only two fixed permutations
+    assert not np.array_equal(p0, p1)      # (the paper's 2-1 mux)
+
+
+@given(st.integers(2, 200), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_fold_permutation_repairs_scramble(n, seed):
+    """Scrambled outputs + folded next-layer weights == unscrambled math."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(4, n))
+    w1 = rng.normal(size=(n, n))
+    w2 = rng.normal(size=(n, 3))
+    perm = balance.greedy_balance(rng.random(n), 4)
+    # layer 1 emits channels in `perm` order; layer 2 reads them folded
+    scrambled = (x @ w1)[:, perm]
+    w2_folded = balance.fold_permutation(w2, perm, axis_in=0)
+    np.testing.assert_allclose(scrambled @ w2_folded, (x @ w1) @ w2,
+                               rtol=1e-9, atol=1e-9)
+
+
+def test_invert_permutation():
+    p = np.array([2, 0, 3, 1])
+    inv = balance.invert_permutation(p)
+    np.testing.assert_array_equal(p[inv], np.arange(4))
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_round_robin_beats_static(seed):
+    """Systematically-dense sub-chunks must not pin one lane (3.3.2)."""
+    rng = np.random.default_rng(seed)
+    lanes, subchunks, steps = 4, 8, 64
+    base = rng.lognormal(0, 1, size=subchunks)  # persistent density profile
+    work = base[None, :] * rng.uniform(0.8, 1.2, size=(steps, subchunks))
+    static, rr = balance.rotate_assignment(work, lanes, steps)
+    assert rr <= static + 1e-9
+    assert rr < 1.1  # rotation evens the systematic skew
+
+
+def test_expert_placement_covers_all_devices():
+    load = np.random.default_rng(0).lognormal(0, 1, 64)
+    dev = balance.expert_placement(load, 8)
+    assert set(dev.tolist()) == set(range(8))
+    # per-device load balanced within 25%
+    per_dev = np.zeros(8)
+    for e, d in enumerate(dev):
+        per_dev[d] += load[e]
+    assert per_dev.max() / per_dev.mean() < 1.25

@@ -1,0 +1,76 @@
+"""Bitmask / block-sparse format: encode-decode roundtrips and the paper's
+matching primitive, including hypothesis property tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitmask as bm
+
+
+def _sparse_vec(rng, n, density):
+    x = rng.normal(size=n).astype(np.float32)
+    x[rng.random(n) >= density] = 0.0
+    return x
+
+
+@pytest.mark.parametrize("n", [1, 5, 128, 200, 384])
+@pytest.mark.parametrize("density", [0.0, 0.1, 0.5, 1.0])
+def test_encode_decode_roundtrip(rng, n, density):
+    x = _sparse_vec(rng, n, density)
+    v = bm.encode(x)
+    np.testing.assert_array_equal(np.asarray(bm.decode(v)), x)
+
+
+def test_encode_respects_capacity(rng):
+    x = _sparse_vec(rng, 256, 1.0)
+    v = bm.encode(x, capacity=bm.CHUNK)
+    assert v.values.shape[1] == bm.CHUNK
+    np.testing.assert_array_equal(np.asarray(bm.decode(v)), x)
+
+
+@given(st.integers(1, 300), st.floats(0.0, 1.0), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_match_and_multiply_equals_dot(n, density, seed):
+    rng = np.random.default_rng(seed)
+    a = _sparse_vec(rng, n, density)
+    b = _sparse_vec(rng, n, density)
+    va, vb = bm.encode(a), bm.encode(b)
+    got = float(bm.match_and_multiply(va, vb))
+    np.testing.assert_allclose(got, float(a @ b), rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(1, 300), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_match_count_is_and_popcount(n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = _sparse_vec(rng, n, 0.4), _sparse_vec(rng, n, 0.4)
+    got = int(bm.match_count(bm.encode(a), bm.encode(b)))
+    assert got == int(np.sum((a != 0) & (b != 0)))
+
+
+@pytest.mark.parametrize("K,N,bk,bn", [(256, 256, 128, 128),
+                                       (128, 384, 128, 128),
+                                       (512, 128, 128, 128),
+                                       (256, 256, 64, 64)])
+def test_block_sparsify_densify_roundtrip(rng, K, N, bk, bn):
+    w = rng.normal(size=(K, N)).astype(np.float32)
+    w[rng.random((K, N)) < 0.6] = 0.0
+    # zero whole chunks to exercise the skip list
+    w[:bk] = 0.0
+    m = bm.block_sparsify(w, bk=bk, bn=bn)
+    np.testing.assert_array_equal(np.asarray(bm.block_densify(m)), w)
+
+
+def test_block_sparsify_density_counts(rng):
+    w = np.zeros((256, 256), np.float32)
+    w[0, 0] = 1.0          # one non-zero tile out of 4
+    m = bm.block_sparsify(w)
+    assert m.density() == pytest.approx(0.25)
+
+
+def test_chunk_occupancy(rng):
+    x = np.zeros((256, 256), np.float32)
+    x[130, 200] = 3.0
+    occ = np.asarray(bm.chunk_occupancy(jnp.asarray(x), 128, 128))
+    assert occ.sum() == 1 and occ[1, 1]

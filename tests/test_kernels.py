@@ -1,0 +1,94 @@
+"""Pallas kernel vs pure-jnp oracle: shape/dtype/density sweeps (interpret
+mode on CPU) + invariants of the two-sided skip logic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitmask as bm
+from repro.kernels import ops, ref
+from repro.kernels.bitmask_spmm import bitmask_spmm
+
+
+def _sparse(rng, shape, density, dtype=np.float32):
+    x = rng.normal(size=shape).astype(dtype)
+    x[rng.random(shape) >= density] = 0
+    return x
+
+
+@pytest.mark.parametrize("M,K,N", [(128, 128, 128), (128, 256, 256),
+                                   (256, 512, 128), (384, 256, 384)])
+@pytest.mark.parametrize("density", [0.05, 0.3, 0.8, 1.0])
+def test_kernel_matches_oracle(rng, M, K, N, density):
+    w = _sparse(rng, (K, N), density)
+    ws = bm.block_sparsify(w)
+    x = _sparse(rng, (M, K), 0.5)
+    out = bitmask_spmm(jnp.asarray(x), ws.indices, ws.vals, two_sided=False)
+    exp = ref.bitmask_spmm_ref(jnp.asarray(x), ws.indices, ws.vals)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype,rtol,atol", [
+    (jnp.float32, 1e-5, 1e-4), (jnp.bfloat16, 2e-2, 2e-1)])
+def test_kernel_dtypes(rng, dtype, rtol, atol):
+    w = _sparse(rng, (256, 256), 0.4)
+    ws = bm.block_sparsify(w)
+    ws = bm.BlockSparseMatrix(ws.indices, ws.vals.astype(dtype), ws.shape,
+                              ws.bk, ws.bn)
+    x = jnp.asarray(_sparse(rng, (128, 256), 0.5)).astype(dtype)
+    out = bitmask_spmm(x, ws.indices, ws.vals, two_sided=True)
+    exp = ref.bitmask_spmm_ref(x, ws.indices, ws.vals)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), rtol=rtol,
+                               atol=atol)
+
+
+@pytest.mark.parametrize("two_sided", [False, True])
+def test_two_sided_same_numerics(rng, two_sided):
+    """Skipped tiles are exactly-zero on the activation side, so the
+    two-sided result must equal the one-sided result exactly."""
+    w = _sparse(rng, (512, 256), 0.3)
+    ws = bm.block_sparsify(w)
+    x = _sparse(rng, (256, 512), 0.4)
+    # make whole activation tiles zero so the two-sided skip actually fires
+    x[:128, :] = 0.0
+    x[:, 128:256] = 0.0
+    out = bitmask_spmm(jnp.asarray(x), ws.indices, ws.vals,
+                       two_sided=two_sided)
+    exp = ref.two_sided_spmm_ref(jnp.asarray(x), ws.indices, ws.vals)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_all_zero_weights(rng):
+    w = np.zeros((256, 256), np.float32)
+    ws = bm.block_sparsify(w)
+    x = _sparse(rng, (128, 256), 0.5)
+    out = bitmask_spmm(jnp.asarray(x), ws.indices, ws.vals, two_sided=True)
+    assert np.all(np.asarray(out) == 0)
+
+
+def test_ops_wrapper_pads_rows(rng):
+    """sparse_dense_matmul must handle M not divisible by the block."""
+    w = _sparse(rng, (256, 128), 0.5)
+    ws = bm.block_sparsify(w)
+    x = _sparse(rng, (3, 7, 256), 0.6)  # leading dims + M=21
+    out = ops.sparse_dense_matmul(jnp.asarray(x), ws, two_sided=True)
+    exp = ops.sparse_dense_matmul_ref(jnp.asarray(x), ws)
+    assert out.shape == (3, 7, 128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_kernel_under_jit_and_grad_free(rng):
+    """The kernel is inference-only but must compose with jit."""
+    w = _sparse(rng, (256, 256), 0.5)
+    ws = bm.block_sparsify(w)
+    x = jnp.asarray(_sparse(rng, (128, 256), 0.5))
+
+    @jax.jit
+    def f(x):
+        return ops.sparse_dense_matmul(x, ws, two_sided=True).sum()
+
+    assert np.isfinite(float(f(x)))

@@ -1,0 +1,151 @@
+"""Per-architecture smoke tests: every assigned arch instantiates a reduced
+config of the same family and runs forward / train / decode on CPU with
+shape + finiteness assertions. Full configs are exercised only via the
+dry-run (ShapeDtypeStruct, no allocation)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCHS, SHAPES, ShapeConfig, load_config, \
+    load_smoke
+from repro.data.pipeline import batch_for, input_specs
+from repro.models import model as M
+
+SHAPE = ShapeConfig("smoke", 32, 2, "train")
+
+
+@pytest.fixture(scope="module")
+def smoke_state():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = load_smoke(arch)
+            params = M.init_params(jax.random.PRNGKey(0), cfg)
+            cache[arch] = (cfg, params)
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(smoke_state, arch):
+    cfg, params = smoke_state(arch)
+    batch = batch_for(cfg, SHAPE, 0)
+    extras = {k: batch[k] for k in ("prefix_embeds", "src_embeds")
+              if k in batch}
+    logits, aux = M.forward(params, batch["tokens"], cfg, **extras)
+    B, S = batch["tokens"].shape
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_cache_shape(smoke_state, arch):
+    cfg, params = smoke_state(arch)
+    B, max_len = 2, 8
+    enc_len = 4 if cfg.encoder_layers else 0
+    cache = M.init_cache(cfg, B, max_len, enc_len=enc_len)
+    if cfg.encoder_layers:
+        enc_out = M.encode(params, jnp.zeros((B, enc_len, cfg.d_model)), cfg)
+        cache = M.prefill_cache(params, cfg, cache, enc_out)
+    tok = jnp.ones((B, 1), jnp.int32)
+    logits, cache = M.decode_step(params, cfg, tok, cache, jnp.int32(0))
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ["qwen3_4b", "rwkv6_3b", "jamba_1_5_large_398b",
+                                  "seamless_m4t_medium"])
+def test_decode_consistent_with_forward(smoke_state, arch):
+    """Greedy prefill via decode_step must reproduce the full-seq logits."""
+    cfg, params = smoke_state(arch)
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 1, cfg.vocab,
+                              dtype=jnp.int32)
+    extras = {}
+    enc_len = 0
+    if cfg.encoder_layers:
+        enc_len = 4
+        extras["src_embeds"] = 0.02 * jax.random.normal(
+            jax.random.PRNGKey(2), (B, enc_len, cfg.d_model))
+    full_logits, _ = M.forward(params, toks, cfg, **extras)
+
+    cache = M.init_cache(cfg, B, S, enc_len=enc_len)
+    if cfg.encoder_layers:
+        enc_out = M.encode(params, extras["src_embeds"], cfg)
+        cache = M.prefill_cache(params, cfg, cache, enc_out)
+    outs = []
+    for t in range(S):
+        lg, cache = M.decode_step(params, cfg, toks[:, t:t + 1], cache,
+                                  jnp.int32(t))
+        outs.append(lg[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec_logits),
+                               np.asarray(full_logits), rtol=5e-2, atol=5e-2)
+
+
+def test_vlm_prefix_is_prepended(smoke_state):
+    cfg, params = smoke_state("paligemma_3b")
+    assert cfg.frontend == "vision"
+    B, S, P = 2, 8, cfg.frontend_len
+    toks = jnp.ones((B, S), jnp.int32)
+    pre = 0.02 * jax.random.normal(jax.random.PRNGKey(0), (B, P, cfg.d_model))
+    logits, _ = M.forward(params, toks, cfg, prefix_embeds=pre)
+    assert logits.shape == (B, S, cfg.padded_vocab)  # prefix stripped
+
+
+def test_abstract_params_no_allocation():
+    cfg = load_config("nemotron_4_340b")  # 340B: must not allocate
+    abs_p = M.abstract_params(cfg)
+    leaves = jax.tree.leaves(abs_p)
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+    total = sum(np.prod(l.shape) for l in leaves)
+    assert total > 3e11  # the real 340B parameter count
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The full configs carry the exact assigned hyperparameters."""
+    cfg = load_config(arch)
+    expected = {
+        "seamless_m4t_medium": (12, 1024, 16, 16, 4096, 256206),
+        "jamba_1_5_large_398b": (72, 8192, 64, 8, 24576, 65536),
+        "nemotron_4_340b": (96, 18432, 96, 8, 73728, 256000),
+        "qwen3_4b": (36, 2560, 32, 8, 9728, 151936),
+        "h2o_danube_3_4b": (24, 3840, 32, 8, 10240, 32000),
+        "yi_34b": (60, 7168, 56, 8, 20480, 64000),
+        "moonshot_v1_16b_a3b": (48, 2048, 16, 16, 1408, 163840),
+        "arctic_480b": (35, 7168, 56, 8, 4864, 32000),
+        "rwkv6_3b": (32, 2560, None, None, 8960, 65536),
+        "paligemma_3b": (18, 2048, 8, 1, 16384, 257216),
+    }[arch]
+    L, d, H, kv, ff, V = expected
+    assert cfg.n_layers == L and cfg.d_model == d and cfg.vocab == V
+    if H is not None:
+        assert cfg.n_heads == H and cfg.n_kv_heads == kv
+    if arch == "moonshot_v1_16b_a3b":
+        assert cfg.moe.num_experts == 64 and cfg.moe.top_k == 6
+        assert cfg.moe.d_ff_expert == ff
+    elif arch == "arctic_480b":
+        assert cfg.moe.num_experts == 128 and cfg.moe.top_k == 2
+        assert cfg.moe.d_ff_expert == ff
+    elif arch == "jamba_1_5_large_398b":
+        assert cfg.moe.num_experts == 16 and cfg.moe.top_k == 2
+        assert cfg.d_ff == ff
+    else:
+        assert cfg.d_ff == ff
+
+
+def test_input_specs_cover_all_shapes():
+    for arch in ARCHS:
+        cfg = load_config(arch)
+        for shape in SHAPES.values():
+            specs = input_specs(cfg, shape)
+            assert "tokens" in specs
+            assert all(isinstance(v, jax.ShapeDtypeStruct)
+                       for v in specs.values())

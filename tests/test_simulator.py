@@ -1,0 +1,128 @@
+"""Cycle-simulator reproduction of the paper's headline results (Section 5).
+
+These tests pin the *claims*, not the constants: ordering of schemes, the
+paper's speedup ratios within tolerance, breakdown structure (Fig. 8) and
+the technique-isolation staircase (Fig. 10).
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import simulator as S
+from repro.core.asic_model import TABLE3, energy_table, totals
+
+
+@pytest.fixture(scope="module")
+def table():
+    return S.speedup_table()
+
+
+def test_paper_headline_ratios(table):
+    gm = table["geomean"]
+    barista = gm["BARISTA"]
+    assert barista / gm["Dense"] == pytest.approx(5.4, rel=0.10)
+    assert barista / gm["One-sided"] == pytest.approx(2.2, rel=0.12)
+    assert barista / gm["SparTen"] == pytest.approx(1.7, rel=0.10)
+    assert barista / gm["SparTen-Iso"] == pytest.approx(2.5, rel=0.10)
+    # within ~6% of Ideal
+    assert barista / gm["Ideal"] > 0.92
+
+
+def test_scheme_ordering(table):
+    """Fig. 7 ordering: Dense < SCNN/One-sided < Synchronous/SparTen <
+    BARISTA <= Ideal, per geomean."""
+    gm = table["geomean"]
+    assert gm["Dense"] == pytest.approx(1.0)
+    assert gm["One-sided"] > gm["Dense"]
+    assert gm["SparTen"] > gm["One-sided"]
+    assert gm["BARISTA"] > gm["SparTen"]
+    assert gm["BARISTA"] > gm["Synchronous"]
+    assert gm["BARISTA"] <= gm["Ideal"] + 1e-9
+    assert gm["SCNN"] < gm["One-sided"]   # Cartesian-product overheads
+
+
+def test_speedup_tracks_sparsity_opportunity(table):
+    """Paper: BARISTA's speedup trends match the density product."""
+    def opp(b):
+        bench = S.BENCHMARKS[b]
+        return 1.0 / (bench.filter_density * bench.map_density)
+    bs = [table[b]["BARISTA"] for b in S.FIG7_ORDER]
+    opps = [opp(b) for b in S.FIG7_ORDER]
+    assert np.corrcoef(bs, opps)[0, 1] > 0.9
+
+
+def test_breakdown_components(Fig8_eps=1e-6):
+    """Fig. 8 structure: Dense has zeros, no barrier; Synchronous has
+    barrier; SparTen/no-opts have bandwidth; BARISTA has only residue."""
+    bench = S.BENCHMARKS["VGGNet"]
+    dense = S.simulate(bench, "Dense")
+    assert dense.zero > 0 and dense.barrier == 0
+    sync = S.simulate(bench, "Synchronous")
+    assert sync.barrier > 0 and sync.zero == 0
+    sparten = S.simulate(bench, "SparTen")
+    noopts = S.simulate(bench, "BARISTA-no-opts")
+    assert noopts.bandwidth > sparten.bandwidth  # no-opts refetch storm
+    barista = S.simulate(bench, "BARISTA")
+    assert barista.bandwidth < sparten.bandwidth
+    assert barista.barrier < sync.barrier
+    ideal = S.simulate(bench, "Ideal")
+    assert barista.cycles >= ideal.cycles
+
+
+def test_isolation_staircase():
+    """Fig. 10: each added technique improves (or holds) the geomean."""
+    iso = S.isolation_table()["geomean"]
+    labels = ["BARISTA-no-opts", "+telescoping", "+coloring",
+              "+hierarchical", "+round-robin (BARISTA)"]
+    vals = [iso[l] for l in labels]
+    for a, b in zip(vals, vals[1:]):
+        assert b >= a * 0.999
+    assert vals[-1] > 2 * vals[0]  # the opts matter at scale
+
+
+def test_unlimited_buffer_closes_gap():
+    gm = S.speedup_table()["geomean"]
+    assert gm["Unlimited-buffer"] >= gm["BARISTA"]
+    assert gm["Unlimited-buffer"] == pytest.approx(gm["Ideal"], rel=0.02)
+
+
+def test_buffer_sensitivity_monotone():
+    out = S.buffer_sensitivity((4, 6, 8))
+    for bench, row in out.items():
+        assert row["no-opts"] > row["opts@4MB"]  # Fig. 11 dramatic drop
+        assert row["opts@4MB"] >= row["opts@6MB"] - 1e-9
+        assert row["opts@6MB"] >= row["opts@8MB"] - 1e-9
+
+
+# --------------------------------------------------------------------------
+# ASIC model (Table 3 / Fig. 9)
+# --------------------------------------------------------------------------
+def test_table3_totals_match_paper():
+    assert totals("BARISTA")["area_mm2"] == pytest.approx(212.9, abs=0.2)
+    assert totals("BARISTA")["power_w"] == pytest.approx(169.8, abs=0.5)
+    # NOTE: the paper's SparTen component rows sum to 367.9 mm^2 although
+    # its stated total is 402.7 — we reproduce the components (the paper's
+    # total row appears to be inconsistent with its own breakdown).
+    assert totals("SparTen")["area_mm2"] == pytest.approx(367.9, abs=0.2)
+    assert totals("Dense")["area_mm2"] == pytest.approx(154.1, abs=0.2)
+    # paper: BARISTA 38% more area, ~2x power vs Dense
+    assert totals("BARISTA")["area_mm2"] / totals("Dense")["area_mm2"] == \
+        pytest.approx(1.38, abs=0.03)
+
+
+def test_energy_ordering_fig9():
+    et = energy_table()
+    # geomean compute energy normalized to dense
+    def gmean(scheme):
+        vals = [et[b][scheme].compute_total / et[b]["Dense"].compute_total
+                for b in et]
+        return math.exp(np.mean(np.log(vals)))
+    one = gmean("One-sided")
+    st_ = gmean("SparTen")
+    ba = gmean("BARISTA")
+    assert one > 1.0          # paper: One-sided costs MORE than Dense
+    assert ba < st_           # BARISTA slightly below SparTen
+    assert ba < one           # two-sided beats one-sided on energy
+    # paper headline: ~19% lower compute energy than Dense on average
+    assert ba == pytest.approx(0.81, abs=0.12)

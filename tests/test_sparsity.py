@@ -1,0 +1,110 @@
+"""Sparsity substrate: pruning, instrumentation, sparse-FFN swap-in,
+expert balancing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sparse import prune_by_magnitude
+from repro.sparsity import expert_balance as eb
+from repro.sparsity import instrument, pruning
+from repro.sparsity import sparse_ffn as sf
+
+
+@given(st.floats(0.05, 1.0), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_prune_by_magnitude_density(density, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(256, 64)).astype(np.float32)
+    m = prune_by_magnitude(w, density)
+    got = m.mean()
+    assert got == pytest.approx(density, abs=0.02)
+    # kept entries are the largest-|w| per column
+    for c in range(0, 64, 16):
+        kept = np.abs(w[m[:, c] > 0, c])
+        dropped = np.abs(w[m[:, c] == 0, c])
+        if kept.size and dropped.size:
+            assert kept.min() >= dropped.max() - 1e-7
+
+
+def test_prune_masks_skip_small_and_norms(rng):
+    params = {"w_in": jnp.asarray(rng.normal(size=(64, 64)), jnp.float32),
+              "ln1": jnp.ones((64,)),
+              "w_out": jnp.asarray(rng.normal(size=(8, 8)), jnp.float32)}
+    masks = pruning.prune_masks(params, pruning.PruneConfig(
+        density=0.5, min_size=1024))
+    assert masks["w_in"] is not None
+    assert masks["ln1"] is None
+    assert masks["w_out"] is None  # below min_size
+
+
+def test_mask_gradients_zeroes_pruned(rng):
+    g = {"w_in": jnp.ones((64, 64))}
+    m = {"w_in": jnp.zeros((64, 64)).at[0, 0].set(1)}
+    out = pruning.mask_gradients(g, m)
+    assert float(out["w_in"].sum()) == 1.0
+
+
+def test_instrument_densities(rng):
+    x = np.zeros((256, 256), np.float32)
+    x[:64, :64] = 1.0  # one dense corner
+    probe = instrument.ffn_sparsity_probe(jnp.asarray(x))
+    assert float(probe["scalar"]) == pytest.approx(
+        64 * 64 / (256 * 256))
+    assert float(probe["tile_128"]) == pytest.approx(0.25)  # 1 of 4 tiles
+    assert float(probe["scalar"]) <= float(probe["tile_128"]) \
+        <= 1.0
+
+
+@pytest.mark.parametrize("act", ["relu", "relu2", "swiglu"])
+def test_sparse_ffn_matches_dense_reference(rng, act):
+    p = {"w_in": rng.normal(size=(128, 256)).astype(np.float32),
+         "w_out": rng.normal(size=(256, 128)).astype(np.float32)}
+    if act == "swiglu":
+        p["w_gate"] = rng.normal(size=(128, 256)).astype(np.float32)
+    ffn = sf.build_sparse_ffn(p, act, density=0.4, num_shards=4)
+    x = rng.normal(size=(64, 128)).astype(np.float32)
+    x[rng.random(x.shape) < 0.5] = 0
+    out = np.asarray(ffn(jnp.asarray(x)))
+    exp = np.asarray(sf.dense_reference(ffn, jnp.asarray(x)))
+    np.testing.assert_allclose(out, exp, rtol=2e-4, atol=2e-3)
+    assert np.isfinite(out).all()
+
+
+def test_sparse_ffn_weight_density_reduced(rng):
+    w_in = rng.normal(size=(256, 512)).astype(np.float32)
+    w_in[:128] = 0.0  # a dead K-chunk (e.g. pruned input features)
+    p = {"w_in": w_in,
+         "w_out": rng.normal(size=(512, 256)).astype(np.float32)}
+    ffn = sf.build_sparse_ffn(p, "relu", density=0.25, num_shards=4)
+    # chunk-level density is higher than scalar density but below 1:
+    # per-scalar pruning alone rarely empties a 128x128 tile (recorded
+    # per-scalar->chunk granularity gap), but structurally-dead chunks are
+    # skipped exactly
+    assert ffn.w_in.density() <= 0.5
+
+
+def test_expert_tracker_and_rebalance():
+    tr = eb.ExpertLoadTracker(num_experts=16)
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        tr.update(rng.lognormal(0, 1, 16))
+    perm = eb.rebalance(tr, num_shards=4)
+    assert sorted(perm.tolist()) == list(range(16))
+    before = tr.imbalance(4)
+    after = eb.placement_imbalance(tr.load, perm, 4)
+    assert after <= before + 1e-9
+
+
+def test_expert_counts():
+    ids = jnp.asarray([[0, 1], [1, 2], [1, 3]], jnp.int32)
+    c = np.asarray(eb.expert_counts(ids, 4))
+    np.testing.assert_array_equal(c, [1, 3, 1, 1])
+
+
+def test_rebalance_rotates_with_step():
+    tr = eb.ExpertLoadTracker(num_experts=16)
+    tr.update(np.random.default_rng(1).lognormal(0, 1, 16))
+    p0, p1 = eb.rebalance(tr, 4, step=0), eb.rebalance(tr, 4, step=1)
+    assert not np.array_equal(p0, p1)  # round-robin alternation

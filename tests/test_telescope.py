@@ -1,0 +1,59 @@
+"""Telescoping request combining / snarfing model (paper Section 3.2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import telescope
+
+
+def test_telescoping_combines_to_few_fetches():
+    """Paper: 64 in-sync-ish requests -> ~3-5 fetches with telescoping."""
+    rng = np.random.default_rng(0)
+    fetches = []
+    for _ in range(32):
+        arr = telescope.sample_arrivals(64, spread=1000.0, rng=rng)
+        r = telescope.telescoping_combine(arr, fetch_latency=40.0)
+        fetches.append(r.fetches)
+    mean = np.mean(fetches)
+    assert 1.0 <= mean <= 7.0  # paper: 5 groups -> ~3 effective refetches
+    assert mean < 64
+
+
+@given(st.integers(2, 128), st.floats(1.0, 1e5), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_combine_bounds(n, spread, seed):
+    rng = np.random.default_rng(seed)
+    arr = telescope.sample_arrivals(n, spread, rng)
+    r = telescope.telescoping_combine(arr, fetch_latency=40.0)
+    assert 1 <= r.fetches <= len(telescope.DEFAULT_TELESCOPE)
+    assert sum(r.combined) == n          # every request served
+    assert r.stall_cycles >= 0.0
+
+
+def test_zero_spread_single_fetch():
+    """Perfectly in-sync nodes need exactly one fetch."""
+    arr = np.zeros(64)
+    r = telescope.telescoping_combine(arr, fetch_latency=40.0)
+    assert r.fetches == 1
+
+
+def test_uncombined_refetch_matches_paper_order():
+    """Without combining, most of 64 straying requests refetch (paper: 58)."""
+    rng = np.random.default_rng(1)
+    f = telescope.uncombined_fetches(64, spread=120_000.0,
+                                     fetch_latency=40.0, rng=rng)
+    assert f > 40  # the no-opts regime the paper reports as ~58
+
+
+def test_refetch_curve_monotone_in_buffer_depth():
+    curve = telescope.refetch_curve(64, [1, 4, 8], spread=4000.0,
+                                    fetch_latency=40.0)
+    assert curve[0] >= curve[1] >= curve[2] - 1e-9
+
+
+def test_snarfing_few_fetches_with_free_buffers():
+    rng = np.random.default_rng(2)
+    f = telescope.snarf_fetches(64, buffer_free_prob=0.9, rng=rng)
+    assert f <= 4.0  # paper: ~2 refetches per filter
+    f_low = telescope.snarf_fetches(64, buffer_free_prob=0.05, rng=rng)
+    assert f_low > f  # scarce buffers -> more refetches

@@ -1,0 +1,122 @@
+"""Training substrate: loss, microbatch equivalence, optimizer, loop with
+checkpoint/restart, pruned-mask training."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeConfig, load_smoke
+from repro.data.pipeline import batch_for
+from repro.models import model as M
+from repro.optim import adamw
+from repro.sparsity import pruning
+from repro.train.loop import TrainLoopConfig, train
+from repro.train.train_step import cross_entropy, make_train_step
+
+SHAPE = ShapeConfig("t", 32, 4, "train")
+
+
+def _setup(arch="qwen3_4b"):
+    cfg = load_smoke(arch)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_cross_entropy_gold():
+    logits = jnp.full((2, 3, 8), -10.0).at[:, :, 1].set(10.0)
+    labels = jnp.ones((2, 3), jnp.int32)
+    ce, _ = cross_entropy(logits, labels)
+    assert float(ce) < 1e-3
+
+
+def test_microbatch_accumulation_matches_single():
+    """grad accumulation over microbatches == one big batch (same math)."""
+    cfg, params = _setup()
+    opt_cfg = adamw.AdamWConfig(warmup_steps=0, clip_norm=None,
+                                weight_decay=0.0)
+    batch = batch_for(cfg, SHAPE, 0)
+    s1 = make_train_step(cfg, opt_cfg, microbatches=1)
+    s2 = make_train_step(cfg, opt_cfg, microbatches=2)
+    p1, _, m1 = jax.jit(s1)(params, adamw.init(params), batch)
+    p2, _, m2 = jax.jit(s2)(params, adamw.init(params), batch)
+    # CE means over different token counts differ by microbatch weighting
+    # only when sequence lengths differ; here they are equal so loss matches
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-4)
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)))), p1, p2)
+    assert max(jax.tree.leaves(d)) < 5e-2  # bf16-ish tolerance on update
+
+
+def test_adamw_descends():
+    cfg, params = _setup()
+    step = jax.jit(make_train_step(cfg, adamw.AdamWConfig(lr=1e-3,
+                                                          warmup_steps=0)))
+    opt = adamw.init(params)
+    losses = []
+    for i in range(8):
+        batch = batch_for(cfg, SHAPE, 0)  # same batch -> must overfit
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.1
+
+
+def test_loop_checkpoint_restart(tmp_path):
+    cfg, _ = _setup()
+    d = str(tmp_path / "ck")
+    lc = TrainLoopConfig(steps=6, ckpt_every=3, ckpt_dir=d, log_every=100)
+    st1 = train(cfg, SHAPE, lc)
+    assert st1.step == 6
+    assert os.path.isdir(os.path.join(d, "step_00000006"))
+    # crash-restart: a new loop resumes from step 6 and continues to 9
+    lc2 = TrainLoopConfig(steps=9, ckpt_every=3, ckpt_dir=d, log_every=100)
+    st2 = train(cfg, SHAPE, lc2)
+    assert st2.step == 9
+    assert int(st2.opt.step) == 9  # optimizer state restored, not reset
+
+
+def test_schedule_warmup_and_decay():
+    c = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_frac=0.1)
+    assert float(adamw.schedule(c, jnp.int32(5))) == pytest.approx(0.5)
+    assert float(adamw.schedule(c, jnp.int32(10))) == pytest.approx(1.0, abs=0.01)
+    assert float(adamw.schedule(c, jnp.int32(100))) == pytest.approx(0.1, abs=0.01)
+
+
+def test_pruned_training_keeps_zeros():
+    """Fixed-mask fine-tuning: pruned positions stay exactly zero."""
+    cfg, params = _setup()
+    pc = pruning.PruneConfig(density=0.5, min_size=512)
+    masks = pruning.prune_masks(params, pc)
+    params = pruning.apply_masks(params, masks)
+    base = make_train_step(cfg, adamw.AdamWConfig(warmup_steps=0))
+    step = jax.jit(pruning.make_pruned_train_step(base, masks))
+    opt = adamw.init(params)
+    for i in range(3):
+        params, opt, m = step(params, opt, batch_for(cfg, SHAPE, i))
+    flat_p, _ = jax.tree_util.tree_flatten_with_path(params)
+    flat_m, _ = jax.tree_util.tree_flatten_with_path(masks, is_leaf=lambda x: x is None)
+    checked = 0
+    for (kp, p), (_, mk) in zip(flat_p, flat_m):
+        if mk is None:
+            continue
+        zeros = np.asarray(p)[np.asarray(mk) == 0]
+        assert np.all(zeros == 0), kp
+        checked += 1
+    assert checked > 0
+    assert np.isfinite(m["loss"])
+
+
+def test_moe_expert_perm_is_applied():
+    """Permuting expert slots must not change which experts exist, and the
+    permuted model still trains."""
+    cfg, params = _setup("moonshot_v1_16b_a3b")
+    E = cfg.moe.num_experts
+    perm = np.random.default_rng(0).permutation(E).astype(np.int32)
+    params["expert_perm"] = jnp.asarray(perm)
+    step = jax.jit(make_train_step(cfg, adamw.AdamWConfig()))
+    p2, _, m = step(params, adamw.init(params), batch_for(cfg, SHAPE, 0))
+    assert np.isfinite(float(m["loss"]))
+    np.testing.assert_array_equal(np.asarray(p2["expert_perm"]), perm)
