@@ -3,7 +3,7 @@
 Hybrid Mamba + attention (1:7 attn:mamba interleave), MoE 16e top-2 every
 other block. BARISTA applies to the MoE experts (greedy density balancing
 -> expert placement) and the expert FFNs; the Mamba recurrence itself is
-matmul-sparsity-free (see DESIGN.md §Arch-applicability).
+matmul-sparsity-free (see ARCHITECTURE.md §Arch-applicability).
 """
 from repro.configs.base import MambaConfig, ModelConfig, MoEConfig
 

@@ -1,7 +1,7 @@
 """RWKV-6 (Finch) 3B [arXiv:2404.05892; hf].
 
 Attention-free, data-dependent decay. The WKV recurrence is
-matmul-sparsity-free (DESIGN.md §Arch-applicability), but channel-mix uses
+matmul-sparsity-free (ARCHITECTURE.md §Arch-applicability), but channel-mix uses
 squared ReLU => the BARISTA two-sided sparse path applies there.
 """
 from repro.configs.base import ModelConfig

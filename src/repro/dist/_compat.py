@@ -1,0 +1,36 @@
+"""JAX version compatibility for the distribution substrate.
+
+The test-suite and launchers target the public ``jax.shard_map`` API
+(with its ``check_vma`` flag). Older jaxlib builds (such as the 0.4.x
+line pinned in this image) only ship ``jax.experimental.shard_map`` with
+the equivalent flag spelled ``check_rep``. Importing :mod:`repro.dist`
+installs a thin forwarding shim under the public name.
+
+The global assignment (rather than a local wrapper) is deliberate: the
+call sites that need it — ``tests/test_dist.py`` and any user code
+written against current JAX — call ``jax.shard_map`` directly, so the
+shim must live at that name. On new jaxlib this module is a no-op.
+"""
+from __future__ import annotations
+
+import jax
+
+if not hasattr(jax, "shard_map"):
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    def _shard_map_compat(f, mesh=None, in_specs=None, out_specs=None,
+                          check_vma=None, check_rep=None, **kwargs):
+        """``jax.shard_map`` signature adapter over the experimental API.
+
+        ``check_vma`` (new spelling) wins over ``check_rep`` (old) when
+        both are given; defaults to the experimental API's default.
+        """
+        if check_vma is not None:
+            check_rep = bool(check_vma)
+        elif check_rep is None:
+            check_rep = True
+        return _exp_shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_rep,
+                              **kwargs)
+
+    jax.shard_map = _shard_map_compat

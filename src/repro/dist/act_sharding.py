@@ -1,0 +1,74 @@
+"""Sequence-parallel activation sharding constraints.
+
+BARISTA colors its output buffers so a compute node can start the next
+input map without waiting for its siblings to drain the previous one
+(paper Section 3.3.1). The software analog: between transformer blocks
+the residual stream lives *sequence-sharded* across the tensor-parallel
+axes, so each TP boundary lowers to a reduce-scatter + all-gather pair
+instead of a full all-reduce — no rank ever waits for activations it is
+not about to read.
+
+The plumbing is deliberately ambient: :func:`act_sharding` installs a
+(mesh, spec) context and ``models/model.py`` calls
+:func:`constrain_residual` on the stream after every block. Outside the
+context (or on shapes the spec cannot tile: decode steps with S=1,
+non-3D tensors, non-dividing extents) the call is an exact no-op, so
+single-device smoke tests and the sharded production path share one
+model implementation.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import List, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.partitioning import dp_axes, tp_axes
+
+# innermost-active context wins; plain list (JAX traces are single-threaded
+# per-context here, and the launchers install exactly one context)
+_STACK: List[Tuple[object, P]] = []
+
+
+def sp_spec(mesh) -> P:
+    """[B, S, D] sequence-parallel spec: batch on the data axes, sequence
+    on the model axes, features replicated."""
+    return P(tuple(dp_axes(mesh)), tuple(tp_axes(mesh)), None)
+
+
+@contextlib.contextmanager
+def act_sharding(mesh, spec: P):
+    """Install ``spec`` (on ``mesh``) as the ambient residual constraint."""
+    _STACK.append((mesh, spec))
+    try:
+        yield
+    finally:
+        _STACK.pop()
+
+
+def _axis_product(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    axes = (entry,) if isinstance(entry, str) else tuple(entry)
+    shape = mesh.shape
+    out = 1
+    for a in axes:
+        out *= int(shape[a])
+    return out
+
+
+def constrain_residual(x):
+    """Constrain a [B, S, D] residual to the ambient SP spec (no-op when
+    no context is installed or the spec cannot tile ``x``)."""
+    if not _STACK:
+        return x
+    mesh, spec = _STACK[-1]
+    if x.ndim != len(spec):
+        return x
+    if x.ndim >= 2 and x.shape[1] == 1:
+        return x  # decode: a single position cannot be sequence-sharded
+    for dim, entry in zip(x.shape, tuple(spec)):
+        if dim % _axis_product(mesh, entry) != 0:
+            return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

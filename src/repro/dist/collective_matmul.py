@@ -1,0 +1,64 @@
+"""Overlap-friendly collective matmuls under ``shard_map``.
+
+BARISTA's snarfing (paper Section 3.2) lets a node reuse a filter block
+that happens to fly past on the shared bus instead of re-requesting it.
+The collective-matmul analog: instead of an up-front ``all_gather``
+followed by one big matmul (every rank idles through the gather), the
+activation blocks ride a ``ppermute`` ring and each rank multiplies
+whatever block just arrived — communication for step ``s+1`` overlaps
+the matmul of step ``s``.
+
+Both entry points are *local* functions meant to run inside
+``jax.shard_map`` (see tests/test_dist.py for the exact specs):
+
+* :func:`allgather_matmul` — x is column-sharded, the weight is
+  replicated as a stack of per-shard row blocks; returns the full
+  product on every rank.
+* :func:`matmul_reducescatter` — x column-sharded against a row-sharded
+  weight; partial products reduce-scatter along the output dim (XLA
+  lowers ``psum_scatter`` to the same ring).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def allgather_matmul(x_block, w_stack, axis_name: str):
+    """Ring all-gather matmul: ``sum_j x_j @ w_stack[j]`` on every rank.
+
+    ``x_block`` [M, K/n] is this rank's column block of x; ``w_stack``
+    [n, K/n, N] is the replicated weight, pre-split into the row blocks
+    matching each rank's columns. The x blocks rotate around the ring;
+    each hop's transfer overlaps the previous hop's matmul.
+    """
+    n = w_stack.shape[0]
+    idx = jax.lax.axis_index(axis_name)
+
+    def block(i):
+        return jax.lax.dynamic_index_in_dim(w_stack, jnp.mod(i, n), axis=0,
+                                            keepdims=False)
+
+    acc = x_block @ block(idx)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    chunk = x_block
+    for s in range(1, n):
+        chunk = jax.lax.ppermute(chunk, axis_name, perm)
+        # after s hops this rank holds the block owned by rank (idx - s)
+        acc = acc + chunk @ block(idx - s)
+    return acc
+
+
+def matmul_reducescatter(x_block, w_block, axis_name: str):
+    """``x @ w`` with the output sharded along its last dim.
+
+    ``x_block`` [M, K/n] column-sharded, ``w_block`` [K/n, N] row-sharded:
+    the local partial product is exact except for the cross-rank sum,
+    which ``psum_scatter`` performs while scattering the output columns —
+    each rank keeps only its own [M, N/n] tile, so no rank ever
+    materializes (or waits for) the full output.
+    """
+    partial = x_block @ w_block
+    return jax.lax.psum_scatter(partial, axis_name,
+                                scatter_dimension=partial.ndim - 1,
+                                tiled=True)

@@ -1,0 +1,98 @@
+"""Elastic mesh planning, straggler detection, failure simulation.
+
+BARISTA's Section 3.4 balances work dynamically because static
+assignment cannot predict which units run long. At datacenter scale the
+"units" are hosts: the loop needs to (a) re-plan the mesh when devices
+die (keep model parallelism intact, give up data parallelism), (b) spot
+hosts that are *persistently* slow without over-reacting to one-off
+blips, and (c) rehearse failures deterministically in tests. All three
+are plain host-side Python — nothing here traces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    """A (pod, data, model) factorization of the surviving devices."""
+    pod: int
+    data: int
+    model: int
+
+    @property
+    def devices(self) -> int:
+        return self.pod * self.data * self.model
+
+    def axis_shape(self) -> Dict[str, int]:
+        out = {"data": self.data, "model": self.model}
+        if self.pod > 1:
+            out = {"pod": self.pod, **out}
+        return out
+
+
+def plan_mesh(alive_devices: int, *, model_parallel: int = 16,
+              pod_size: int = 256) -> MeshPlan:
+    """Largest usable mesh on ``alive_devices``.
+
+    Model parallelism is load-bearing (the weights are sharded over it)
+    and never shrinks; failures cost data parallelism instead. Whole
+    pods keep the pod axis; a ragged count (mid-pod failure) collapses
+    to a single logical pod spanning whatever full model-parallel
+    groups survive.
+    """
+    if alive_devices < model_parallel:
+        raise ValueError(
+            f"{alive_devices} devices cannot host model_parallel="
+            f"{model_parallel}")
+    if alive_devices % pod_size == 0 and pod_size % model_parallel == 0:
+        pods = alive_devices // pod_size
+        return MeshPlan(pods, pod_size // model_parallel, model_parallel)
+    # ragged count (mid-pod failure) or pod-straddling model groups:
+    # one logical pod over whatever full model-parallel groups survive
+    data = alive_devices // model_parallel
+    return MeshPlan(1, data, model_parallel)
+
+
+class StragglerDetector:
+    """Flag hosts whose step time is persistently above the fleet median.
+
+    A host is *slow* in one round when its time exceeds ``threshold`` x
+    the median; it is *flagged* only after ``patience`` consecutive slow
+    rounds (transient blips — GC, checkpoint writes — reset nothing
+    durable, a single fast round clears the strikes).
+    """
+
+    def __init__(self, num_hosts: int, patience: int = 3,
+                 threshold: float = 1.5):
+        self.num_hosts = num_hosts
+        self.patience = patience
+        self.threshold = threshold
+        self._strikes = np.zeros(num_hosts, dtype=np.int64)
+
+    def update(self, step_times: Sequence[float]) -> List[int]:
+        """Record one round of per-host step times; return flagged hosts."""
+        t = np.asarray(step_times, dtype=np.float64)
+        assert t.shape == (self.num_hosts,), (t.shape, self.num_hosts)
+        slow = t > self.threshold * np.median(t)
+        self._strikes = np.where(slow, self._strikes + 1, 0)
+        return [int(i) for i in np.nonzero(
+            self._strikes >= self.patience)[0]]
+
+
+class FailureSimulator:
+    """Deterministic device-failure schedule for fault-tolerance tests.
+
+    ``fail_at`` maps step -> number of devices lost at that step (losses
+    are cumulative and permanent).
+    """
+
+    def __init__(self, fail_at: Mapping[int, int]):
+        self.fail_at = dict(fail_at)
+
+    def surviving(self, step: int, total_devices: int) -> int:
+        lost = sum(n for s, n in self.fail_at.items() if s <= step)
+        return total_devices - lost

@@ -1,0 +1,280 @@
+"""Tree-structured PartitionSpecs for params, batches and decode caches.
+
+This is the buffer-hierarchy map of the reproduction: it decides which
+tensor dimension lives on which mesh axis, the way BARISTA's hierarchy
+decides which operand lives in the wide shared buffers vs the narrow
+private ones. Three layers of API:
+
+* :func:`param_specs` / :func:`param_shardings` — mesh-unaware specs /
+  mesh-bound ``NamedSharding`` trees for the whole parameter pytree,
+  with optional FSDP (a ``data``-axis shard on one free dim of every
+  large weight).
+* :func:`make_rules` / :func:`leaf_spec` — head-count-aware rules for the
+  factored model axis (``model1 x model2``): attention tensors shard on
+  the largest axis prefix that divides their head count instead of being
+  replicated, while FFN/vocab keep full tensor parallelism.
+* :func:`batch_spec` / :func:`cache_spec` / :func:`cache_shardings` —
+  input batches (data-parallel on the leading dim) and decode caches
+  (batch-sharded; KV heads sharded under rules, or sequence-sharded in
+  the measured baseline all-gather-per-token mode).
+
+Conventions: every leaf of ``blocks``/``enc_blocks`` carries a leading
+stacked-periods axis (see ``models/model.py``), which is never sharded.
+Specs only ever shard a dim the mesh extent divides; when sizes are
+unknown (mesh-unaware :func:`param_specs`) an evenness guard applies.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Mapping, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# leaf names sharded column-parallel (output-feature dim on TP axes)
+_COL = {"wq", "wk", "wv", "w_in", "w_gate", "in_proj",
+        "w_r", "w_k", "w_v", "w_g", "w_w"}
+# leaf names sharded row-parallel (input-feature dim on TP axes)
+_ROW = {"wo", "w_out", "out_proj", "w_o"}
+# MoE expert-stacked weights: shard the expert dim (expert parallelism)
+_MOE_EXPERT = {"w_in", "w_out", "w_gate"}
+# data-parallel mesh axis names, outermost first
+_DP_NAMES = ("pod", "data")
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """Head-aligned sharding rules for one (mesh, architecture) pair.
+
+    ``tp`` are the full tensor-parallel axes (FFN, vocab, experts);
+    ``q_axes``/``kv_axes`` are the prefixes of ``tp`` that divide the
+    query / KV head counts (empty tuple = replicate, e.g. MQA caches).
+    ``sizes`` maps axis name -> extent when known, enabling exact
+    divisibility checks in :func:`leaf_spec`.
+    """
+    tp: Tuple[str, ...]
+    q_axes: Tuple[str, ...]
+    kv_axes: Tuple[str, ...]
+    sizes: Optional[Mapping[str, int]] = None
+
+
+# mesh-unaware baseline: single megatron-style "model" axis
+_BASELINE = Rules(tp=("model",), q_axes=("model",), kv_axes=("model",))
+
+
+def _axis_sizes(mesh) -> Mapping[str, int]:
+    shape = mesh.shape  # Mesh.shape is an axis-name -> size mapping
+    return {a: int(shape[a]) for a in mesh.axis_names}
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    """Data-parallel axes of ``mesh``, outermost (pod) first."""
+    return tuple(a for a in _DP_NAMES if a in tuple(mesh.axis_names))
+
+
+def tp_axes(mesh) -> Tuple[str, ...]:
+    """Tensor-parallel axes of ``mesh`` (``model`` or ``model1, model2``)."""
+    return tuple(a for a in mesh.axis_names if str(a).startswith("model"))
+
+
+def make_rules(mesh, n_heads: int, n_kv_heads: int) -> Rules:
+    """Head-count-aware rules for ``mesh``.
+
+    On a factored model axis (``model1=8, model2=2``) attention tensors
+    shard on the largest axis *prefix* whose product divides the head
+    count, so e.g. yi-34b's 56 query heads (56 % 16 != 0) still get
+    8-way head sharding instead of replication. A single unfactored
+    ``model`` axis is the measured baseline: everything shards on it
+    (attention projections shard the flattened head*dh dim).
+    """
+    sizes = _axis_sizes(mesh)
+    tp = tp_axes(mesh)
+    if len(tp) <= 1:
+        return Rules(tp=tp, q_axes=tp, kv_axes=tp, sizes=sizes)
+
+    def head_axes(heads: int) -> Tuple[str, ...]:
+        pre = list(tp)
+        while pre and (heads <= 0 or heads % math.prod(
+                sizes[a] for a in pre) != 0):
+            pre.pop()
+        return tuple(pre)
+
+    return Rules(tp=tp, q_axes=head_axes(n_heads),
+                 kv_axes=head_axes(n_kv_heads), sizes=sizes)
+
+
+def _entry(axes: Sequence[str]):
+    """PartitionSpec entry: bare name for one axis, tuple for several."""
+    axes = tuple(axes)
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def _divides(dim: int, axes: Sequence[str], rules: Rules) -> bool:
+    axes = tuple(axes)
+    if not axes:
+        return False
+    if rules.sizes is not None:
+        return dim % math.prod(rules.sizes[a] for a in axes) == 0
+    return dim % 2 == 0  # sizes unknown: require an even extent at least
+
+
+def _key_name(k) -> str:
+    return str(getattr(k, "key", getattr(k, "name", k)))
+
+
+def leaf_spec(path, shape: Tuple[int, ...], rules: Optional[Rules] = None
+              ) -> P:
+    """PartitionSpec for one parameter leaf, by tree path + shape.
+
+    ``path`` is a sequence of key names (strings or jax KeyPath entries).
+    """
+    r = rules or _BASELINE
+    names = tuple(_key_name(k) for k in path)
+    name = names[-1] if names else ""
+    nd = len(shape)
+    entries: list = [None] * nd
+
+    def put(dim: int, axes: Sequence[str]) -> None:
+        if nd > dim >= -nd and _divides(shape[dim], axes, r):
+            entries[dim] = _entry(axes)
+
+    if name == "embed":
+        put(0, r.tp)                       # vocab-sharded
+    elif name == "lm_head":
+        put(-1, r.tp)                      # untied head: vocab-sharded
+    elif "moe" in names and "shared" not in names:
+        if name in _MOE_EXPERT and nd >= 3:
+            put(nd - 3, r.tp)              # expert parallelism
+        # router & everything else in the MoE dict: replicated
+    elif name in _COL and nd >= 2:
+        axes = r.tp
+        if name == "wq":
+            axes = r.q_axes
+        elif name in ("wk", "wv"):
+            axes = r.kv_axes
+        put(-1, axes)
+    elif name in _ROW and nd >= 2:
+        put(-2, r.q_axes if name == "wo" else r.tp)
+    return P(*entries)
+
+
+def _fsdp_spec(spec: P, shape: Tuple[int, ...], fsdp: int) -> P:
+    """Add a ``data``-axis shard on the largest free dim (ZeRO-3 style)."""
+    if fsdp <= 1 or len(shape) < 2:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    best, best_dim = -1, -1
+    for i, (dim, e) in enumerate(zip(shape, entries)):
+        if e is None and dim % fsdp == 0 and dim > best:
+            best, best_dim = dim, i
+    if best_dim < 0:
+        return spec
+    entries[best_dim] = "data"
+    return P(*entries)
+
+
+def param_specs(abs_params, fsdp: int = 0, rules: Optional[Rules] = None):
+    """PartitionSpec pytree matching ``abs_params`` (ShapeDtypeStructs).
+
+    ``fsdp > 1`` additionally shards one free dim of every matrix-shaped
+    leaf over the ``data`` axis (the dim must divide by ``fsdp``).
+    """
+    def one(path, leaf):
+        spec = leaf_spec(path, leaf.shape, rules)
+        if fsdp:
+            spec = _fsdp_spec(spec, leaf.shape, int(fsdp))
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, abs_params)
+
+
+def param_shardings(mesh, abs_params, fsdp: bool = False,
+                    rules: Optional[Rules] = None):
+    """``NamedSharding`` pytree for ``abs_params`` on ``mesh``.
+
+    Truthy ``fsdp`` shards over the full ``data`` axis (divisibility is
+    checked against the actual axis extent — mesh-bound FSDP has no
+    partial factor). When ``rules`` is None, baseline rules are derived
+    from the mesh axis names with exact size-divisibility checks.
+    """
+    sizes = _axis_sizes(mesh)
+    if rules is None:
+        tp = tp_axes(mesh)
+        rules = Rules(tp=tp, q_axes=tp, kv_axes=tp, sizes=sizes)
+    elif rules.sizes is None:
+        rules = dataclasses.replace(rules, sizes=sizes)
+    fsdp_n = sizes.get("data", 1) if fsdp else 0
+    specs = param_specs(abs_params, fsdp=fsdp_n, rules=rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# batches and decode caches
+# ---------------------------------------------------------------------------
+def batch_spec(mesh) -> P:
+    """Spec for a [B, S] token batch: batch over the data-parallel axes."""
+    return P(dp_axes(mesh) or None, None)
+
+
+_ATTN_CACHE = ("k", "v", "cross_k", "cross_v")
+
+
+def cache_spec(mesh, max_len: int, name: str, ndim: int,
+               rules: Optional[Rules] = None) -> P:
+    """Spec for one decode-cache leaf.
+
+    Attention K/V caches are [periods, B, S_max, H_kv, d_head]: batch is
+    data-sharded; under ``rules`` the KV-head dim shards on ``kv_axes``
+    (head-sharded decode); the baseline instead shards the sequence dim
+    on the unfactored ``model`` axis — the measured
+    all-gather-per-token mode. SSM/RWKV state shards the batch dim only.
+    """
+    entries: list = [None] * ndim
+    dp = dp_axes(mesh)
+    if ndim >= 2 and dp:
+        entries[1] = tuple(dp)
+    if name in _ATTN_CACHE and ndim >= 5:
+        if rules is not None:
+            if rules.kv_axes:
+                entries[3] = tuple(rules.kv_axes)
+        else:
+            tp = tp_axes(mesh)
+            sizes = _axis_sizes(mesh)
+            if len(tp) == 1 and max_len % sizes[tp[0]] == 0:
+                entries[2] = tp[0]
+    return P(*entries)
+
+
+def cache_shardings(mesh, abs_cache, batch: int,
+                    rules: Optional[Rules] = None):
+    """``NamedSharding`` pytree for a decode cache (see ``M.init_cache``).
+
+    Divisibility is validated against the actual mesh extents — the
+    batch dim against the caller-declared runtime ``batch``, the rest
+    against the abstract leaf shapes; any dim that does not divide
+    falls back to replicated.
+    """
+    sizes = _axis_sizes(mesh)
+
+    def prod(axes) -> int:
+        return math.prod(sizes[a] for a in axes) if axes else 1
+
+    def one(path, leaf):
+        name = _key_name(path[-1])
+        max_len = leaf.shape[2] if leaf.ndim >= 3 else 0
+        spec = cache_spec(mesh, max_len, name, leaf.ndim, rules)
+        entries = list(spec)
+        for i, e in enumerate(entries):
+            if e is None:
+                continue
+            axes = (e,) if isinstance(e, str) else tuple(e)
+            extent = batch if i == 1 else leaf.shape[i]
+            if extent % prod(axes) != 0:
+                entries[i] = None
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree_util.tree_map_with_path(one, abs_cache)

@@ -42,6 +42,10 @@ from jax.experimental.pallas import tpu as pltpu
 DEFAULT_BM = 128
 LANE = 128
 
+# jax renamed TPUCompilerParams -> CompilerParams; accept either
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 
 def _kernel(idx_ref, occ_ref, x_ref, w_ref, o_ref, acc_ref, *, nsteps: int,
             two_sided: bool):
@@ -109,7 +113,7 @@ def bitmask_spmm(x: jnp.ndarray, indices: jnp.ndarray, vals: jnp.ndarray,
         ),
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
     )(indices, occ, x, vals)
     return out

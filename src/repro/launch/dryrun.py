@@ -136,7 +136,7 @@ def _compile_cell(cfg, shape, mesh, *, fsdp: bool, microbatches: int = 1,
                                    remat_group=remat_group, unroll=unroll,
                                    ssm_chunk=ssm_chunk, flash_chunk=flash)
             opt_abs = jax.eval_shape(adamw.init, params_abs)
-            o_sh = adamw.OptState(NamedSharding(mesh, P()), p_sh, p_sh)
+            o_sh = adamw.opt_shardings(mesh, p_sh)
             specs = input_specs(cfg, shape)
             b_sh = {k: NamedSharding(mesh, part.batch_spec(mesh)
                                      if v.ndim == 2
@@ -181,6 +181,8 @@ def _compile_cell(cfg, shape, mesh, *, fsdp: bool, microbatches: int = 1,
 
 def _metrics(compiled) -> Dict[str, float]:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax returns [dict]
+        ca = ca[0] if ca else {}
     coll = collective_stats(compiled.as_text())
     return {"flops": float(ca.get("flops", 0.0)),
             "bytes": float(ca.get("bytes accessed", 0.0)),

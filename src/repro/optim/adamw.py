@@ -36,6 +36,14 @@ def init(params) -> OptState:
                     jax.tree.map(zeros, params), jax.tree.map(zeros, params))
 
 
+def opt_shardings(mesh, param_shardings) -> OptState:
+    """OptState sharding tree: moments are elementwise so they inherit the
+    param shardings; the step counter is replicated."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    return OptState(NamedSharding(mesh, PartitionSpec()),
+                    param_shardings, param_shardings)
+
+
 def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
     s = step.astype(jnp.float32)
     warm = s / jnp.maximum(cfg.warmup_steps, 1)

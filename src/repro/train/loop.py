@@ -48,34 +48,36 @@ def init_state(cfg: ModelConfig, mesh=None, *, fsdp: bool = False,
     key = jax.random.PRNGKey(seed)
     if mesh is None:
         params = M.init_params(key, cfg)
-    else:
-        abs_p = M.abstract_params(cfg)
-        shardings = part.param_shardings(mesh, abs_p, fsdp=fsdp)
-        params = jax.jit(lambda k: M.init_params(k, cfg),
-                         out_shardings=shardings)(key)
-    return TrainState(params, adamw.init(params), 0)
+        return TrainState(params, adamw.init(params), 0)
+    abs_p = M.abstract_params(cfg)
+    shardings = part.param_shardings(mesh, abs_p, fsdp=fsdp)
+    params = jax.jit(lambda k: M.init_params(k, cfg),
+                     out_shardings=shardings)(key)
+    opt = jax.jit(adamw.init,
+                  out_shardings=adamw.opt_shardings(mesh, shardings))(params)
+    return TrainState(params, opt, 0)
 
 
 def restore_or_init(cfg: ModelConfig, loop_cfg: TrainLoopConfig,
                     mesh=None) -> TrainState:
     """Fault-tolerant start: resume from the newest complete checkpoint if
-    one exists (works across mesh changes — elastic restart), else init."""
-    state = init_state(cfg, mesh, fsdp=loop_cfg.fsdp, seed=loop_cfg.seed)
-    if loop_cfg.ckpt_dir:
-        last = ckpt.latest_step(loop_cfg.ckpt_dir)
-        if last is not None:
-            shardings = None
-            opt_sh = None
-            if mesh is not None:
-                shardings = part.param_shardings(
-                    mesh, M.abstract_params(cfg), fsdp=loop_cfg.fsdp)
-                opt_sh = adamw.OptState(
-                    None, shardings, shardings)
-            params, opt, man = ckpt.restore(
-                loop_cfg.ckpt_dir, last, state.params, state.opt,
-                shardings=shardings, opt_shardings=opt_sh)
-            return TrainState(params, opt, int(man["step"]))
-    return state
+    one exists (works across mesh changes — elastic restart), else init.
+
+    Restore never materializes the fresh init: ``ckpt.restore`` only needs
+    abstract templates for structure/dtype, so resuming a large config
+    skips the init compile entirely."""
+    last = ckpt.latest_step(loop_cfg.ckpt_dir) if loop_cfg.ckpt_dir else None
+    if last is None:
+        return init_state(cfg, mesh, fsdp=loop_cfg.fsdp, seed=loop_cfg.seed)
+    abs_p = M.abstract_params(cfg)
+    abs_opt = jax.eval_shape(adamw.init, abs_p)
+    shardings = opt_sh = None
+    if mesh is not None:
+        shardings = part.param_shardings(mesh, abs_p, fsdp=loop_cfg.fsdp)
+        opt_sh = adamw.opt_shardings(mesh, shardings)
+    params, opt, man = ckpt.restore(loop_cfg.ckpt_dir, last, abs_p, abs_opt,
+                                    shardings=shardings, opt_shardings=opt_sh)
+    return TrainState(params, opt, int(man["step"]))
 
 
 def train(cfg: ModelConfig, shape: ShapeConfig,

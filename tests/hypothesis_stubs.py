@@ -1,0 +1,26 @@
+"""``hypothesis`` re-exports with fallback stand-ins, so the
+property-test modules run their plain unit tests when only runtime deps
+are installed. Test modules import unconditionally::
+
+    from hypothesis_stubs import given, settings, st
+
+With hypothesis present these are the real decorators/strategies;
+without it, ``given`` becomes a per-test skip marker, ``settings`` an
+identity decorator, and ``st`` swallows any strategy construction.
+"""
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # only the property tests need the dev extra
+    import pytest
+
+    def given(*args, **kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*args, **kwargs):
+        return lambda f: f
+
+    class _MissingStrategies:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _MissingStrategies()

@@ -2,7 +2,7 @@
 beats identity, round-robin beats static, permutation folding is exact."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_stubs import given, settings, st
 
 from repro.core import balance
 

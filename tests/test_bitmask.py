@@ -3,7 +3,7 @@ matching primitive, including hypothesis property tests."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_stubs import given, settings, st
 
 from repro.core import bitmask as bm
 

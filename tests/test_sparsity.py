@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_stubs import given, settings, st
 
 from repro.core.sparse import prune_by_magnitude
 from repro.sparsity import expert_balance as eb

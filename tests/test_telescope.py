@@ -1,7 +1,7 @@
 """Telescoping request combining / snarfing model (paper Section 3.2)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_stubs import given, settings, st
 
 from repro.core import telescope
 
