@@ -12,12 +12,12 @@ import time
 
 from benchmarks import (fig7_speedup, fig8_breakdown, fig9_energy,
                         fig10_isolation, fig11_buffers, kernel_bench,
-                        roofline, table3_asic)
+                        roofline, serve_bench, table3_asic)
 
 MODULES = {
     "fig7": fig7_speedup, "fig8": fig8_breakdown, "fig9": fig9_energy,
     "fig10": fig10_isolation, "fig11": fig11_buffers, "table3": table3_asic,
-    "kernel": kernel_bench, "roofline": roofline,
+    "kernel": kernel_bench, "roofline": roofline, "serve": serve_bench,
 }
 
 

@@ -1,26 +1,39 @@
 """End-to-end serving driver (the paper's kind: inference).
 
     PYTHONPATH=src python examples/serve_batched.py [--arch rwkv6_3b]
-        [--requests 8] [--new-tokens 24]
+        [--requests 8] [--new-tokens 24] [--smoke]
 
-Serves a reduced-config model with *batched requests arriving at different
-times* — continuous batching over a shared decode step. Demonstrates:
-  * prefill + decode split with an explicit KV/SSM cache,
+Thin client over the barrier-free continuous-batching subsystem
+(`repro.serve.Scheduler`): requests arrive staggered, join free slots via
+single-pass prefill into a zeroed cache lane, and decode at *per-slot*
+positions — no slot ever waits on, or is corrupted by, another slot's
+position. Demonstrates:
+  * single-pass prefill + per-slot-position decode with an explicit
+    KV/SSM cache,
   * request slots joining/leaving the batch without recompilation,
-  * greedy decode determinism per request regardless of batch composition.
+  * greedy decode determinism per request regardless of batch composition
+    (each request's tokens are byte-identical to a solo run).
+
+``--smoke`` shrinks the workload to a CI-sized run and self-checks the
+batch-composition invariance property.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import load_smoke
 from repro.models import model as M
-from repro.serve.engine import make_serve_step
+from repro.serve import Request, Scheduler
+
+
+def build_requests(rng: np.random.Generator, n: int, prompt_len: int,
+                   max_new: int, vocab: int, stagger: int) -> list:
+    prompts = rng.integers(1, vocab, (n, prompt_len)).astype(np.int32)
+    return [Request(rid=i, prompt=prompts[i], max_new=max_new,
+                    arrival=i * stagger) for i in range(n)]
 
 
 def main() -> None:
@@ -30,77 +43,45 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--stagger", type=int, default=2,
+                    help="engine steps between request arrivals")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI run + batch-composition invariance check")
     args = ap.parse_args()
+
+    if args.smoke:
+        args.requests, args.slots = 4, 2
+        args.prompt_len, args.new_tokens, args.stagger = 4, 6, 1
 
     cfg = load_smoke(args.arch)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
-    prompts = rng.integers(1, cfg.vocab,
-                           (args.requests, args.prompt_len)).astype(np.int32)
-
+    reqs = build_requests(rng, args.requests, args.prompt_len,
+                          args.new_tokens, cfg.vocab, args.stagger)
     max_len = args.prompt_len + args.new_tokens
-    B = args.slots
-    cache = M.init_cache(cfg, B, max_len)
-    step = jax.jit(make_serve_step(cfg))
 
-    # continuous batching state (host side)
-    slot_req = [-1] * B           # which request occupies each slot
-    slot_pos = np.zeros(B, np.int32)
-    produced = {i: [] for i in range(args.requests)}
-    next_req = 0
-    done = 0
-    tok = jnp.zeros((B, 1), jnp.int32)
-    t0 = time.time()
-    steps = 0
-
-    # NOTE: slots share one compiled step; per-slot positions are handled by
-    # feeding each slot's token at the shared sequential position (slots are
-    # independent caches along the batch axis, so a free slot simply decodes
-    # padding until reassigned — the slot's cache is reset by overwriting).
-    while done < args.requests:
-        # admit new requests into free slots
-        for s in range(B):
-            if slot_req[s] < 0 and next_req < args.requests:
-                slot_req[s] = next_req
-                slot_pos[s] = 0
-                next_req += 1
-        # build this step's token per slot (prompt feed or generated)
-        cur = np.zeros((B, 1), np.int32)
-        for s in range(B):
-            r = slot_req[s]
-            if r < 0:
-                continue
-            p = int(slot_pos[s])
-            if p < args.prompt_len:
-                cur[s, 0] = prompts[r, p]
-            else:
-                cur[s, 0] = produced[r][-1]
-        # all live slots advance at their own position; the engine uses one
-        # shared `pos` per step, so we run the max position and mask
-        pos = int(slot_pos.max())
-        nxt, cache = step(params, cache, jnp.asarray(cur), jnp.int32(pos))
-        nxt = np.asarray(nxt)
-        steps += 1
-        for s in range(B):
-            r = slot_req[s]
-            if r < 0:
-                continue
-            slot_pos[s] += 1
-            if slot_pos[s] > args.prompt_len:
-                produced[r].append(int(nxt[s, 0]))
-            elif slot_pos[s] == args.prompt_len:
-                produced[r].append(int(nxt[s, 0]))
-            if len(produced[r]) >= args.new_tokens:
-                done += 1
-                slot_req[s] = -1     # free the slot for the next request
-                slot_pos[s] = 0
-    dt = time.time() - t0
-    total_tokens = sum(len(v) for v in produced.values())
-    print(f"arch={cfg.name} served {args.requests} requests on {B} slots: "
-          f"{total_tokens} tokens in {dt:.1f}s ({steps} engine steps, "
-          f"{total_tokens / dt:.1f} tok/s incl. compile)")
+    sch = Scheduler(cfg, params, num_slots=args.slots, max_len=max_len)
+    produced = sch.run(reqs)
+    st = sch.stats
+    print(f"arch={cfg.name} served {args.requests} requests on {args.slots} "
+          f"slots: {st.tokens} tokens in {st.wall_s:.1f}s "
+          f"({st.engine_steps} engine steps, {st.prefills} prefills, "
+          f"{st.tok_per_s:.1f} tok/s incl. compile, "
+          f"slot utilization {st.slot_utilization:.2f})")
     for r in range(min(3, args.requests)):
         print(f"  req{r}: {produced[r][:10]}")
+
+    if args.smoke:
+        # batch-composition invariance: every request solo must reproduce
+        # its continuous-batch tokens byte-identically
+        for r in reqs:
+            solo = Scheduler(cfg, params, num_slots=args.slots,
+                             max_len=max_len)
+            got = solo.run([Request(rid=r.rid, prompt=r.prompt,
+                                    max_new=r.max_new, arrival=0)])[r.rid]
+            assert got == produced[r.rid], \
+                f"req{r.rid}: solo {got} != batched {produced[r.rid]}"
+        print("smoke OK: per-request outputs invariant to batch composition")
 
 
 if __name__ == "__main__":

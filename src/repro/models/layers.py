@@ -198,12 +198,14 @@ def attention(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
               positions: jnp.ndarray, mask: Optional[jnp.ndarray],
               kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
               use_rope: bool = True, flash_chunk: Optional[int] = None,
-              flash_unroll: bool = False) -> jnp.ndarray:
+              flash_unroll: bool = False, return_kv: bool = False):
     """Full-sequence attention (train / prefill / encoder / cross).
 
     ``kv`` overrides keys/values (cross-attention uses encoder output).
     ``flash_chunk`` switches plain-causal self-attention to the
     online-softmax chunked path (no S x S materialization).
+    ``return_kv`` additionally returns the (RoPE'd) K/V so a cache-writing
+    prefill can populate the decode cache in the same pass.
     """
     q, k, v = _qkv(p, x, cfg, positions, use_rope=use_rope)
     if kv is not None:
@@ -214,30 +216,38 @@ def attention(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
                           kv_chunk=flash_chunk, unroll=flash_unroll)
     else:
         out = _sdpa(q, k, v, mask, n_rep)
-    return out @ p["wo"]
+    out = out @ p["wo"]
+    if return_kv:
+        return out, k, v
+    return out
 
 
 def attention_decode(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
                      cache_k: jnp.ndarray, cache_v: jnp.ndarray,
                      pos: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """One-token decode against a KV cache.
+    """One-token decode against a KV cache, barrier-free across the batch.
 
-    x [B, 1, D]; cache_k/v [B, S_max, Hkv, dh]; pos scalar int32 (current
-    length). Returns (out [B,1,D], new_cache_k, new_cache_v).
+    x [B, 1, D]; cache_k/v [B, S_max, Hkv, dh]; pos int32 — scalar or [B]
+    (per-slot positions: each batch lane writes/attends at its *own*
+    position, so continuous-batching slots never synchronize on the
+    furthest-along request). Returns (out [B,1,D], new_cache_k, new_cache_v).
     """
     B = x.shape[0]
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos[:, None]                              # [B, 1]
     q, k, v = _qkv(p, x, cfg, positions)
-    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
-                                           (0, pos, 0, 0))
-    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
-                                           (0, pos, 0, 0))
+    # per-lane cache write: lane b's K/V lands at row pos[b] (vmapped
+    # dynamic-update lowers to one scatter, not B slices)
+    write = jax.vmap(
+        lambda c, u, s: jax.lax.dynamic_update_slice(c, u, (s, 0, 0)))
+    cache_k = write(cache_k, k.astype(cache_k.dtype), pos)
+    cache_v = write(cache_v, v.astype(cache_v.dtype), pos)
     S = cache_k.shape[1]
     ki = jnp.arange(S)[None, :]
-    valid = ki <= pos
+    valid = ki <= pos[:, None]                            # [B, S]
     if cfg.window is not None:
-        valid &= ki > pos - cfg.window
-    mask = valid[None, None]  # [1,1,1,S]
+        valid &= ki > (pos[:, None] - cfg.window)
+    mask = valid[:, None, None]  # [B,1,1,S]
     out = _sdpa(q, cache_k, cache_v, mask, cfg.n_heads // cfg.n_kv_heads)
     return out @ p["wo"], cache_k, cache_v
 
@@ -388,12 +398,16 @@ def init_mamba(key, cfg: ModelConfig, dtype) -> Params:
     }
 
 
-def _ssm_scan_chunked(u, delta, Bm, Cm, A, chunk: int):
+def _ssm_scan_chunked(u, delta, Bm, Cm, A, chunk: int,
+                      return_state: bool = False):
     """h_t = exp(delta_t A) h_{t-1} + delta_t B_t u_t ; y_t = C_t . h_t.
 
     u/delta [B, L, din]; Bm/Cm [B, L, ds]; A [din, ds] (negative).
     Chunked over L; within a chunk an associative scan over
     (decay, increment) pairs keeps memory at B*chunk*din*ds.
+    ``return_state`` also returns h_{L-1} [B, din, ds] (prefill -> decode
+    handoff; chunk padding is identity — delta pads to 0 so dA=1, dBu=0 —
+    so the final scan carry *is* the state at the last real token).
     """
     Bsz, L, din = u.shape
     ds = Bm.shape[-1]
@@ -425,13 +439,18 @@ def _ssm_scan_chunked(u, delta, Bm, Cm, A, chunk: int):
         return h[:, -1], y
 
     h0 = jnp.zeros((Bsz, din, ds), jnp.float32)
-    _, ys = jax.lax.scan(chunk_step, h0, (u_c, d_c, B_c, C_c))
+    h_last, ys = jax.lax.scan(chunk_step, h0, (u_c, d_c, B_c, C_c))
     y = ys.swapaxes(0, 1).reshape(Bsz, Lp, din)
+    if return_state:
+        return y[:, :L], h_last
     return y[:, :L]
 
 
 def mamba_block(p: Params, x: jnp.ndarray, cfg: ModelConfig,
-                chunk: int = 64) -> jnp.ndarray:
+                chunk: int = 64, return_state: bool = False):
+    """Full-sequence Mamba. With ``return_state``, also returns the decode
+    handoff state ``(conv_state [B, d_conv-1, din], h [B, din, ds])`` so a
+    single prefill pass can seed :func:`mamba_decode`."""
     m = cfg.mamba
     B, L, D = x.shape
     din = m.expand * D
@@ -446,10 +465,17 @@ def mamba_block(p: Params, x: jnp.ndarray, cfg: ModelConfig,
     dt, Bm, Cm = jnp.split(xp, [dt_rank, dt_rank + m.d_state], axis=-1)
     delta = jax.nn.softplus(dt @ p["dt_proj"].astype(jnp.float32) + p["dt_bias"])
     A = -jnp.exp(p["A_log"])
-    y = _ssm_scan_chunked(u, delta, Bm, Cm, A, chunk)
+    y, h_last = _ssm_scan_chunked(u, delta, Bm, Cm, A, chunk,
+                                  return_state=True)
     y = y + u * p["D"]
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
-    return y @ p["out_proj"]
+    out = y @ p["out_proj"]
+    if return_state:
+        # decode's conv_state holds the *pre-conv* inputs: the last
+        # d_conv-1 rows of the padded stream (zeros when L < d_conv-1),
+        # exactly what mamba_decode concatenates ahead of the next token
+        return out, upad[:, L:], h_last
+    return out
 
 
 def mamba_decode(p: Params, x: jnp.ndarray, cfg: ModelConfig,

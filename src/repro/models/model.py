@@ -368,10 +368,23 @@ def _block_decode(bp: Params, entry: Params, x, cfg: ModelConfig, kind: str,
 
 
 def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
-                cache: Params, pos: jnp.ndarray, *, unroll: bool = False
+                cache: Params, pos: jnp.ndarray, *,
+                active: Optional[jnp.ndarray] = None, unroll: bool = False
                 ) -> Tuple[jnp.ndarray, Params]:
-    """token [B, 1] int32; pos scalar int32 -> (logits [B, 1, V], cache)."""
+    """token [B, 1] int32; pos int32 scalar or [B] -> (logits [B,1,V], cache).
+
+    ``pos`` may be a per-slot position vector: lane b writes its KV at
+    row pos[b] and attends with its own causal mask, so continuous-batching
+    slots advance barrier-free — no lane ever decodes at another lane's
+    position (the paper's no-global-barrier invariant, applied to serving).
+
+    ``active`` [B] bool masks done/free slots: their cache lanes pass
+    through unchanged, so a parked slot can never clobber its own (or,
+    post-reset, a successor's) state while idling in the batch.
+    """
     dtype = _dtype(cfg)
+    B = token.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
     x = jnp.take(params["embed"], token, axis=0).astype(dtype)
     expert_perm = params.get("expert_perm")
     pattern = cfg.block_pattern
@@ -396,7 +409,114 @@ def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
         new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
     else:
         x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    if active is not None:
+        # leaves are [periods, B, ...]: select per batch lane
+        new_cache = jax.tree.map(
+            lambda n, o: jnp.where(
+                active.reshape((1, -1) + (1,) * (n.ndim - 2)), n, o),
+            new_cache, cache)
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["lm_head"] if not cfg.tie_embeddings else params["embed"].T
+    logits = (x @ head.astype(dtype)).astype(jnp.float32)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill (single-pass prompt -> cache; replaces S sequential decode steps)
+# ---------------------------------------------------------------------------
+def _block_prefill(bp: Params, entry: Params, x, cfg: ModelConfig, kind: str,
+                   *, positions, mask, expert_perm,
+                   ssm_chunk: Optional[int] = None,
+                   flash_chunk: Optional[int] = None):
+    """Full-sequence block forward that also emits the decode cache entry."""
+    new_entry = dict(entry)
+    h = L.rmsnorm(x, bp["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        y, k, v = L.attention(bp["attn"], h, cfg, positions=positions,
+                              mask=mask, flash_chunk=flash_chunk,
+                              return_kv=True)
+        new_entry["k"] = jax.lax.dynamic_update_slice(
+            entry["k"], k.astype(entry["k"].dtype), (0, 0, 0, 0))
+        new_entry["v"] = jax.lax.dynamic_update_slice(
+            entry["v"], v.astype(entry["v"].dtype), (0, 0, 0, 0))
+        x = x + y
+        if "cross_k" in entry:
+            hc = L.rmsnorm(x, bp["ln_cross"], cfg.norm_eps)
+            x = x + L.attention(bp["cross"], hc, cfg, positions=None,
+                                mask=None, kv=(entry["cross_k"],
+                                               entry["cross_v"]),
+                                use_rope=False)
+    elif kind == "mamba":
+        y, new_entry["conv"], new_entry["h"] = L.mamba_block(
+            bp["mamba"], h, cfg, chunk=ssm_chunk or 64, return_state=True)
+        x = x + y
+    elif kind == "rwkv":
+        st = {"shift": entry["shift_t"], "wkv": entry["wkv"]}
+        y, st = L.rwkv_time_mix(bp["time_mix"], h, cfg,
+                                chunk=ssm_chunk or 64, state=st)
+        new_entry["shift_t"], new_entry["wkv"] = st["shift"], st["wkv"]
+        x = x + y
+        h2 = L.rmsnorm(x, bp["ln2"], cfg.norm_eps)
+        y2, st2 = L.rwkv_channel_mix(bp["channel_mix"], h2, cfg,
+                                     state={"shift": entry["shift_c"]})
+        new_entry["shift_c"] = st2["shift"]
+        return x + y2, new_entry
+    h2 = L.rmsnorm(x, bp["ln2"], cfg.norm_eps)
+    if "moe" in bp:
+        y, _ = L.moe_ffn(bp["moe"], h2, cfg, expert_perm)
+        x = x + y
+    else:
+        x = x + L.ffn(bp["ffn"], h2, cfg)
+    return x, new_entry
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            cache: Params, *, ssm_chunk: Optional[int] = None,
+            flash_chunk: Optional[int] = None,
+            unroll: bool = False) -> Tuple[jnp.ndarray, Params]:
+    """One forward pass over the prompt that fills the decode cache.
+
+    tokens [B, S] -> (last_logits [B, V], cache with rows [0, S) written
+    and SSM/RWKV states advanced to position S-1). Lanes are expected to
+    start from a reset (zeroed) cache — :func:`init_cache` state is the
+    prefix-free starting point every request must see. ``flash_chunk``
+    switches self-attention to the online-softmax path (no S x S score
+    materialization for long prompts).
+    """
+    dtype = _dtype(cfg)
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    use_flash = flash_chunk is not None and cfg.n_heads
+    mask = (L.causal_mask(S, S, cfg.window)
+            if cfg.n_heads and not use_flash else None)
+    expert_perm = params.get("expert_perm")
+    pattern = cfg.block_pattern
+
+    def body(carry, xs):
+        h = carry
+        layer_params, layer_cache = xs
+        new_cache = {}
+        for p_i, kind in enumerate(pattern):
+            h, new_cache[f"p{p_i}"] = _block_prefill(
+                layer_params[f"p{p_i}"], layer_cache[f"p{p_i}"], h, cfg,
+                kind, positions=positions, mask=mask,
+                expert_perm=expert_perm, ssm_chunk=ssm_chunk,
+                flash_chunk=flash_chunk if use_flash else None)
+        return h, new_cache
+
+    if unroll:
+        n = jax.tree.leaves(cache)[0].shape[0]
+        outs = []
+        for i in range(n):
+            x, nc = body(x, jax.tree.map(lambda a: a[i],
+                                         (params["blocks"], cache)))
+            outs.append(nc)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    else:
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    # project only the last position (the next-token logits serving needs)
+    x = L.rmsnorm(x[:, -1], params["final_norm"], cfg.norm_eps)
     head = params["lm_head"] if not cfg.tie_embeddings else params["embed"].T
     logits = (x @ head.astype(dtype)).astype(jnp.float32)
     return logits, new_cache

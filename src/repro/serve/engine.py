@@ -1,8 +1,15 @@
-"""Serving engine: prefill + decode steps with batched requests.
+"""Serving engine: single-pass prefill + barrier-free per-slot decode.
 
 ``serve_step`` (the decode step the dry-run lowers) processes one new token
 per sequence against a KV cache of ``seq_len`` — the assigned ``decode_*`` /
-``long_*`` shapes.
+``long_*`` shapes. ``pos`` may be a per-slot vector: each batch lane writes
+and attends at its *own* position, which is what makes continuous batching
+barrier-free (no lane ever decodes at another lane's position — the paper's
+no-global-synchronization invariant applied to serving).
+
+Slot lifecycle primitives (``make_admit_fn``, ``reset_slots``) implement the
+colored-buffer discipline: a reused lane is rebuilt from zeros before any
+read, so a new request can never observe its predecessor's KV/SSM state.
 """
 from __future__ import annotations
 
@@ -18,35 +25,115 @@ from repro.models import model as M
 
 def make_prefill_fn(cfg: ModelConfig, unroll: bool = False, ssm_chunk=None,
                     flash_chunk=None):
-    """Full-sequence forward returning last-position logits (prefill)."""
-    def prefill(params, tokens, **extras):
-        logits, _ = M.forward(params, tokens, cfg, unroll=unroll,
-                              ssm_chunk=ssm_chunk, flash_chunk=flash_chunk,
-                              flash_unroll=unroll, **extras)
-        return logits[:, -1]
+    """Prompt prefill.
+
+    Without ``cache`` (dry-run lowering path): full-sequence forward
+    returning last-position logits only. With ``cache``: one forward pass
+    that also writes K/V rows [0, S) and the SSM/RWKV handoff states into
+    the decode cache — ``(last_logits [B, V], cache)`` — replacing S
+    sequential decode steps.
+    """
+    def prefill(params, tokens, cache=None, **extras):
+        if cache is None:
+            logits, _ = M.forward(params, tokens, cfg, unroll=unroll,
+                                  ssm_chunk=ssm_chunk, flash_chunk=flash_chunk,
+                                  flash_unroll=unroll, **extras)
+            return logits[:, -1]
+        return M.prefill(params, cfg, tokens, cache, ssm_chunk=ssm_chunk,
+                         flash_chunk=flash_chunk, unroll=unroll)
     return prefill
+
+
+def _pick(logits, greedy: bool, rng):
+    if greedy or rng is None:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(rng, logits).astype(jnp.int32)
 
 
 def make_serve_step(cfg: ModelConfig, greedy: bool = True,
                     unroll: bool = False):
-    """One decode iteration: (params, cache, token, pos[, rng]) ->
-    (next_token, cache)."""
-    def serve_step(params, cache, token, pos, rng=None):
+    """One decode iteration: (params, cache, token, pos[, active, rng]) ->
+    (next_token, cache).
+
+    ``pos`` is scalar (legacy, lock-step batch) or [B] (per-slot positions).
+    ``active`` [B] bool masks done/free slots: their cache lanes pass
+    through untouched while live lanes advance — per-slot done masking
+    instead of a batch-wide barrier.
+    """
+    def serve_step(params, cache, token, pos, active=None, rng=None):
         logits, cache = M.decode_step(params, cfg, token, cache, pos,
-                                      unroll=unroll)
-        if greedy or rng is None:
-            nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
-        else:
-            nxt = jax.random.categorical(rng, logits[:, 0]).astype(jnp.int32)
+                                      active=active, unroll=unroll)
+        nxt = _pick(logits[:, 0], greedy, rng)
         return nxt[:, None], cache
     return serve_step
+
+
+def make_admit_fn(cfg: ModelConfig, max_len: int, greedy: bool = True):
+    """Slot admission: (params, cache, prompt [1, S], slot) ->
+    (first_token [1, 1], cache).
+
+    Builds a *zeroed* single-lane cache, prefills the prompt into it in one
+    pass, and overwrites batch lane ``slot`` of the shared cache wholesale.
+    Because the lane is reconstructed from zeros, slot reuse cannot leak the
+    previous occupant's KV/SSM state (stale-cache bleed), and the write
+    is position-exact for a late joiner (no shared-``pos`` corruption).
+    ``slot`` is a traced scalar — one compile per prompt length, not per
+    slot.
+    """
+    assert cfg.encoder_layers == 0, \
+        "slot admission serves decoder-only models (use generate for enc-dec)"
+
+    def admit(params, cache, prompt, slot):
+        lane = M.init_cache(cfg, 1, max_len)
+        last, lane = M.prefill(params, cfg, prompt, lane)
+        cache = jax.tree.map(
+            lambda big, ln: jax.lax.dynamic_update_slice(
+                big, ln.astype(big.dtype),
+                (0, slot) + (0,) * (big.ndim - 2)),
+            cache, lane)
+        return _pick(last, greedy, None)[:, None], cache
+    return admit
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_prefill(cfg: ModelConfig):
+    """Shared compiled cache-writing prefill (one compile per prompt len)."""
+    return jax.jit(make_prefill_fn(cfg))
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_serve_step(cfg: ModelConfig, greedy: bool = True):
+    """Process-wide compile cache: every Scheduler with the same config
+    shares one compiled decode step (ModelConfig is frozen/hashable).
+    Call with positional args — lru_cache keys keyword calls separately."""
+    return jax.jit(make_serve_step(cfg, greedy=greedy))
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_admit(cfg: ModelConfig, max_len: int, greedy: bool = True):
+    """Shared compiled admission fn — one trace per (config, max_len) and,
+    inside jit, one compile per prompt length. Call positionally."""
+    return jax.jit(make_admit_fn(cfg, max_len, greedy=greedy))
+
+
+def reset_slots(cache, free_mask: jnp.ndarray):
+    """Zero the cache lanes where ``free_mask`` [B] is True.
+
+    Lane hygiene for slots freed without an immediate successor (admission
+    itself rebuilds the lane from zeros, so this is the belt to admit's
+    suspenders).
+    """
+    return jax.tree.map(
+        lambda a: a * (1 - free_mask.reshape(
+            (1, -1) + (1,) * (a.ndim - 2)).astype(a.dtype)),
+        cache)
 
 
 def generate(params, cfg: ModelConfig, prompt: jnp.ndarray, max_new: int,
              *, greedy: bool = True, rng: Optional[jax.Array] = None,
              src_embeds=None, prefix_embeds=None) -> jnp.ndarray:
-    """Batched generation: prefill the prompt token-by-token into the cache
-    (keeps one compiled decode fn), then sample ``max_new`` tokens."""
+    """Batched generation: single-pass prefill of the whole prompt into the
+    cache, then ``max_new`` decode steps at per-slot positions."""
     B, S0 = prompt.shape
     total = S0 + max_new
     cache = M.init_cache(cfg, B, total,
@@ -55,12 +142,16 @@ def generate(params, cfg: ModelConfig, prompt: jnp.ndarray, max_new: int,
     if cfg.encoder_layers:
         enc_out = M.encode(params, src_embeds, cfg)
         cache = M.prefill_cache(params, cfg, cache, enc_out)
-    step = jax.jit(make_serve_step(cfg, greedy))
-    out = [prompt]
-    tok = prompt[:, :1]
-    for t in range(total - 1):
-        nxt, cache = step(params, cache, tok, jnp.int32(t))
-        tok = prompt[:, t + 1:t + 2] if t + 1 < S0 else nxt
-        if t + 1 >= S0:
-            out.append(tok)
+    prefill = jitted_prefill(cfg)
+    step = jitted_serve_step(cfg, greedy)
+    rngs = (jax.random.split(rng, max_new) if rng is not None
+            else [None] * max_new)
+    last, cache = prefill(params, prompt, cache)
+    tok = _pick(last, greedy, rngs[0])[:, None]
+    out = [prompt, tok]
+    pos = jnp.full((B,), S0, jnp.int32)
+    for t in range(max_new - 1):
+        tok, cache = step(params, cache, tok, pos, None, rngs[t + 1])
+        pos = pos + 1
+        out.append(tok)
     return jnp.concatenate(out, axis=1)

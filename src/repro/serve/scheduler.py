@@ -1,0 +1,216 @@
+"""Continuous-batching scheduler: barrier-free slot management over the
+per-slot-position decode engine.
+
+BARISTA mapping (the paper's mechanisms, applied to serving):
+
+* **No global barrier** — every slot holds a request at its *own* position
+  (``slot_pos``); the engine step takes the whole position vector, so a
+  late joiner never decodes (or writes KV) at another slot's position.
+  This is the serving analogue of the paper's barrier-free PE advance
+  (BARISTA §3 vs SparTen's local barriers).
+* **Round-robin lane assignment** (§3.3.2) — free slots are scanned in an
+  order rotated by :func:`repro.core.balance.round_robin_permutation`, so
+  successive admissions spread across lanes instead of pinning lane 0
+  (long-prompt "dense" requests rotate across lanes like dense sub-chunks
+  rotate across PEs).
+* **Colored buffers** — admission rebuilds the slot's cache lane from
+  zeros (see :func:`repro.serve.engine.make_admit_fn`), so a reused lane
+  can never serve the previous occupant's KV/SSM state to the new request.
+
+The scheduler is host-side bookkeeping only; all math lives in the jitted
+engine functions (one compiled decode step, one compiled admit per prompt
+length).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.balance import round_robin_permutation
+from repro.models import model as M
+from repro.serve.engine import jitted_admit, jitted_serve_step, reset_slots
+
+_jitted_reset = jax.jit(reset_slots)
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    ``arrival`` is the engine step (scheduler clock tick) at which the
+    request becomes visible — staggered arrivals exercise late joining.
+    """
+    rid: int
+    prompt: np.ndarray          # [S] int32 token ids
+    max_new: int
+    arrival: int = 0
+
+
+@dataclasses.dataclass
+class ServeStats:
+    engine_steps: int = 0
+    prefills: int = 0
+    decode_lane_steps: int = 0   # lanes that did real work
+    idle_lane_steps: int = 0     # lanes parked (done/free) during a step
+    tokens: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def slot_utilization(self) -> float:
+        total = self.decode_lane_steps + self.idle_lane_steps
+        return self.decode_lane_steps / total if total else 0.0
+
+    @property
+    def tok_per_s(self) -> float:
+        return self.tokens / self.wall_s if self.wall_s > 0 else 0.0
+
+
+class Scheduler:
+    """Request queue + slot table driving the barrier-free engine.
+
+    ``num_slots`` is the compiled batch width; requests beyond it queue.
+    ``max_len`` bounds prompt_len + max_new per request (one cache row per
+    position).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, num_slots: int = 4,
+                 max_len: int = 256, greedy: bool = True):
+        assert cfg.encoder_layers == 0, \
+            "Scheduler serves decoder-only models (enc-dec goes via generate)"
+        self.cfg = cfg
+        self.params = params
+        self.num_slots = num_slots
+        self.max_len = max_len
+        # positional calls keep the process-wide lru_cache to one entry per
+        # (cfg, greedy) — keyword vs positional would key separately
+        self._step_fn = jitted_serve_step(cfg, greedy)
+        self._admit_fn = jitted_admit(cfg, max_len, greedy)
+        self._reset_fn = _jitted_reset
+        self.cache = M.init_cache(cfg, num_slots, max_len)
+        # slot table
+        self.slot_req = np.full(num_slots, -1, np.int64)
+        self.slot_pos = np.zeros(num_slots, np.int32)
+        self.slot_tok = np.zeros(num_slots, np.int32)
+        self._rr = 0                     # round-robin admission rotation
+        self.clock = 0                   # scheduler step counter
+        self.queue: Deque[Request] = deque()
+        self._live: Dict[int, Request] = {}
+        self.produced: Dict[int, List[int]] = {}
+        self.done_at: Dict[int, int] = {}   # rid -> completion clock tick
+        self.stats = ServeStats()
+
+    # -- queue -------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if req.max_new < 1:
+            raise ValueError(f"request {req.rid}: max_new must be >= 1 "
+                             "(admission always yields the prefill token)")
+        if len(req.prompt) + req.max_new > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {len(req.prompt)} + max_new "
+                f"{req.max_new} exceeds max_len {self.max_len}")
+        self.queue.append(req)
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and not self._live
+
+    # -- slot lifecycle ----------------------------------------------------
+    def _next_arrived(self) -> Optional[Request]:
+        """Pop the earliest-submitted request whose arrival has passed (no
+        head-of-line blocking: a late-arriving head must not starve an
+        already-arrived request queued behind it)."""
+        for i, req in enumerate(self.queue):
+            if req.arrival <= self.clock:
+                del self.queue[i]
+                return req
+        return None
+
+    def _admit_ready(self) -> None:
+        """Admit queued, arrived requests into free slots, rotating the scan
+        order across lanes (BARISTA round-robin)."""
+        if not self.queue:
+            return
+        for s in round_robin_permutation(self.num_slots, self._rr):
+            if self.slot_req[s] >= 0:
+                continue
+            req = self._next_arrived()
+            if req is None:
+                break
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+            tok, self.cache = self._admit_fn(self.params, self.cache,
+                                             prompt, jnp.int32(s))
+            first = int(np.asarray(tok)[0, 0])
+            self.stats.prefills += 1
+            self.stats.tokens += 1
+            self._rr += 1
+            self.produced[req.rid] = [first]
+            if req.max_new <= 1:
+                self.done_at[req.rid] = self.clock
+                continue                 # done at prefill; slot stays free
+            self.slot_req[s] = req.rid
+            self.slot_pos[s] = len(req.prompt)
+            self.slot_tok[s] = first
+            self._live[req.rid] = req
+
+    def _retire(self, s: int) -> None:
+        rid = int(self.slot_req[s])
+        self.done_at[rid] = self.clock
+        del self._live[rid]
+        self.slot_req[s] = -1
+        self.slot_pos[s] = 0
+        self.slot_tok[s] = 0
+
+    # -- engine ------------------------------------------------------------
+    def step(self) -> bool:
+        """One scheduler tick: admissions, then one batched decode step over
+        the live slots (done/free lanes masked). Returns False when idle."""
+        self._admit_ready()
+        active = self.slot_req >= 0
+        if not active.any():
+            if self.queue:               # waiting on future arrivals
+                self.clock += 1
+                return True
+            return False
+        tokens = jnp.asarray(self.slot_tok[:, None])
+        nxt, self.cache = self._step_fn(
+            self.params, self.cache, tokens,
+            jnp.asarray(self.slot_pos), jnp.asarray(active))
+        nxt = np.asarray(nxt)
+        self.stats.engine_steps += 1
+        self.stats.decode_lane_steps += int(active.sum())
+        self.stats.idle_lane_steps += int((~active).sum())
+        freed = np.zeros(self.num_slots, bool)
+        for s in np.nonzero(active)[0]:
+            rid = int(self.slot_req[s])
+            tok = int(nxt[s, 0])
+            self.produced[rid].append(tok)
+            self.stats.tokens += 1
+            self.slot_pos[s] += 1
+            self.slot_tok[s] = tok
+            if len(self.produced[rid]) >= self._live[rid].max_new:
+                self._retire(s)
+                freed[s] = True
+        if freed.any():
+            # lane hygiene: zero freed lanes now; admission re-zeroes anyway
+            self.cache = self._reset_fn(self.cache, jnp.asarray(freed))
+        self.clock += 1
+        return True
+
+    def run(self, requests: Optional[List[Request]] = None
+            ) -> Dict[int, List[int]]:
+        """Serve ``requests`` (plus anything already queued) to completion;
+        returns {rid: generated tokens} and fills ``self.stats``."""
+        for r in requests or []:
+            self.submit(r)
+        t0 = time.time()
+        while self.step():
+            pass
+        self.stats.wall_s += time.time() - t0
+        return self.produced

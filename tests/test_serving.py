@@ -1,0 +1,286 @@
+"""Barrier-free continuous-batching serving tests.
+
+The load-bearing property (the seed bug's regression test): a request
+decoded *alone* must produce byte-identical greedy tokens to the same
+request decoded in a *mixed-arrival* continuous batch with slot reuse.
+The seed loop decoded every slot at ``pos = max(slot_pos)`` — a software
+barrier that wrote late joiners' K/V at wrong cache rows (and wrong RoPE
+phases) and never reset freed lanes, so the property was false.
+``test_legacy_maxpos_loop_corrupts`` keeps a copy of the seed algorithm
+and asserts it *fails* the property, so the regression test itself is
+known to discriminate.
+"""
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import load_smoke
+from repro.models import model as M
+from repro.serve import Request, Scheduler, generate, reset_slots
+from repro.serve.engine import jitted_admit
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+from benchmarks.serve_bench import legacy_maxpos_loop  # noqa: E402
+
+
+def _setup(arch):
+    cfg = load_smoke(arch)
+    return cfg, M.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _mk_requests(cfg, n, prompt_len, max_new, stagger, seed=0):
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(1, cfg.vocab, (n, prompt_len)).astype(np.int32)
+    return [Request(rid=i, prompt=prompts[i], max_new=max_new,
+                    arrival=i * stagger) for i in range(n)]
+
+
+def _solo(cfg, params, req, num_slots, max_len):
+    sch = Scheduler(cfg, params, num_slots=num_slots, max_len=max_len)
+    return sch.run([Request(rid=req.rid, prompt=req.prompt,
+                            max_new=req.max_new, arrival=0)])[req.rid]
+
+
+# ---------------------------------------------------------------------------
+# decode_step: per-slot positions
+# ---------------------------------------------------------------------------
+def test_decode_step_vector_pos_matches_scalar():
+    cfg, params = _setup("qwen3_4b")
+    cache = M.init_cache(cfg, 2, 8)
+    tok = jnp.asarray([[3], [7]], jnp.int32)
+    l_s, c_s = M.decode_step(params, cfg, tok, cache, jnp.int32(0))
+    l_v, c_v = M.decode_step(params, cfg, tok, cache,
+                             jnp.asarray([0, 0], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(l_s), np.asarray(l_v))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), c_s, c_v)
+
+
+def test_per_lane_cache_write_positions():
+    """Lane b's K/V must land at row pos[b] — not at max(pos)."""
+    cfg, params = _setup("qwen3_4b")
+    cache = M.init_cache(cfg, 2, 8)
+    tok = jnp.asarray([[3], [7]], jnp.int32)
+    pos = jnp.asarray([2, 5], jnp.int32)
+    _, new = M.decode_step(params, cfg, tok, cache, pos)
+    for p_i in range(len(cfg.block_pattern)):
+        k = np.asarray(new[f"p{p_i}"]["k"])       # [P, B, S, Hkv, dh]
+        written = np.abs(k).sum(axis=(0, 3, 4))   # [B, S]
+        assert written[0, 2] > 0 and written[1, 5] > 0
+        untouched = [(0, s) for s in range(8) if s != 2] + \
+                    [(1, s) for s in range(8) if s != 5]
+        for b, s in untouched:
+            assert written[b, s] == 0, (b, s)
+
+
+def test_active_mask_freezes_done_lanes():
+    cfg, params = _setup("qwen3_4b")
+    cache = M.init_cache(cfg, 2, 8)
+    tok = jnp.asarray([[3], [7]], jnp.int32)
+    pos = jnp.asarray([0, 0], jnp.int32)
+    _, c1 = M.decode_step(params, cfg, tok, cache, pos,
+                          active=jnp.asarray([True, False]))
+    for p_i in range(len(cfg.block_pattern)):
+        k = np.asarray(c1[f"p{p_i}"]["k"])
+        assert np.abs(k[:, 0]).sum() > 0          # live lane advanced
+        assert np.abs(k[:, 1]).sum() == 0         # masked lane untouched
+
+
+# ---------------------------------------------------------------------------
+# single-pass prefill
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["qwen3_4b", "rwkv6_3b",
+                                  "jamba_1_5_large_398b"])
+def test_prefill_matches_sequential_decode(arch):
+    """One prefill pass == S sequential decode steps: same last logits,
+    same cache continuation."""
+    cfg, params = _setup(arch)
+    toks = jnp.asarray([[3, 1, 4, 1, 5, 9, 2, 6]], jnp.int32)
+    cache_seq = M.init_cache(cfg, 1, 10)
+    lg = None
+    for t in range(8):
+        lg, cache_seq = M.decode_step(params, cfg, toks[:, t:t + 1],
+                                      cache_seq, jnp.int32(t))
+    last_pre, cache_pre = M.prefill(params, cfg, toks,
+                                    M.init_cache(cfg, 1, 10))
+    np.testing.assert_allclose(np.asarray(last_pre), np.asarray(lg[:, 0]),
+                               rtol=5e-3, atol=5e-3)
+    nxt = jnp.argmax(last_pre, -1).astype(jnp.int32)[:, None]
+    g1, _ = M.decode_step(params, cfg, nxt, cache_seq, jnp.int32(8))
+    g2, _ = M.decode_step(params, cfg, nxt, cache_pre, jnp.int32(8))
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               rtol=5e-3, atol=5e-3)
+    if cfg.n_heads and "attn" in cfg.block_pattern:
+        # flash (online-softmax) prefill matches the dense-masked path
+        last_f, cache_f = M.prefill(params, cfg, toks,
+                                    M.init_cache(cfg, 1, 10), flash_chunk=4)
+        np.testing.assert_allclose(np.asarray(last_f), np.asarray(last_pre),
+                                   rtol=5e-3, atol=5e-3)
+        for p_i, kind in enumerate(cfg.block_pattern):
+            if kind != "attn":
+                continue
+            np.testing.assert_allclose(
+                np.asarray(cache_f[f"p{p_i}"]["k"]),
+                np.asarray(cache_pre[f"p{p_i}"]["k"]), rtol=1e-5, atol=1e-5)
+
+
+def test_admit_rebuilds_lane_from_zeros():
+    """Admission must overwrite the whole lane: a dirty (previous-request)
+    lane cannot leak into the new occupant, and other lanes are untouched."""
+    cfg, params = _setup("qwen3_4b")
+    max_len = 8
+    dirty = jax.tree.map(lambda a: jnp.ones_like(a),
+                         M.init_cache(cfg, 2, max_len))
+    prompt = jnp.asarray([[5, 9, 2]], jnp.int32)
+    _, cache = jitted_admit(cfg, max_len, True)(params, dirty, prompt,
+                                                jnp.int32(0))
+    clean = M.init_cache(cfg, 1, max_len)
+    _, lane_ref = M.prefill(params, cfg, prompt, clean)
+    for p_i in range(len(cfg.block_pattern)):
+        k = np.asarray(cache[f"p{p_i}"]["k"])
+        # rows beyond the prompt in the admitted lane are zero again
+        assert np.abs(k[:, 0, 3:]).sum() == 0
+        # the other lane keeps its (dirty) contents
+        assert np.all(np.asarray(cache[f"p{p_i}"]["v"])[:, 1] == 1)
+        np.testing.assert_array_equal(
+            k[:, 0:1], np.asarray(lane_ref[f"p{p_i}"]["k"]))
+
+
+def test_reset_slots_zeroes_only_masked_lanes():
+    cfg, _ = _setup("rwkv6_3b")
+    cache = jax.tree.map(lambda a: jnp.ones_like(a),
+                         M.init_cache(cfg, 3, 4))
+    out = reset_slots(cache, jnp.asarray([True, False, True]))
+    for leaf in jax.tree.leaves(out):
+        a = np.asarray(leaf)
+        assert a[:, 0].sum() == 0 and a[:, 2].sum() == 0
+        assert np.all(a[:, 1] == 1)
+
+
+# ---------------------------------------------------------------------------
+# the tentpole property: batch-composition invariance
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["qwen3_4b", "rwkv6_3b"])
+def test_batch_composition_invariance(arch):
+    """Solo decode == staggered-arrival continuous batch with slot reuse,
+    byte-identical per request. Fails on the seed max-pos loop (attention:
+    wrong K/V rows + RoPE phases; rwkv: stale state on lane reuse)."""
+    cfg, params = _setup(arch)
+    slots, max_len = 2, 10
+    reqs = _mk_requests(cfg, 5, prompt_len=5, max_new=5, stagger=1)
+    sch = Scheduler(cfg, params, num_slots=slots, max_len=max_len)
+    batched = sch.run([Request(rid=r.rid, prompt=r.prompt,
+                               max_new=r.max_new, arrival=r.arrival)
+                       for r in reqs])
+    assert sch.stats.prefills == 5
+    for r in reqs:
+        assert batched[r.rid] == _solo(cfg, params, r, slots, max_len), r.rid
+
+
+def test_slot_reuse_no_stale_state_bleed():
+    """One slot, two requests back-to-back: the second must not attend over
+    (or mix state with) the first's leftovers."""
+    cfg, params = _setup("rwkv6_3b")
+    reqs = _mk_requests(cfg, 2, prompt_len=6, max_new=4, stagger=0)
+    sch = Scheduler(cfg, params, num_slots=1, max_len=10)
+    batched = sch.run(reqs)
+    for r in reqs:
+        assert batched[r.rid] == _solo(cfg, params, r, 1, 10), r.rid
+
+
+def test_legacy_maxpos_loop_corrupts():
+    """The seed algorithm (shared pos = max(slot_pos), no lane reset — kept
+    verbatim in benchmarks/serve_bench.py) must FAIL batch-composition
+    invariance on a staggered workload — proving the invariance test
+    discriminates the bug it regresses."""
+    cfg, params = _setup("qwen3_4b")
+    slots, max_len = 2, 10
+    reqs = _mk_requests(cfg, 4, prompt_len=5, max_new=5, stagger=2)
+    produced, _ = legacy_maxpos_loop(cfg, params, reqs, slots, max_len)
+    corrupted = sum(
+        1 for r in reqs
+        if produced[r.rid] != _solo(cfg, params, r, slots, max_len))
+    assert corrupted > 0, \
+        "seed max-pos loop unexpectedly passed invariance"
+
+
+# ---------------------------------------------------------------------------
+# scheduler mechanics
+# ---------------------------------------------------------------------------
+def test_scheduler_round_robin_rotates_slots():
+    """Sequential single requests must not pin lane 0 — admissions rotate
+    (BARISTA round-robin lane assignment)."""
+    cfg, params = _setup("qwen3_4b")
+    sch = Scheduler(cfg, params, num_slots=3, max_len=8)
+    seen = []
+    for i in range(3):
+        sch.submit(Request(rid=i, prompt=np.asarray([3, 1, 4], np.int32),
+                           max_new=4, arrival=0))
+        while not sch.idle:
+            sch.step()
+            live = np.nonzero(sch.slot_req >= 0)[0]
+            if live.size:
+                seen.append(int(live[0]))
+    assert len(set(seen)) > 1, f"admissions pinned one lane: {seen}"
+
+
+def test_scheduler_respects_arrivals_and_masks_idle():
+    cfg, params = _setup("qwen3_4b")
+    reqs = _mk_requests(cfg, 3, prompt_len=4, max_new=3, stagger=4)
+    sch = Scheduler(cfg, params, num_slots=4, max_len=8)
+    out = sch.run(reqs)
+    assert all(len(out[r.rid]) == 3 for r in reqs)
+    # 4 slots, never more than ~2 live at once -> idle lanes were masked
+    assert sch.stats.idle_lane_steps > 0
+    assert 0 < sch.stats.slot_utilization < 1
+
+
+def test_scheduler_rejects_oversized_request():
+    cfg, params = _setup("qwen3_4b")
+    sch = Scheduler(cfg, params, num_slots=1, max_len=8)
+    with pytest.raises(ValueError):
+        sch.submit(Request(rid=0, prompt=np.zeros(6, np.int32), max_new=4))
+    with pytest.raises(ValueError):
+        sch.submit(Request(rid=1, prompt=np.zeros(2, np.int32), max_new=0))
+
+
+def test_no_head_of_line_blocking():
+    """A late-arriving request at the queue head must not starve an
+    already-arrived request submitted behind it."""
+    cfg, params = _setup("qwen3_4b")
+    prompt = np.asarray([3, 1, 4, 1], np.int32)
+    late = Request(rid=0, prompt=prompt, max_new=3, arrival=40)
+    ready = Request(rid=1, prompt=prompt, max_new=3, arrival=0)
+    sch = Scheduler(cfg, params, num_slots=2, max_len=8)
+    out = sch.run([late, ready])
+    assert len(out[0]) == 3 and len(out[1]) == 3
+    assert sch.done_at[1] < late.arrival, \
+        f"ready request waited for the late head: done at {sch.done_at[1]}"
+
+
+# ---------------------------------------------------------------------------
+# generate: single-pass prefill path
+# ---------------------------------------------------------------------------
+def test_generate_matches_tokenwise_reference():
+    """generate (one-pass prefill) must reproduce the seed algorithm
+    (token-by-token prompt feed through decode_step)."""
+    cfg, params = _setup("qwen3_4b")
+    prompt = jnp.asarray([[5, 9, 2, 7], [1, 8, 8, 3]], jnp.int32)
+    max_new = 6
+    B, S0 = prompt.shape
+    out = generate(params, cfg, prompt, max_new)
+    cache = M.init_cache(cfg, B, S0 + max_new)
+    ref = [prompt]
+    tok = prompt[:, :1]
+    for t in range(S0 + max_new - 1):
+        lg, cache = M.decode_step(params, cfg, tok, cache, jnp.int32(t))
+        nxt = jnp.argmax(lg[:, 0], -1).astype(jnp.int32)[:, None]
+        tok = prompt[:, t + 1:t + 2] if t + 1 < S0 else nxt
+        if t + 1 >= S0:
+            ref.append(tok)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(jnp.concatenate(ref, axis=1)))
