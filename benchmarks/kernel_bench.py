@@ -3,12 +3,15 @@
 Wall time in interpret mode is NOT TPU performance (the dry-run roofline is
 the perf story); this bench reports the *structural* quantities that carry
 to TPU: tiles skipped, FLOPs avoided, and the oracle-checked numerics over
-a density sweep.
+a density sweep. The second section exercises the fused gated-FFN kernel
+and the row-sub-block occupancy (executed MAC counts from the kernel's own
+counters for a decode-like single-live-lane batch).
 """
 from __future__ import annotations
 
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -42,3 +45,63 @@ def run(csv_rows):
                   f"{err:10.2e}")
             csv_rows.append(("kernel", f"wd{wd}_xd{xd}_flopfrac",
                              flop_frac, err))
+
+    _fused_section(csv_rows, rng)
+    _subblock_section(csv_rows, rng)
+
+
+def _fused_section(csv_rows, rng):
+    """Fused in-proj/activation/gate kernel vs the dense oracle."""
+    K, F, Mrows = 256, 256, 128
+    x = rng.normal(size=(Mrows, K)).astype(np.float32)
+    print("kernel_bench fused_ffn (one launch: in -> act -> gate-mul)")
+    print(f"  {'act':>8s} {'max_err':>10s}")
+    for act in ("relu2", "swiglu"):
+        w_in = rng.normal(size=(K, F)).astype(np.float32)
+        w_in[rng.random((K, F)) < 0.6] = 0
+        ws_in = bm.block_sparsify(w_in)
+        gate_idx = gate_vals = None
+        if act == "swiglu":
+            w_g = rng.normal(size=(K, F)).astype(np.float32)
+            w_g[rng.random((K, F)) < 0.6] = 0
+            ws_g = bm.block_sparsify(w_g)
+            gate_idx, gate_vals = ws_g.indices, ws_g.vals
+            exp = jax.nn.silu(x @ w_g) * (x @ w_in)
+        else:
+            r = np.maximum(x @ w_in, 0)
+            exp = r * r
+        got = ops.fused_sparse_ffn(jnp.asarray(x), ws_in.indices,
+                                   ws_in.vals, gate_idx, gate_vals, act=act,
+                                   k_total=K, bk=128, bn=128, sub_m=8)
+        err = float(jnp.max(jnp.abs(got - jnp.asarray(exp))))
+        print(f"  {act:>8s} {err:10.2e}")
+        csv_rows.append(("kernel", f"fused_{act}_err", err, ""))
+
+
+def _subblock_section(csv_rows, rng):
+    """Row-sub-block occupancy: a decode batch with one live 8-row lane
+    must not pay MACs for the other 120 rows of its 128-row block."""
+    K, N, Mrows = 512, 256, 128
+    w = rng.normal(size=(K, N)).astype(np.float32)
+    w[rng.random((K, N)) < 0.5] = 0
+    ws = bm.block_sparsify(w)
+    x = np.zeros((Mrows, K), np.float32)
+    x[:8] = rng.normal(size=(8, K)).astype(np.float32)  # one live lane group
+    out, counts = ops.sparse_dense_matmul(jnp.asarray(x), ws,
+                                          two_sided=True, sub_m=8,
+                                          count_macs=True)
+    _, counts_full = ops.sparse_dense_matmul(jnp.asarray(x), ws,
+                                             two_sided=True,
+                                             count_macs=True)
+    stats = ops.sparse_matmul_tile_stats(jnp.asarray(x), ws.indices,
+                                         k_total=K, bk=128, sub_m=8)
+    executed = int(counts.sum())
+    one_sided = int(stats["weight_tile_macs"])
+    print("kernel_bench sub-block occupancy (1 live 8-row lane / 128 rows)")
+    print(f"  executed sub-block MACs {executed} / one-sided {one_sided} "
+          f"(block-granular occupancy executes {int(counts_full.sum())} "
+          f"full tiles)")
+    csv_rows.append(("kernel", "subblock_executed_frac",
+                     round(executed / max(one_sided, 1), 4), ""))
+    assert executed == int(stats["executed"]), \
+        "kernel counter must match the jnp skip model"

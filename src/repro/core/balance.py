@@ -85,9 +85,24 @@ def fold_permutation(next_w: np.ndarray, perm: np.ndarray,
     return np.take(next_w, perm, axis=axis_in)
 
 
+def round_robin_assignment(num_subchunks: int, lanes: int,
+                           step: int) -> np.ndarray:
+    """Sub-chunk -> lane assignment for input ``step`` (Section 3.3.2).
+
+    Sub-chunk ``i`` goes to lane ``(i + step) % lanes`` — the single
+    rotation rule shared by every round-robin call site (the permutation
+    below and :func:`rotate_assignment` used to disagree on the modulus:
+    one rotated by ``num_subchunks``, the other by ``lanes``).
+    """
+    assert num_subchunks % lanes == 0, (num_subchunks, lanes)
+    return (np.arange(num_subchunks) + step) % lanes
+
+
 def round_robin_permutation(num_subchunks: int, step: int) -> np.ndarray:
-    """Sub-chunk -> lane assignment for a given input step (Section 3.3.2)."""
-    return (np.arange(num_subchunks) + step) % num_subchunks
+    """Rotated scan order over ``num_subchunks`` lanes: the special case of
+    :func:`round_robin_assignment` with one sub-chunk per lane, where the
+    assignment is a permutation (used e.g. for serving slot admission)."""
+    return round_robin_assignment(num_subchunks, num_subchunks, step)
 
 
 def rotate_assignment(work: np.ndarray, lanes: int, steps: int) -> Tuple[float, float]:
@@ -96,17 +111,17 @@ def rotate_assignment(work: np.ndarray, lanes: int, steps: int) -> Tuple[float, 
     ``work``: per-sub-chunk work metric, shape [steps, num_subchunks] (the
     per-input-chunk densities). Returns (static_imbalance, rr_imbalance) as
     max-lane / mean-lane aggregate work — the simulator uses this to model
-    intra-filter load imbalance.
+    intra-filter load imbalance. Both schedules come from
+    :func:`round_robin_assignment` (static is the step-0 assignment).
     """
     work = np.asarray(work, np.float64)
     steps_n, ns = work.shape
-    assert ns % lanes == 0
     per_lane_static = np.zeros(lanes)
     per_lane_rr = np.zeros(lanes)
+    static = round_robin_assignment(ns, lanes, 0)
     for t in range(steps_n):
-        for s in range(ns):
-            per_lane_static[s % lanes] += work[t, s]
-            per_lane_rr[(s + t) % lanes] += work[t, s]
+        np.add.at(per_lane_static, static, work[t])
+        np.add.at(per_lane_rr, round_robin_assignment(ns, lanes, t), work[t])
     mean = work.sum() / lanes
     return (float(per_lane_static.max() / max(mean, 1e-12)),
             float(per_lane_rr.max() / max(mean, 1e-12)))

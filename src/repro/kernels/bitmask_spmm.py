@@ -20,11 +20,17 @@ Mapping of the paper's mechanisms:
   colored output buffers (a cell proceeds to its next input tile without
   waiting for siblings).
 * **Round-robin sub-chunk assignment** -> the host-side chunk schedule can be
-  rotated per step (``core.balance.round_robin_permutation``); the kernel is
+  rotated per step (``core.balance.round_robin_assignment``); the kernel is
   oblivious, which is the point — the balancing is software, as in the paper.
 * **Hierarchical buffering** -> BlockSpec tiles are the wide shared buffers
   (chunk-wide fetches from HBM); the fp32 VMEM accumulator is the narrow
   private buffer at the compute.
+* **Row-sub-block occupancy** -> in two-sided mode the activation occupancy
+  map is kept at ``sub_m``-row granularity *within* the ``bm``-row grid
+  block, so a decode microbatch with one live lane (its row padded into an
+  otherwise-zero 128-row block) only MACs its own ``sub_m`` rows instead of
+  the whole block — the per-scalar skip of the paper's PE, quantized to the
+  smallest MXU-legal row tile instead of the full block.
 
 Weight-stationary dataflow ("snarfing" limit case): the W tile for (n, j) is
 fetched once per m-sweep by Pallas' pipelined DMA and the m-innermost grid
@@ -33,6 +39,7 @@ order reuses it across input blocks.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -47,8 +54,48 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) \
     or pltpu.TPUCompilerParams
 
 
-def _kernel(idx_ref, occ_ref, x_ref, w_ref, o_ref, acc_ref, *, nsteps: int,
-            two_sided: bool):
+def subblock_macs(valid, k_safe, occ_ref, m_i, x_ref, w, acc_ref, cnt_ref, *,
+                  two_sided: bool, sub_m: int, bm: int):
+    """MAC one (bm, bk) x (bk, bn) tile into ``acc_ref``.
+
+    In two-sided mode the tile is processed as ``bm // sub_m`` row
+    sub-blocks, each skipped when its occupancy bit (activation rows all
+    zero) is clear — a single live decode lane does not force MACs for the
+    other ``bm - sub_m`` rows of its block. ``cnt_ref`` (optional (1, 1)
+    scratch) counts executed sub-block MACs (tile MACs when one-sided) so
+    tests can assert the skip logic fires exactly. Shared with the fused
+    FFN kernel (:mod:`repro.kernels.fused_ffn`).
+    """
+    if not two_sided:
+        @pl.when(valid)
+        def _mac():
+            acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
+                                    preferred_element_type=jnp.float32)
+            if cnt_ref is not None:
+                cnt_ref[0, 0] = cnt_ref[0, 0] + 1
+        return
+    nsub = bm // sub_m
+    base = m_i * nsub
+    for si in range(nsub):
+        live = jnp.logical_and(valid, occ_ref[base + si, k_safe] > 0)
+
+        @pl.when(live)
+        def _mac(si=si):
+            lo = si * sub_m
+            acc_ref[lo:lo + sub_m, :] = acc_ref[lo:lo + sub_m, :] + jnp.dot(
+                x_ref[lo:lo + sub_m, :].astype(jnp.float32), w,
+                preferred_element_type=jnp.float32)
+            if cnt_ref is not None:
+                cnt_ref[0, 0] = cnt_ref[0, 0] + 1
+
+
+def _kernel(idx_ref, occ_ref, x_ref, w_ref, *refs, nsteps: int,
+            two_sided: bool, sub_m: int, bm: int, count_macs: bool):
+    if count_macs:
+        o_ref, cntout_ref, acc_ref, cnt_ref = refs
+    else:
+        o_ref, acc_ref = refs
+        cntout_ref = cnt_ref = None
     n_i = pl.program_id(0)
     m_i = pl.program_id(1)
     j = pl.program_id(2)
@@ -56,46 +103,67 @@ def _kernel(idx_ref, occ_ref, x_ref, w_ref, o_ref, acc_ref, *, nsteps: int,
     @pl.when(j == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
+        if cnt_ref is not None:
+            cnt_ref[...] = jnp.zeros_like(cnt_ref)
 
     k_idx = idx_ref[n_i, j]
-    valid = k_idx >= 0
-    if two_sided:
-        # the activation-side mask AND — skip if the input tile is all-zero
-        valid = jnp.logical_and(valid, occ_ref[m_i, jnp.maximum(k_idx, 0)] > 0)
-
-    @pl.when(valid)
-    def _mac():
-        acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32),
-                                w_ref[0, 0].astype(jnp.float32),
-                                preferred_element_type=jnp.float32)
+    subblock_macs(k_idx >= 0, jnp.maximum(k_idx, 0), occ_ref, m_i, x_ref,
+                  w_ref[0, 0].astype(jnp.float32), acc_ref, cnt_ref,
+                  two_sided=two_sided, sub_m=sub_m, bm=bm)
 
     @pl.when(j == nsteps - 1)
     def _flush():
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        if cntout_ref is not None:
+            cntout_ref[...] = cnt_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("bk", "bn", "bm", "two_sided",
-                                             "interpret"))
+def activation_occupancy(x: jnp.ndarray, sub_m: int, bk: int) -> jnp.ndarray:
+    """int32 [M // sub_m, K // bk] tile-occupancy of ``x`` at ``sub_m``-row
+    granularity (the kernel's activation-side skip predicate)."""
+    M, K = x.shape
+    return (x.reshape(M // sub_m, sub_m, K // bk, bk) != 0).any(
+        axis=(1, 3)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "bn", "bm", "sub_m",
+                                             "two_sided", "interpret",
+                                             "count_macs"))
 def bitmask_spmm(x: jnp.ndarray, indices: jnp.ndarray, vals: jnp.ndarray,
                  *, bk: int = LANE, bn: int = LANE, bm: int = DEFAULT_BM,
-                 two_sided: bool = False, interpret: bool = True) -> jnp.ndarray:
+                 sub_m: Optional[int] = None, two_sided: bool = False,
+                 interpret: bool = True, count_macs: bool = False):
     """``x [M, K] @ W [K, N]`` with W in chunk-block-sparse layout.
 
     indices: int32 [n_blocks, max_nz] (k-chunk ids, -1 padded)
     vals:    [n_blocks, max_nz, bk, bn]
+    ``sub_m`` (default: ``bm``) sets the row granularity of the two-sided
+    activation skip. With ``count_macs`` also returns an int32 [nb, mb]
+    map of executed sub-block MACs per grid cell.
     Returns [M, N] in x.dtype (fp32 accumulation).
     """
     M, K = x.shape
     nb, max_nz = indices.shape
     N = nb * bn
+    sub_m = bm if sub_m is None else sub_m
     assert M % bm == 0 and K % bk == 0, (M, K, bm, bk)
+    assert bm % sub_m == 0, (bm, sub_m)
     mb = M // bm
 
-    # activation-side chunk occupancy (two-sided mode); tiny O(MK) reduction
-    occ = (x.reshape(mb, bm, K // bk, bk) != 0).any(axis=(1, 3)).astype(jnp.int32)
+    # activation-side sub-block occupancy (two-sided mode); tiny O(MK) pass
+    occ = activation_occupancy(x, sub_m, bk)
 
     grid = (nb, mb, max_nz)
-    kernel = functools.partial(_kernel, nsteps=max_nz, two_sided=two_sided)
+    kernel = functools.partial(_kernel, nsteps=max_nz, two_sided=two_sided,
+                               sub_m=sub_m, bm=bm, count_macs=count_macs)
+    out_shape = jax.ShapeDtypeStruct((M, N), x.dtype)
+    out_specs = pl.BlockSpec((bm, bn), lambda n, m, j, idx, occ_: (m, n))
+    scratch = [pltpu.VMEM((bm, bn), jnp.float32)]
+    if count_macs:
+        out_shape = [out_shape, jax.ShapeDtypeStruct((nb, mb), jnp.int32)]
+        out_specs = [out_specs,
+                     pl.BlockSpec((1, 1), lambda n, m, j, idx, occ_: (n, m))]
+        scratch.append(pltpu.VMEM((1, 1), jnp.int32))
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -108,10 +176,10 @@ def bitmask_spmm(x: jnp.ndarray, indices: jnp.ndarray, vals: jnp.ndarray,
                 # W tile for (n, j)
                 pl.BlockSpec((1, 1, bk, bn), lambda n, m, j, idx, occ_: (n, j, 0, 0)),
             ],
-            out_specs=pl.BlockSpec((bm, bn), lambda n, m, j, idx, occ_: (m, n)),
-            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+            out_specs=out_specs,
+            scratch_shapes=scratch,
         ),
-        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        out_shape=out_shape,
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),

@@ -3,11 +3,19 @@
 ``sparse_dense_matmul`` is the op models call for the BARISTA sparse path:
 it takes a :class:`repro.core.bitmask.BlockSparseMatrix` (built offline from
 pruned weights, optionally greedy-balanced) and dense activations, pads the
-row dimension to the kernel's block size, and dispatches to the kernel. On
-CPU (this container) the kernel runs in interpret mode; on TPU set
-``interpret=False``.
+row dimension to the kernel's block size, and dispatches to the kernel.
+``sparse_matmul_packed`` / ``fused_sparse_ffn`` are the same dispatch for
+raw packed arrays — the form the model carries inside its scanned param
+pytrees (see ``sparsity.sparse_ffn.sparsify_model``).
+
+The interpret/compiled decision is resolved *at call time* from
+``jax.default_backend()`` — the backend may be initialized after this module
+imports (e.g. by ``dist`` mesh setup), so a module-level snapshot would pin
+the wrong default.
 """
 from __future__ import annotations
+
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -15,30 +23,114 @@ import jax.numpy as jnp
 from repro.core import bitmask as bm
 from repro.kernels import ref
 from repro.kernels.bitmask_spmm import bitmask_spmm
+from repro.kernels.fused_ffn import fused_ffn_spmm
 
-_ON_TPU = jax.default_backend() == "tpu"
+
+def on_tpu() -> bool:
+    """Backend check at call time (NOT frozen at import)."""
+    return jax.default_backend() == "tpu"
 
 
-def sparse_dense_matmul(x: jnp.ndarray, w: bm.BlockSparseMatrix, *,
-                        two_sided: bool = True, bm_rows: int = 128,
-                        interpret: bool | None = None) -> jnp.ndarray:
-    """x [..., K] @ sparse W [K, N] -> [..., N]."""
-    if interpret is None:
-        interpret = not _ON_TPU
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    return (not on_tpu()) if interpret is None else interpret
+
+
+def _pad_rows_k(x: jnp.ndarray, k_total: int, bm_rows: int):
+    """Flatten leading dims and pad rows/K for the kernel grid."""
     lead = x.shape[:-1]
     K = x.shape[-1]
     x2 = x.reshape(-1, K)
     M = x2.shape[0]
     pad = (-M) % bm_rows
-    pad_k = w.shape[0] - K  # packed weights are chunk-padded on K
-    assert pad_k >= 0, (K, w.shape)
+    pad_k = k_total - K  # packed weights are chunk-padded on K
+    assert pad_k >= 0, (K, k_total)
     if pad or pad_k:
         x2 = jnp.pad(x2, ((0, pad), (0, pad_k)))
-    out = bitmask_spmm(x2, w.indices, w.vals, bk=w.bk, bn=w.bn, bm=bm_rows,
+    return x2, lead, M
+
+
+def sparse_matmul_packed(x: jnp.ndarray, indices: jnp.ndarray,
+                         vals: jnp.ndarray, *, k_total: int, bk: int,
+                         bn: int, bm_rows: int = 128,
+                         sub_m: Optional[int] = None, two_sided: bool = True,
+                         interpret: Optional[bool] = None,
+                         count_macs: bool = False):
+    """x [..., K] @ sparse W [k_total, nb*bn] from raw packed arrays."""
+    interpret = _resolve_interpret(interpret)
+    x2, lead, M = _pad_rows_k(x, k_total, bm_rows)
+    out = bitmask_spmm(x2, indices, vals, bk=bk, bn=bn, bm=bm_rows,
+                       sub_m=sub_m, two_sided=two_sided, interpret=interpret,
+                       count_macs=count_macs)
+    counts = None
+    if count_macs:
+        out, counts = out
+    out = out[:M].reshape(*lead, indices.shape[0] * bn)
+    return (out, counts) if count_macs else out
+
+
+def sparse_dense_matmul(x: jnp.ndarray, w: bm.BlockSparseMatrix, *,
+                        two_sided: bool = True, bm_rows: int = 128,
+                        sub_m: Optional[int] = None,
+                        interpret: Optional[bool] = None,
+                        count_macs: bool = False):
+    """x [..., K] @ sparse W [K, N] -> [..., N]."""
+    return sparse_matmul_packed(x, w.indices, w.vals, k_total=w.shape[0],
+                                bk=w.bk, bn=w.bn, bm_rows=bm_rows,
+                                sub_m=sub_m, two_sided=two_sided,
+                                interpret=interpret, count_macs=count_macs)
+
+
+def fused_sparse_ffn(x: jnp.ndarray, in_idx: jnp.ndarray,
+                     in_vals: jnp.ndarray,
+                     gate_idx: Optional[jnp.ndarray] = None,
+                     gate_vals: Optional[jnp.ndarray] = None, *, act: str,
+                     k_total: int, bk: int, bn: int, bm_rows: int = 128,
+                     sub_m: Optional[int] = None, two_sided: bool = True,
+                     interpret: Optional[bool] = None) -> jnp.ndarray:
+    """``act(x @ W_in [, x @ W_gate])`` in one kernel launch (fp32 accum).
+
+    The in-/gate-projections and the nonlinearity + gate-multiply fuse into
+    a single ``pallas_call``; see :mod:`repro.kernels.fused_ffn`.
+    """
+    interpret = _resolve_interpret(interpret)
+    x2, lead, M = _pad_rows_k(x, k_total, bm_rows)
+    h = fused_ffn_spmm(x2, in_idx, in_vals, gate_idx, gate_vals, act=act,
+                       bk=bk, bn=bn, bm=bm_rows, sub_m=sub_m,
                        two_sided=two_sided, interpret=interpret)
-    if pad:
-        out = out[:M]
-    return out.reshape(*lead, w.shape[1])
+    return h[:M].reshape(*lead, in_idx.shape[0] * bn)
+
+
+def sparse_matmul_tile_stats(x: jnp.ndarray, indices: jnp.ndarray, *,
+                             k_total: int, bk: int, bm_rows: int = 128,
+                             sub_m: Optional[int] = None
+                             ) -> Dict[str, jnp.ndarray]:
+    """Pure-jnp model of the kernel's skip logic (no kernel launch).
+
+    Returns fp32 scalars:
+      * ``executed``        — (weight-nz chunk x occupied row-sub-block)
+        MACs the two-sided kernel performs,
+      * ``weight_tile_macs``— MACs a one-sided (weight-only) kernel would
+        perform (every stored chunk x every row-sub-block),
+      * ``dense_tile_macs`` — MACs of the dense matmul at the same tiling.
+
+    ``tests/test_kernels.py`` pins this model to the kernel's own
+    ``count_macs`` counters, so benchmarks can report skip fractions
+    without instrumented kernel launches in the hot loop.
+    """
+    sub = bm_rows if sub_m is None else sub_m
+    x2, _, _ = _pad_rows_k(x, k_total, bm_rows)
+    kb = k_total // bk
+    occ = (x2.reshape(-1, sub, kb, bk) != 0).any(axis=(1, 3))  # [msub, kb]
+    msub = occ.shape[0]
+    valid = indices >= 0
+    # chunk usage histogram across all (n-block, j) weight entries
+    cnt = jnp.zeros((kb,), jnp.float32).at[
+        jnp.where(valid, indices, 0)].add(valid.astype(jnp.float32))
+    executed = (occ.sum(axis=0).astype(jnp.float32) * cnt).sum()
+    weight = valid.sum().astype(jnp.float32) * msub
+    dense = jnp.float32(indices.shape[0] * kb * msub)
+    return {"executed": executed, "weight_tile_macs": weight,
+            "dense_tile_macs": dense}
 
 
 def sparse_dense_matmul_ref(x: jnp.ndarray, w: bm.BlockSparseMatrix) -> jnp.ndarray:

@@ -7,13 +7,17 @@
 
 Default mode prefills a synthetic prompt batch in one pass and decodes;
 ``--continuous`` drives the barrier-free scheduler instead (staggered
-request arrivals, per-slot positions, slot reuse). Full configs require
-TPU hardware; on this host use --smoke (the dry-run proves the
+request arrivals, per-slot positions, slot reuse). ``--sparse`` runs the
+BARISTA inference mode: ``sparsify_model`` prunes/balances/packs every
+eligible FFN offline and the engine decodes through the two-sided
+chunk-sparse kernels (skipped-tile stats are probed mid-run). Full configs
+require TPU hardware; on this host use --smoke (the dry-run proves the
 full-config serve_step compiles on the production mesh).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -23,6 +27,7 @@ import numpy as np
 from repro.configs.base import load_config, load_smoke
 from repro.models import model as M
 from repro.serve import Request, Scheduler, generate
+from repro.sparsity.sparse_ffn import sparsify_model
 
 
 def main() -> None:
@@ -38,11 +43,19 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--stagger", type=int, default=2)
+    ap.add_argument("--sparse", action="store_true",
+                    help="serve through the two-sided sparse FFN kernels")
+    ap.add_argument("--density", type=float, default=0.35,
+                    help="pruning density for --sparse")
     args = ap.parse_args()
 
     cfg = load_smoke(args.arch) if args.smoke else load_config(args.arch)
     key = jax.random.PRNGKey(args.seed)
     params = M.init_params(key, cfg)
+    if args.sparse:
+        cfg = dataclasses.replace(cfg, sparse_ffn=True)
+        params = sparsify_model(params, cfg, density=args.density,
+                                num_shards=4)
 
     if args.continuous:
         rng = np.random.default_rng(args.seed)
@@ -53,12 +66,18 @@ def main() -> None:
                 for i in range(args.requests)]
         sch = Scheduler(cfg, params, num_slots=args.slots,
                         max_len=args.prompt_len + args.new_tokens)
-        produced = sch.run(reqs)
+        produced = sch.run(reqs, probe_ffn=args.sparse)
+        sparse_stats = sch.ffn_probe
         st = sch.stats
         print(f"arch={cfg.name} continuous: {args.requests} requests on "
               f"{args.slots} slots, {st.tokens} tokens in {st.wall_s:.2f}s "
               f"({st.tok_per_s:.1f} tok/s incl. compile, "
               f"util {st.slot_utilization:.2f})")
+        if sparse_stats is not None:
+            print(f"sparse FFN: weight-tile density "
+                  f"{sparse_stats['weight_tile_macs'] / sparse_stats['dense_tile_macs']:.2f}, "
+                  f"activation-side skipped {sparse_stats['skipped_frac']:.2f}, "
+                  f"executed {sparse_stats['executed_frac']:.3f} of dense tile MACs")
         print("sample:", produced[0][:24])
         return
 

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.sparsity import sparse_ffn as sf
 
 Params = Dict[str, Any]
 NEG_INF = -1e30
@@ -282,8 +283,17 @@ def _activate(h: jnp.ndarray, g: Optional[jnp.ndarray], act: str) -> jnp.ndarray
 
 
 def ffn(p: Params, x: jnp.ndarray, cfg: ModelConfig,
-        act: Optional[str] = None) -> jnp.ndarray:
+        act: Optional[str] = None, sparse: Optional[Params] = None,
+        stats: Optional[list] = None) -> jnp.ndarray:
+    """Dense FFN, or the BARISTA two-sided sparse path when ``sparse``
+    (packed ``sparsify_model`` leaves for this block) is given — the dense
+    weights in ``p`` are then bypassed entirely. ``stats`` (unrolled decode
+    only) collects executed/skipped tile-MAC counts per block."""
     a = act or cfg.act
+    if sparse is not None:
+        if stats is not None:
+            stats.append(sf.sparse_ffn_tile_stats(sparse, x, a))
+        return sf.sparse_ffn_apply(sparse, x, a)
     h = x @ p["w_in"]
     g = x @ p["w_gate"] if "w_gate" in p else None
     return _activate(h, g, a) @ p["w_out"]
@@ -614,13 +624,22 @@ def rwkv_time_mix(p: Params, x: jnp.ndarray, cfg: ModelConfig,
 
 
 def rwkv_channel_mix(p: Params, x: jnp.ndarray, cfg: ModelConfig,
-                     state: Optional[Dict] = None
+                     state: Optional[Dict] = None,
+                     sparse: Optional[Params] = None,
+                     stats: Optional[list] = None
                      ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     prev = state["shift"] if state is not None else None
     shifted = _token_shift(x, prev)
     mixed = x * p["mu_in"] + shifted * (1 - p["mu_in"])
-    h = jax.nn.relu(mixed @ p["w_in"])
-    out = (h * h) @ p["w_out"]  # squared ReLU -> sparse (BARISTA path)
+    if sparse is not None:
+        # squared ReLU == the sparse kernel's relu2 act; channel-mix is the
+        # naturally two-sided FFN of attention-free blocks
+        if stats is not None:
+            stats.append(sf.sparse_ffn_tile_stats(sparse, mixed, "relu2"))
+        out = sf.sparse_ffn_apply(sparse, mixed, "relu2")
+    else:
+        h = jax.nn.relu(mixed @ p["w_in"])
+        out = (h * h) @ p["w_out"]  # squared ReLU -> sparse (BARISTA path)
     new_state = {"shift": x[:, -1]} if state is not None else None
     return out, new_state
 

@@ -127,7 +127,9 @@ def _block_fwd(bp: Params, x, cfg: ModelConfig, kind: str, pos: int, *,
         y, _ = L.rwkv_time_mix(bp["time_mix"], h, cfg, chunk=ssm_chunk or 64)
         x = x + y
         h2 = L.rmsnorm(x, bp["ln2"], cfg.norm_eps)
-        y2, _ = L.rwkv_channel_mix(bp["channel_mix"], h2, cfg)
+        y2, _ = L.rwkv_channel_mix(bp["channel_mix"], h2, cfg,
+                                   sparse=_sparse_of(bp, cfg,
+                                                     "channel_mix_sparse"))
         return x + y2, aux
     if enc_out is not None:
         hc = L.rmsnorm(x, bp["ln_cross"], cfg.norm_eps)
@@ -139,8 +141,19 @@ def _block_fwd(bp: Params, x, cfg: ModelConfig, kind: str, pos: int, *,
         y, aux = L.moe_ffn(bp["moe"], h2, cfg, expert_perm)
         x = x + y
     else:
-        x = x + L.ffn(bp["ffn"], h2, cfg)
+        x = x + L.ffn(bp["ffn"], h2, cfg, sparse=_sparse_of(bp, cfg))
     return x, aux
+
+
+def _sparse_of(bp: Params, cfg: ModelConfig,
+               key: str = "ffn_sparse") -> Optional[Params]:
+    """Packed sparse-FFN leaves for this block when the BARISTA serving
+    path is on: requires both ``cfg.sparse_ffn`` *and* a prior
+    ``sparsity.sparse_ffn.sparsify_model`` pass over the params (plain
+    dense params under a sparse config keep the dense path)."""
+    if not cfg.sparse_ffn:
+        return None
+    return bp.get(key)
 
 
 def _cross_kv(p: Params, enc_out: jnp.ndarray, cfg: ModelConfig):
@@ -330,7 +343,7 @@ def prefill_cache(params: Params, cfg: ModelConfig, cache: Params,
 
 
 def _block_decode(bp: Params, entry: Params, x, cfg: ModelConfig, kind: str,
-                  pos_idx: jnp.ndarray, expert_perm):
+                  pos_idx: jnp.ndarray, expert_perm, stats=None):
     new_entry = dict(entry)
     h = L.rmsnorm(x, bp["ln1"], cfg.norm_eps)
     if kind == "attn":
@@ -355,7 +368,10 @@ def _block_decode(bp: Params, entry: Params, x, cfg: ModelConfig, kind: str,
         x = x + y
         h2 = L.rmsnorm(x, bp["ln2"], cfg.norm_eps)
         y2, st2 = L.rwkv_channel_mix(bp["channel_mix"], h2, cfg,
-                                     state={"shift": entry["shift_c"]})
+                                     state={"shift": entry["shift_c"]},
+                                     sparse=_sparse_of(bp, cfg,
+                                                       "channel_mix_sparse"),
+                                     stats=stats)
         new_entry["shift_c"] = st2["shift"]
         return x + y2, new_entry
     h2 = L.rmsnorm(x, bp["ln2"], cfg.norm_eps)
@@ -363,14 +379,15 @@ def _block_decode(bp: Params, entry: Params, x, cfg: ModelConfig, kind: str,
         y, _ = L.moe_ffn(bp["moe"], h2, cfg, expert_perm)
         x = x + y
     else:
-        x = x + L.ffn(bp["ffn"], h2, cfg)
+        x = x + L.ffn(bp["ffn"], h2, cfg, sparse=_sparse_of(bp, cfg),
+                      stats=stats)
     return x, new_entry
 
 
 def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
                 cache: Params, pos: jnp.ndarray, *,
-                active: Optional[jnp.ndarray] = None, unroll: bool = False
-                ) -> Tuple[jnp.ndarray, Params]:
+                active: Optional[jnp.ndarray] = None, unroll: bool = False,
+                return_ffn_stats: bool = False):
     """token [B, 1] int32; pos int32 scalar or [B] -> (logits [B,1,V], cache).
 
     ``pos`` may be a per-slot position vector: lane b writes its KV at
@@ -381,6 +398,12 @@ def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
     ``active`` [B] bool masks done/free slots: their cache lanes pass
     through unchanged, so a parked slot can never clobber its own (or,
     post-reset, a successor's) state while idling in the batch.
+
+    ``return_ffn_stats`` (forces the unrolled period loop) additionally
+    returns the summed sparse-FFN tile-MAC stats across all blocks —
+    ``{executed, weight_tile_macs, dense_tile_macs}`` fp32 scalars, zeros
+    when the params carry no sparse leaves. Serving benches use this to
+    report the skipped-tile fraction of the live decode batch.
     """
     dtype = _dtype(cfg)
     B = token.shape[0]
@@ -388,23 +411,25 @@ def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
     x = jnp.take(params["embed"], token, axis=0).astype(dtype)
     expert_perm = params.get("expert_perm")
     pattern = cfg.block_pattern
+    stats_acc: Optional[list] = [] if return_ffn_stats else None
 
-    def body(carry, xs):
+    def body(carry, xs, stats=None):
         h = carry
         layer_params, layer_cache = xs
         new_cache = {}
         for p_i, kind in enumerate(pattern):
             h, new_cache[f"p{p_i}"] = _block_decode(
                 layer_params[f"p{p_i}"], layer_cache[f"p{p_i}"], h, cfg,
-                kind, pos, expert_perm)
+                kind, pos, expert_perm, stats=stats)
         return h, new_cache
 
-    if unroll:
+    if unroll or return_ffn_stats:
         n = jax.tree.leaves(cache)[0].shape[0]
         outs = []
         for i in range(n):
             x, nc = body(x, jax.tree.map(lambda a: a[i],
-                                         (params["blocks"], cache)))
+                                         (params["blocks"], cache)),
+                         stats=stats_acc)
             outs.append(nc)
         new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
     else:
@@ -418,6 +443,13 @@ def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     head = params["lm_head"] if not cfg.tie_embeddings else params["embed"].T
     logits = (x @ head.astype(dtype)).astype(jnp.float32)
+    if return_ffn_stats:
+        keys = ("executed", "weight_tile_macs", "dense_tile_macs")
+        if stats_acc:
+            totals = {k: sum(s[k] for s in stats_acc) for k in keys}
+        else:
+            totals = {k: jnp.float32(0) for k in keys}
+        return logits, new_cache, totals
     return logits, new_cache
 
 
@@ -458,7 +490,9 @@ def _block_prefill(bp: Params, entry: Params, x, cfg: ModelConfig, kind: str,
         x = x + y
         h2 = L.rmsnorm(x, bp["ln2"], cfg.norm_eps)
         y2, st2 = L.rwkv_channel_mix(bp["channel_mix"], h2, cfg,
-                                     state={"shift": entry["shift_c"]})
+                                     state={"shift": entry["shift_c"]},
+                                     sparse=_sparse_of(bp, cfg,
+                                                       "channel_mix_sparse"))
         new_entry["shift_c"] = st2["shift"]
         return x + y2, new_entry
     h2 = L.rmsnorm(x, bp["ln2"], cfg.norm_eps)
@@ -466,7 +500,7 @@ def _block_prefill(bp: Params, entry: Params, x, cfg: ModelConfig, kind: str,
         y, _ = L.moe_ffn(bp["moe"], h2, cfg, expert_perm)
         x = x + y
     else:
-        x = x + L.ffn(bp["ffn"], h2, cfg)
+        x = x + L.ffn(bp["ffn"], h2, cfg, sparse=_sparse_of(bp, cfg))
     return x, new_entry
 
 

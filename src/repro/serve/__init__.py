@@ -4,13 +4,15 @@
 writing single-pass prefill, slot admit/reset); ``scheduler`` holds the
 host-side request queue and slot table.
 """
-from repro.serve.engine import (generate, jitted_admit, jitted_prefill,
-                                jitted_serve_step, make_admit_fn,
+from repro.serve.engine import (generate, jitted_admit, jitted_ffn_stats,
+                                jitted_prefill, jitted_serve_step,
+                                make_admit_fn, make_ffn_stats_fn,
                                 make_prefill_fn, make_serve_step, reset_slots)
 from repro.serve.scheduler import Request, Scheduler, ServeStats
 
 __all__ = [
-    "generate", "jitted_admit", "jitted_prefill", "jitted_serve_step",
-    "make_admit_fn", "make_prefill_fn", "make_serve_step", "reset_slots",
+    "generate", "jitted_admit", "jitted_ffn_stats", "jitted_prefill",
+    "jitted_serve_step", "make_admit_fn", "make_ffn_stats_fn",
+    "make_prefill_fn", "make_serve_step", "reset_slots",
     "Request", "Scheduler", "ServeStats",
 ]

@@ -116,6 +116,28 @@ def jitted_admit(cfg: ModelConfig, max_len: int, greedy: bool = True):
     return jax.jit(make_admit_fn(cfg, max_len, greedy=greedy))
 
 
+def make_ffn_stats_fn(cfg: ModelConfig):
+    """Read-only instrumented decode step: (params, cache, token, pos
+    [, active]) -> sparse-FFN tile-MAC stats summed over all blocks.
+
+    The step's logits/cache are discarded — this probes how many
+    (weight-nz chunk x activation row-sub-block) MACs the two-sided kernel
+    executes vs skips for the *current* live batch, without perturbing the
+    serving state. All-zero stats mean the params carry no sparse leaves.
+    """
+    def stats_step(params, cache, token, pos, active=None):
+        _, _, stats = M.decode_step(params, cfg, token, cache, pos,
+                                    active=active, return_ffn_stats=True)
+        return stats
+    return stats_step
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_ffn_stats(cfg: ModelConfig):
+    """Process-wide compiled sparse-FFN stats probe. Call positionally."""
+    return jax.jit(make_ffn_stats_fn(cfg))
+
+
 def reset_slots(cache, free_mask: jnp.ndarray):
     """Zero the cache lanes where ``free_mask`` [B] is True.
 

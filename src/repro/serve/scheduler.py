@@ -35,7 +35,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.balance import round_robin_permutation
 from repro.models import model as M
-from repro.serve.engine import jitted_admit, jitted_serve_step, reset_slots
+from repro.serve.engine import (jitted_admit, jitted_ffn_stats,
+                                jitted_serve_step, reset_slots)
 
 _jitted_reset = jax.jit(reset_slots)
 
@@ -105,6 +106,7 @@ class Scheduler:
         self.produced: Dict[int, List[int]] = {}
         self.done_at: Dict[int, int] = {}   # rid -> completion clock tick
         self.stats = ServeStats()
+        self.ffn_probe: Optional[Dict[str, float]] = None
 
     # -- queue -------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -167,6 +169,29 @@ class Scheduler:
         self.slot_pos[s] = 0
         self.slot_tok[s] = 0
 
+    def probe_ffn_stats(self) -> Optional[Dict[str, float]]:
+        """Instrumented decode step over the current live slots (read-only).
+
+        Returns the BARISTA sparse-FFN tile-MAC counts summed across blocks
+        — ``executed`` (two-sided), ``weight_tile_macs`` (one-sided),
+        ``dense_tile_macs`` — plus the derived ``skipped_frac`` (activation
+        -side skips among weight-nz MACs) and ``executed_frac`` (vs dense).
+        ``None`` when no slot is live or the params carry no sparse leaves.
+        """
+        active = self.slot_req >= 0
+        if not active.any():
+            return None
+        stats = jitted_ffn_stats(self.cfg)(
+            self.params, self.cache, jnp.asarray(self.slot_tok[:, None]),
+            jnp.asarray(self.slot_pos), jnp.asarray(active))
+        stats = {k: float(v) for k, v in stats.items()}
+        if stats["dense_tile_macs"] == 0:
+            return None                  # dense params: nothing to skip
+        stats["skipped_frac"] = 1.0 - stats["executed"] / max(
+            stats["weight_tile_macs"], 1.0)
+        stats["executed_frac"] = stats["executed"] / stats["dense_tile_macs"]
+        return stats
+
     # -- engine ------------------------------------------------------------
     def step(self) -> bool:
         """One scheduler tick: admissions, then one batched decode step over
@@ -203,14 +228,24 @@ class Scheduler:
         self.clock += 1
         return True
 
-    def run(self, requests: Optional[List[Request]] = None
-            ) -> Dict[int, List[int]]:
+    def run(self, requests: Optional[List[Request]] = None, *,
+            probe_ffn: bool = False) -> Dict[int, List[int]]:
         """Serve ``requests`` (plus anything already queued) to completion;
-        returns {rid: generated tokens} and fills ``self.stats``."""
+        returns {rid: generated tokens} and fills ``self.stats``.
+
+        ``probe_ffn`` runs :meth:`probe_ffn_stats` once on the first live
+        batch into ``self.ffn_probe`` (probe time is excluded from the
+        serving wall clock so tok/s stays comparable to unprobed runs).
+        """
         for r in requests or []:
             self.submit(r)
+        if probe_ffn:
+            self.ffn_probe = None
         t0 = time.time()
         while self.step():
-            pass
+            if probe_ffn and self.ffn_probe is None:
+                p0 = time.time()
+                self.ffn_probe = self.probe_ffn_stats()
+                t0 += time.time() - p0
         self.stats.wall_s += time.time() - t0
         return self.produced

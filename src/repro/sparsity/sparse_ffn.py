@@ -1,5 +1,5 @@
 """BARISTA sparse-FFN swap-in: run eligible FFNs through the two-sided
-chunk-sparse Pallas kernel.
+chunk-sparse Pallas kernels.
 
 Offline (per the paper — filters are static for inference, pre-processing is
 amortized over all inferences):
@@ -11,14 +11,23 @@ amortized over all inferences):
   3. pack into the chunk-block-sparse layout (``core.bitmask``), with the
      chunk->lane schedule rotated per call site (round-robin).
 
-Online the layer calls ``kernels.ops.sparse_dense_matmul`` which skips
-(weight-chunk x activation-tile) pairs that are zero on either side —
-two-sided sparsity at the TPU's native 128-chunk granularity.
+Online the layer calls the fused in-proj/activation/gate kernel
+(:mod:`repro.kernels.fused_ffn`) followed by the two-sided output
+projection — the activation zeros of ReLU-family nonlinearities feed the
+second matmul's activation-side skip at row-sub-block granularity.
+
+:func:`sparsify_model` applies the same offline pipeline to *every*
+eligible FFN of a whole model (dense transformer blocks, encoder blocks,
+and the RWKV channel-mix, which is squared-ReLU and thus naturally
+two-sided). The packed arrays are stacked over scan periods and stored as
+plain pytree leaves alongside the dense weights, so the model's
+``lax.scan`` carries them like any other parameter; the forward/decode
+paths pick them up when ``cfg.sparse_ffn`` is set.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +36,11 @@ import numpy as np
 from repro.core import balance, bitmask as bm
 from repro.core.sparse import prune_by_magnitude
 from repro.kernels import ops
+
+# row granularity of the activation-side skip in the serving hot path: the
+# smallest MXU-legal fp32 row tile, so one live decode lane costs one
+# sub-block of MACs, not the whole 128-row block
+SUB_M = 8
 
 
 @dataclasses.dataclass
@@ -44,25 +58,18 @@ class SparseFFN:
     act: str
     perm: np.ndarray
 
-    def __call__(self, x: jnp.ndarray, *, interpret: Optional[bool] = None
-                 ) -> jnp.ndarray:
-        h = ops.sparse_dense_matmul(x, self.w_in, two_sided=True,
-                                    interpret=interpret)
-        if self.act == "relu":
-            h = jax.nn.relu(h)
-        elif self.act == "relu2":
-            r = jax.nn.relu(h)
-            h = r * r
-        elif self.act in ("swiglu", "geglu"):
-            g = ops.sparse_dense_matmul(x, self.w_gate, two_sided=True,
-                                        interpret=interpret)
-            h = (jax.nn.silu(g) if self.act == "swiglu"
-                 else jax.nn.gelu(g)) * h
-        else:
-            raise ValueError(self.act)
+    def __call__(self, x: jnp.ndarray, *, interpret: Optional[bool] = None,
+                 sub_m: Optional[int] = None) -> jnp.ndarray:
+        gate = self.w_gate
+        h = ops.fused_sparse_ffn(
+            x, self.w_in.indices, self.w_in.vals,
+            gate.indices if gate is not None else None,
+            gate.vals if gate is not None else None, act=self.act,
+            k_total=self.w_in.shape[0], bk=self.w_in.bk, bn=self.w_in.bn,
+            sub_m=sub_m, interpret=interpret)
         # h is sparse after relu-family activations -> two-sided pays off here
         return ops.sparse_dense_matmul(h, self.w_out, two_sided=True,
-                                       interpret=interpret)
+                                       sub_m=sub_m, interpret=interpret)
 
 
 def _pad_to(x: np.ndarray, mult: int, axis: int) -> np.ndarray:
@@ -74,13 +81,13 @@ def _pad_to(x: np.ndarray, mult: int, axis: int) -> np.ndarray:
     return np.pad(x, widths)
 
 
-def build_sparse_ffn(params_ffn: Dict[str, Any], act: str, *,
-                     density: float = 0.35, num_shards: int = 16,
-                     chunk: int = bm.CHUNK, step: int = 0) -> SparseFFN:
-    """Offline pipeline: prune -> balance -> fold -> pack.
+def _prep_matrices(params_ffn: Dict[str, Any], *, density: float,
+                   num_shards: int, chunk: int, step: int
+                   ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+    """Offline prune -> balance -> fold -> pad for one FFN's matrices.
 
-    ``params_ffn`` holds dense ``w_in`` [D, F], ``w_out`` [F, D] and
-    optionally ``w_gate`` [D, F] (one block's FFN params).
+    Returns chunk-padded dense float32 matrices keyed ``in``/``out``
+    (/``gate``) plus the balance permutation.
     """
     w_in = np.asarray(params_ffn["w_in"], np.float32)
     w_out = np.asarray(params_ffn["w_out"], np.float32)
@@ -104,26 +111,207 @@ def build_sparse_ffn(params_ffn: Dict[str, Any], act: str, *,
     # 3. fold: w_out reads its input (F) axis in the same permuted order
     w_out = balance.fold_permutation(w_out, perm, axis_in=0)
 
-    # 4. pack (pad every dim to the chunk so BlockSpecs tile exactly)
-    w_in = _pad_to(_pad_to(w_in, chunk, 0), chunk, 1)
-    w_out = _pad_to(_pad_to(w_out, chunk, 0), chunk, 1)
-    pack = lambda w: bm.block_sparsify(w, bk=chunk, bn=chunk)
-    gate = None
+    # 4. pad every dim to the chunk so BlockSpecs tile exactly
+    mats = {"in": _pad_to(_pad_to(w_in, chunk, 0), chunk, 1),
+            "out": _pad_to(_pad_to(w_out, chunk, 0), chunk, 1)}
     if w_gate is not None:
-        gate = pack(_pad_to(_pad_to(w_gate, chunk, 0), chunk, 1))
-    return SparseFFN(pack(w_in), pack(w_out), gate, act, perm)
+        mats["gate"] = _pad_to(_pad_to(w_gate, chunk, 0), chunk, 1)
+    return mats, perm
+
+
+def build_sparse_ffn(params_ffn: Dict[str, Any], act: str, *,
+                     density: float = 0.35, num_shards: int = 16,
+                     chunk: int = bm.CHUNK, step: int = 0) -> SparseFFN:
+    """Offline pipeline: prune -> balance -> fold -> pack.
+
+    ``params_ffn`` holds dense ``w_in`` [D, F], ``w_out`` [F, D] and
+    optionally ``w_gate`` [D, F] (one block's FFN params).
+    """
+    mats, perm = _prep_matrices(params_ffn, density=density,
+                                num_shards=num_shards, chunk=chunk,
+                                step=step)
+    pack = lambda w, pad_to=None: bm.block_sparsify(w, bk=chunk, bn=chunk,
+                                                    pad_to=pad_to)
+    gate = None
+    w_in = pack(mats["in"])
+    if "gate" in mats:
+        # pack in/gate to one shared max_nz so the fused kernel's j axis
+        # aligns offline (no runtime repad of the weight tensors)
+        gate = pack(mats["gate"])
+        mnz = max(w_in.max_nz, gate.max_nz)
+        w_in, gate = pack(mats["in"], mnz), pack(mats["gate"], mnz)
+    return SparseFFN(w_in, pack(mats["out"]), gate, act, perm)
 
 
 def dense_reference(ffn: SparseFFN, x: jnp.ndarray) -> jnp.ndarray:
-    """Oracle for a SparseFFN (densify both matmuls, same activation)."""
-    x = jnp.pad(x, ((0, 0), (0, ffn.w_in.shape[0] - x.shape[-1])))
+    """Oracle for a SparseFFN (densify both matmuls, same activation).
+
+    Accepts any leading shape ([M, D], [B, S, D], ...) — the K pad applies
+    to the last axis only.
+    """
+    pad = ffn.w_in.shape[0] - x.shape[-1]
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    x = jnp.pad(x, widths)
     h = x @ bm.block_densify(ffn.w_in).astype(x.dtype)
     if ffn.act == "relu":
         h = jax.nn.relu(h)
     elif ffn.act == "relu2":
         r = jax.nn.relu(h)
         h = r * r
+    elif ffn.act == "gelu":
+        h = jax.nn.gelu(h)
     else:
         g = x @ bm.block_densify(ffn.w_gate).astype(x.dtype)
         h = (jax.nn.silu(g) if ffn.act == "swiglu" else jax.nn.gelu(g)) * h
     return h @ bm.block_densify(ffn.w_out).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# whole-model sparsification (packed leaves stacked over scan periods)
+# ---------------------------------------------------------------------------
+def _pack_stack(mats: List[np.ndarray], chunk: int, pad_to: int
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """Pack per-period matrices with one shared ``max_nz`` so the stacked
+    [P, nb, max_nz(, bk, bn)] arrays scan cleanly."""
+    packed = [bm.block_sparsify(m, bk=chunk, bn=chunk, pad_to=pad_to)
+              for m in mats]
+    idx = np.stack([np.asarray(s.indices) for s in packed])
+    vals = np.stack([np.asarray(s.vals) for s in packed])
+    return idx, vals
+
+
+def _pack_stacked_ffn(ffn_params: Dict[str, Any], *, density: float,
+                      num_shards: int, chunk: int
+                      ) -> Dict[str, jnp.ndarray]:
+    """Sparsify one stacked FFN param dict (leaves [P, ...]) into packed
+    leaves usable inside the period scan."""
+    dtype = jnp.asarray(ffn_params["w_in"]).dtype
+    w_in = np.asarray(ffn_params["w_in"], np.float32)
+    P = w_in.shape[0]
+    per_period = []
+    for p in range(P):
+        blk = {k: np.asarray(v, np.float32)[p]
+               for k, v in ffn_params.items() if k in ("w_in", "w_out",
+                                                       "w_gate")}
+        mats, _ = _prep_matrices(blk, density=density,
+                                 num_shards=num_shards, chunk=chunk, step=p)
+        per_period.append(mats)
+    # shared max_nz per role across periods; in/gate additionally share
+    # one value so the fused kernel's j axis aligns offline
+    mnz = {role: max(bm.block_sparsify(m[role], bk=chunk, bn=chunk).max_nz
+                     for m in per_period) for role in per_period[0]}
+    if "gate" in mnz:
+        mnz["in"] = mnz["gate"] = max(mnz["in"], mnz["gate"])
+    out: Dict[str, jnp.ndarray] = {}
+    for role in per_period[0]:
+        idx, vals = _pack_stack([m[role] for m in per_period], chunk,
+                                mnz[role])
+        out[f"{role}_indices"] = jnp.asarray(idx)
+        out[f"{role}_vals"] = jnp.asarray(vals).astype(dtype)
+    return out
+
+
+def sparsify_model(params: Dict[str, Any], cfg, *, density: float = 0.35,
+                   num_shards: int = 16, chunk: int = bm.CHUNK
+                   ) -> Dict[str, Any]:
+    """Offline whole-model pass: prune -> balance -> fold -> pack every
+    eligible FFN into two-sided block-sparse form.
+
+    Eligible: dense-block FFNs (gated or not), encoder-block FFNs, and the
+    RWKV channel-mix (squared ReLU). MoE expert banks keep their own
+    balancing (``sparsity.expert_balance``) and are left dense, as are all
+    attention/SSM projections (ARCHITECTURE.md §Arch-applicability).
+
+    Returns a new params pytree carrying packed ``ffn_sparse`` /
+    ``channel_mix_sparse`` leaves *alongside* the dense weights; the model
+    dispatches to them when ``cfg.sparse_ffn`` is set, so one params object
+    can serve both paths (A/B benches, invariance tests). With
+    ``density=1.0`` the pass is numerically a no-op (pack + balance fold
+    only), which is how the serving-invariance tests pin sparse == dense.
+    """
+    new = dict(params)
+    for stack_key in ("blocks", "enc_blocks"):
+        if stack_key not in params:
+            continue
+        stack = {}
+        for pk, bp in params[stack_key].items():
+            bp = dict(bp)
+            if "ffn" in bp:
+                bp["ffn_sparse"] = _pack_stacked_ffn(
+                    bp["ffn"], density=density, num_shards=num_shards,
+                    chunk=chunk)
+            if "channel_mix" in bp:
+                cm = {"w_in": bp["channel_mix"]["w_in"],
+                      "w_out": bp["channel_mix"]["w_out"]}
+                bp["channel_mix_sparse"] = _pack_stacked_ffn(
+                    cm, density=density, num_shards=num_shards, chunk=chunk)
+            stack[pk] = bp
+        new[stack_key] = stack
+    return new
+
+
+def sparse_ffn_apply(sp: Dict[str, jnp.ndarray], x: jnp.ndarray, act: str, *,
+                     sub_m: Optional[int] = SUB_M,
+                     interpret: Optional[bool] = None,
+                     chunk: int = bm.CHUNK) -> jnp.ndarray:
+    """Run one packed sparse FFN (a period slice of ``sparsify_model``
+    leaves) on ``x [..., D]`` -> [..., D].
+
+    Two kernel launches: the fused in-proj/activation/gate kernel, then the
+    two-sided output projection fed by the activation zeros. Output columns
+    are sliced back to D (the pack pads D and F to the chunk).
+    """
+    D = x.shape[-1]
+    k_in = -(-D // chunk) * chunk
+    h = ops.fused_sparse_ffn(
+        x, sp["in_indices"], sp["in_vals"], sp.get("gate_indices"),
+        sp.get("gate_vals"), act=act, k_total=k_in, bk=chunk, bn=chunk,
+        sub_m=sub_m, interpret=interpret)
+    out = ops.sparse_matmul_packed(
+        h, sp["out_indices"], sp["out_vals"], k_total=h.shape[-1], bk=chunk,
+        bn=chunk, sub_m=sub_m, two_sided=True, interpret=interpret)
+    return out[..., :D]
+
+
+def sparse_ffn_tile_stats(sp: Dict[str, jnp.ndarray], x: jnp.ndarray,
+                          act: str, *, sub_m: Optional[int] = SUB_M,
+                          chunk: int = bm.CHUNK) -> Dict[str, jnp.ndarray]:
+    """Executed / one-sided / dense tile-MAC counts for one packed FFN on
+    real activations (pure jnp; pinned to the kernel counters by
+    ``tests/test_kernels.py``). Sums the in-, gate- and out-projections;
+    the hidden tensor is reconstructed via the dense oracle so the
+    out-projection stats see the true activation zeros.
+    """
+    D = x.shape[-1]
+    k_in = -(-D // chunk) * chunk
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, k_in - D)]
+    xp = jnp.pad(x, widths).astype(jnp.float32)
+
+    h = xp @ bm.block_densify(bm.BlockSparseMatrix(
+        sp["in_indices"], sp["in_vals"],
+        (k_in, sp["in_indices"].shape[0] * chunk), chunk, chunk)
+    ).astype(jnp.float32)
+    if act == "relu":
+        h = jnp.maximum(h, 0)
+    elif act == "relu2":
+        r = jnp.maximum(h, 0)
+        h = r * r
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        g = xp @ bm.block_densify(bm.BlockSparseMatrix(
+            sp["gate_indices"], sp["gate_vals"],
+            (k_in, sp["gate_indices"].shape[0] * chunk), chunk, chunk)
+        ).astype(jnp.float32)
+        h = (jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)) * h
+
+    totals = ops.sparse_matmul_tile_stats(x, sp["in_indices"], k_total=k_in,
+                                          bk=chunk, sub_m=sub_m)
+    if "gate_indices" in sp:
+        s = ops.sparse_matmul_tile_stats(x, sp["gate_indices"],
+                                         k_total=k_in, bk=chunk, sub_m=sub_m)
+        totals = {k: totals[k] + s[k] for k in totals}
+    s = ops.sparse_matmul_tile_stats(h, sp["out_indices"],
+                                     k_total=h.shape[-1], bk=chunk,
+                                     sub_m=sub_m)
+    return {k: totals[k] + s[k] for k in totals}

@@ -83,6 +83,36 @@ def test_round_robin_beats_static(seed):
     assert rr < 1.1  # rotation evens the systematic skew
 
 
+def test_round_robin_permutation_is_assignment_special_case():
+    """One rotation rule everywhere: the scheduler's scan-order permutation
+    is round_robin_assignment with one sub-chunk per lane (the old code
+    rotated by num_subchunks in one place and by lanes in the other)."""
+    for n in (2, 3, 5, 8):
+        for step in range(2 * n):
+            np.testing.assert_array_equal(
+                balance.round_robin_permutation(n, step),
+                balance.round_robin_assignment(n, n, step))
+    # with more sub-chunks than lanes the assignment wraps on lanes
+    a = balance.round_robin_assignment(8, 4, 1)
+    assert a.max() == 3 and a.min() == 0
+    np.testing.assert_array_equal(a, (np.arange(8) + 1) % 4)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 6), st.integers(1, 64))
+@settings(max_examples=40, deadline=None)
+def test_round_robin_never_worsens_static_profiles(seed, lanes_log, steps):
+    """For a static per-sub-chunk density profile (the paper's case: filter
+    densities are fixed, input chunks stream), round-robin rotation never
+    worsens max/mean imbalance vs static assignment, for any step count."""
+    rng = np.random.default_rng(seed)
+    lanes = 2 ** (lanes_log % 4 + 1)
+    ns = lanes * int(rng.integers(1, 5))
+    base = rng.lognormal(0, 1, size=ns)
+    work = np.tile(base, (steps, 1))       # time-invariant profile
+    static, rr = balance.rotate_assignment(work, lanes, steps)
+    assert rr <= static + 1e-9
+
+
 def test_expert_placement_covers_all_devices():
     load = np.random.default_rng(0).lognormal(0, 1, 64)
     dev = balance.expert_placement(load, 8)

@@ -92,3 +92,104 @@ def test_kernel_under_jit_and_grad_free(rng):
         return ops.sparse_dense_matmul(x, ws, two_sided=True).sum()
 
     assert np.isfinite(float(f(x)))
+
+
+# ---------------------------------------------------------------------------
+# two-sided skip accounting (kernel counters vs the jnp skip model)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("sub_m", [None, 8, 32])
+def test_two_sided_kernel_skips_every_zero_pair(rng, sub_m):
+    """The kernel must execute *exactly* the (weight-nz chunk x
+    activation-occupied row-sub-block) pairs — every pair with an all-zero
+    side is skipped, at block and at sub-block occupancy granularity."""
+    w = _sparse(rng, (512, 256), 0.3)
+    ws = bm.block_sparsify(w)
+    x = _sparse(rng, (256, 512), 0.4)
+    x[:128, :] = 0.0            # an all-zero row block
+    x[128:136, 128:256] = 0.0   # and an all-zero 8-row sub-block x chunk
+    out, counts = bitmask_spmm(jnp.asarray(x), ws.indices, ws.vals,
+                               two_sided=True, sub_m=sub_m, count_macs=True)
+    stats = ops.sparse_matmul_tile_stats(jnp.asarray(x), ws.indices,
+                                         k_total=512, bk=128, sub_m=sub_m)
+    assert int(counts.sum()) == int(stats["executed"])
+    assert int(stats["executed"]) < int(stats["weight_tile_macs"])
+    # skipping never changes numerics: skipped pairs are exactly zero
+    exp = ref.bitmask_spmm_ref(jnp.asarray(x), ws.indices, ws.vals)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_subblock_occupancy_beats_block_occupancy(rng):
+    """One live 8-row decode lane inside a 128-row block: block-granular
+    occupancy MACs all 16 sub-blocks' rows, sub-block occupancy only 1."""
+    w = _sparse(rng, (256, 128), 0.6)
+    ws = bm.block_sparsify(w)
+    x = np.zeros((128, 256), np.float32)
+    x[:8] = rng.normal(size=(8, 256)).astype(np.float32)
+    out, counts = bitmask_spmm(jnp.asarray(x), ws.indices, ws.vals,
+                               two_sided=True, sub_m=8, count_macs=True)
+    nz_chunks = int((np.asarray(ws.indices) >= 0).sum())
+    # exactly one sub-block executes per stored chunk — never 16
+    assert int(counts.sum()) == nz_chunks
+    exp = ref.bitmask_spmm_ref(jnp.asarray(x), ws.indices, ws.vals)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused in-proj/activation/gate kernel
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("act", ["relu", "relu2", "gelu", "swiglu", "geglu"])
+def test_fused_ffn_matches_dense_oracle(rng, act):
+    K, F = 256, 256
+    x = _sparse(rng, (64, K), 0.6)
+    w_in = _sparse(rng, (K, F), 0.5)
+    ws_in = bm.block_sparsify(w_in)
+    gate_idx = gate_vals = None
+    h_ref = x @ w_in
+    if act in ("swiglu", "geglu"):
+        w_g = _sparse(rng, (K, F), 0.5)
+        ws_g = bm.block_sparsify(w_g)
+        gate_idx, gate_vals = ws_g.indices, ws_g.vals
+        g = jnp.asarray(x @ w_g)
+        gv = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+        exp = gv * h_ref
+    elif act == "relu":
+        exp = np.maximum(h_ref, 0)
+    elif act == "relu2":
+        r = np.maximum(h_ref, 0)
+        exp = r * r
+    else:
+        exp = jax.nn.gelu(jnp.asarray(h_ref))
+    got = ops.fused_sparse_ffn(jnp.asarray(x), ws_in.indices, ws_in.vals,
+                               gate_idx, gate_vals, act=act, k_total=K,
+                               bk=128, bn=128, sub_m=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                               rtol=2e-4, atol=2e-3)
+
+
+def test_fused_ffn_handles_leading_dims_and_k_pad(rng):
+    """[B, S, D] input with D below the chunk (the model's real call
+    shape): rows and K both pad, output unpads."""
+    D, F = 64, 128
+    w_in = _sparse(rng, (128, F), 0.7)  # packed K is chunk-padded
+    w_in[D:] = 0.0
+    ws_in = bm.block_sparsify(w_in)
+    x = _sparse(rng, (2, 5, D), 0.6)
+    got = ops.fused_sparse_ffn(jnp.asarray(x), ws_in.indices, ws_in.vals,
+                               act="relu2", k_total=128, bk=128, bn=128,
+                               sub_m=8)
+    r = np.maximum(x @ w_in[:D], 0)
+    assert got.shape == (2, 5, F)
+    np.testing.assert_allclose(np.asarray(got), r * r, rtol=2e-4, atol=2e-3)
+
+
+def test_interpret_default_resolves_at_call_time(monkeypatch):
+    """The interpret default must track jax.default_backend() *now*, not a
+    snapshot taken at import (the backend may be initialized later, e.g.
+    by dist mesh setup)."""
+    assert ops._resolve_interpret(None) is True      # CPU host
+    monkeypatch.setattr(ops.jax, "default_backend", lambda: "tpu")
+    assert ops.on_tpu()
+    assert ops._resolve_interpret(None) is False     # compiled on TPU
+    assert ops._resolve_interpret(True) is True      # explicit wins

@@ -1,0 +1,196 @@
+"""BARISTA sparse path as a first-class inference mode, end to end.
+
+``sparsify_model`` packs every eligible FFN offline; ``cfg.sparse_ffn``
+switches ``forward`` / ``prefill`` / ``decode_step`` onto the fused
+two-sided kernels; the serving engine and scheduler then decode sparse per
+slot. Two invariants are load-bearing:
+
+* **sparse == dense** at ``density=1.0`` (pack + balance-fold is
+  numerically a no-op): forward/decode logits within fp32-accum tolerance,
+  greedy generate byte-identical on the fixed seeds.
+* **batch-composition invariance under sparse decode** (the
+  ``test_serving.py`` property with ``cfg.sparse_ffn=True``): a request
+  decoded alone equals the same request in a staggered continuous batch
+  with slot reuse, exactly — the sparse kernels must not break the
+  barrier-free per-slot engine.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import load_smoke
+from repro.models import model as M
+from repro.serve import Request, Scheduler, generate
+from repro.sparsity.sparse_ffn import sparsify_model
+
+# one gated dense arch (swiglu), one relu2 dense arch, one attention-free
+# arch whose channel-mix is the sparse FFN
+ARCHS = ["qwen3_4b", "nemotron_4_340b", "rwkv6_3b"]
+
+
+def _setup(arch, density=1.0):
+    cfg = load_smoke(arch)
+    cfg_d = dataclasses.replace(cfg, sparse_ffn=False)
+    cfg_s = dataclasses.replace(cfg, sparse_ffn=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    params_s = sparsify_model(params, cfg, density=density, num_shards=4)
+    return cfg_d, cfg_s, params, params_s
+
+
+def _mk_requests(cfg, n, prompt_len, max_new, stagger, seed=0):
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(1, cfg.vocab, (n, prompt_len)).astype(np.int32)
+    return [Request(rid=i, prompt=prompts[i], max_new=max_new,
+                    arrival=i * stagger) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# sparsify_model structure
+# ---------------------------------------------------------------------------
+def test_sparsify_adds_packed_leaves_and_keeps_dense():
+    cfg_d, _, params, params_s = _setup("qwen3_4b")
+    for pk, bp in params_s["blocks"].items():
+        assert "ffn_sparse" in bp, pk
+        sp = bp["ffn_sparse"]
+        P = cfg_d.periods
+        assert sp["in_indices"].shape[0] == P
+        assert sp["in_vals"].ndim == 5          # [P, nb, mnz, bk, bn]
+        assert "gate_indices" in sp             # swiglu packs the gate too
+        # dense weights ride along untouched
+        np.testing.assert_array_equal(np.asarray(bp["ffn"]["w_in"]),
+                                      np.asarray(params["blocks"][pk]["ffn"]["w_in"]))
+
+
+def test_sparsify_covers_rwkv_channel_mix():
+    _, _, _, params_s = _setup("rwkv6_3b")
+    for bp in params_s["blocks"].values():
+        assert "channel_mix_sparse" in bp
+        assert "gate_indices" not in bp["channel_mix_sparse"]  # relu2
+
+
+def test_dense_params_under_sparse_cfg_keep_dense_path():
+    """cfg.sparse_ffn=True with plain (un-sparsified) params must run the
+    dense path unchanged — several stock configs ship sparse_ffn=True."""
+    cfg_d, cfg_s, params, _ = _setup("nemotron_4_340b")
+    toks = jnp.asarray([[3, 1, 4, 1, 5]], jnp.int32)
+    ld, _ = M.forward(params, toks, cfg_d)
+    ls, _ = M.forward(params, toks, cfg_s)
+    np.testing.assert_array_equal(np.asarray(ld), np.asarray(ls))
+
+
+# ---------------------------------------------------------------------------
+# sparse == dense at density 1.0 (fp32-accum tolerance)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_sparse_matches_dense(arch):
+    cfg_d, cfg_s, params, params_s = _setup(arch)
+    toks = jnp.asarray([[3, 1, 4, 1, 5, 9, 2, 6]], jnp.int32)
+    ld, _ = M.forward(params, toks, cfg_d)
+    ls, _ = M.forward(params_s, toks, cfg_s)
+    np.testing.assert_allclose(np.asarray(ls), np.asarray(ld),
+                               rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step_sparse_matches_dense(arch):
+    cfg_d, cfg_s, params, params_s = _setup(arch)
+    cache = M.init_cache(cfg_d, 2, 8)
+    tok = jnp.asarray([[3], [7]], jnp.int32)
+    pos = jnp.asarray([0, 0], jnp.int32)
+    ld, _ = M.decode_step(params, cfg_d, tok, cache, pos)
+    ls, _ = M.decode_step(params_s, cfg_s, tok, cache, pos)
+    np.testing.assert_allclose(np.asarray(ls), np.asarray(ld),
+                               rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("arch", ["qwen3_4b", "rwkv6_3b"])
+def test_prefill_sparse_matches_sequential_decode(arch):
+    """The single-pass prefill and S sequential decode steps must agree
+    *within the sparse mode* (cache handoff correctness)."""
+    _, cfg_s, _, params_s = _setup(arch)
+    toks = jnp.asarray([[3, 1, 4, 1, 5, 9]], jnp.int32)
+    cache_seq = M.init_cache(cfg_s, 1, 8)
+    lg = None
+    for t in range(6):
+        lg, cache_seq = M.decode_step(params_s, cfg_s, toks[:, t:t + 1],
+                                      cache_seq, jnp.int32(t))
+    last_pre, cache_pre = M.prefill(params_s, cfg_s, toks,
+                                    M.init_cache(cfg_s, 1, 8))
+    np.testing.assert_allclose(np.asarray(last_pre), np.asarray(lg[:, 0]),
+                               rtol=5e-3, atol=5e-3)
+    nxt = jnp.argmax(last_pre, -1).astype(jnp.int32)[:, None]
+    g1, _ = M.decode_step(params_s, cfg_s, nxt, cache_seq, jnp.int32(6))
+    g2, _ = M.decode_step(params_s, cfg_s, nxt, cache_pre, jnp.int32(6))
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               rtol=5e-3, atol=5e-3)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_generate_sparse_matches_dense(arch):
+    """Greedy generation through prefill + per-slot decode: the sparse
+    inference mode reproduces the dense model's tokens (density 1.0,
+    fixed seeds — fp32-accum differences stay below the argmax margin)."""
+    cfg_d, cfg_s, params, params_s = _setup(arch)
+    prompt = jnp.asarray([[5, 9, 2, 7], [1, 8, 8, 3]], jnp.int32)
+    out_d = generate(params, cfg_d, prompt, 6)
+    out_s = generate(params_s, cfg_s, prompt, 6)
+    np.testing.assert_array_equal(np.asarray(out_d), np.asarray(out_s))
+
+
+# ---------------------------------------------------------------------------
+# serving: batch-composition invariance under sparse decode
+# ---------------------------------------------------------------------------
+def _solo(cfg, params, req, num_slots, max_len):
+    sch = Scheduler(cfg, params, num_slots=num_slots, max_len=max_len)
+    return sch.run([Request(rid=req.rid, prompt=req.prompt,
+                            max_new=req.max_new, arrival=0)])[req.rid]
+
+
+@pytest.mark.parametrize("arch", ["qwen3_4b", "rwkv6_3b"])
+def test_sparse_batch_composition_invariance(arch):
+    """test_serving.py's tentpole property with cfg.sparse_ffn=True and a
+    *pruned* model (density 0.5): solo decode == staggered continuous
+    batch with slot reuse, byte-identical per request."""
+    _, cfg_s, _, params_s = _setup(arch, density=0.5)
+    slots, max_len = 2, 10
+    reqs = _mk_requests(cfg_s, 4, prompt_len=5, max_new=4, stagger=1)
+    sch = Scheduler(cfg_s, params_s, num_slots=slots, max_len=max_len)
+    batched = sch.run([Request(rid=r.rid, prompt=r.prompt,
+                               max_new=r.max_new, arrival=r.arrival)
+                       for r in reqs])
+    for r in reqs:
+        assert batched[r.rid] == _solo(cfg_s, params_s, r, slots, max_len), \
+            r.rid
+
+
+def test_scheduler_probe_reports_sparse_skips():
+    """probe_ffn_stats on a live sparse batch: weight-nz MACs are skipped
+    on the activation side (sub-block occupancy + relu2 zeros), fractions
+    are sane, and the probe does not perturb decoding."""
+    _, cfg_s, _, params_s = _setup("rwkv6_3b", density=0.5)
+    sch = Scheduler(cfg_s, params_s, num_slots=2, max_len=10)
+    for r in _mk_requests(cfg_s, 2, prompt_len=4, max_new=5, stagger=0):
+        sch.submit(r)
+    sch.step()
+    stats = sch.probe_ffn_stats()
+    assert stats is not None
+    assert 0.0 < stats["executed"] < stats["weight_tile_macs"]
+    assert stats["weight_tile_macs"] <= stats["dense_tile_macs"]
+    assert 0.0 < stats["skipped_frac"] <= 1.0
+    assert 0.0 < stats["executed_frac"] < 1.0
+    before = {rid: list(t) for rid, t in sch.produced.items()}
+    sch.step()                       # decoding continues normally
+    assert all(len(sch.produced[r]) >= len(before[r]) for r in before)
+
+
+def test_scheduler_probe_none_for_dense_params():
+    cfg_d, _, params, _ = _setup("qwen3_4b")
+    sch = Scheduler(cfg_d, params, num_slots=1, max_len=8)
+    assert sch.probe_ffn_stats() is None     # no live slots
+    sch.submit(Request(rid=0, prompt=np.asarray([3, 1, 4], np.int32),
+                       max_new=3))
+    sch.step()
+    assert sch.probe_ffn_stats() is None     # live, but no sparse leaves

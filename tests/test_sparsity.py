@@ -72,6 +72,28 @@ def test_sparse_ffn_matches_dense_reference(rng, act):
     assert np.isfinite(out).all()
 
 
+@pytest.mark.parametrize("act", ["relu2", "swiglu"])
+def test_sparse_ffn_3d_matches_dense_reference(rng, act):
+    """dense_reference (and the sparse path) must accept [B, S, D] inputs —
+    the shape every model call site uses; the pad is last-axis only."""
+    p = {"w_in": rng.normal(size=(96, 256)).astype(np.float32),
+         "w_out": rng.normal(size=(256, 96)).astype(np.float32)}
+    if act == "swiglu":
+        p["w_gate"] = rng.normal(size=(96, 256)).astype(np.float32)
+    ffn = sf.build_sparse_ffn(p, act, density=0.4, num_shards=4)
+    x = rng.normal(size=(2, 7, 96)).astype(np.float32)
+    x[rng.random(x.shape) < 0.5] = 0
+    out = np.asarray(ffn(jnp.asarray(x)))
+    exp = np.asarray(sf.dense_reference(ffn, jnp.asarray(x)))
+    assert out.shape == exp.shape == (2, 7, ffn.w_out.shape[1])
+    np.testing.assert_allclose(out, exp, rtol=2e-4, atol=2e-3)
+    # 2-D still works (regression guard for the generalized pad)
+    x2 = x[0]
+    np.testing.assert_allclose(
+        np.asarray(sf.dense_reference(ffn, jnp.asarray(x2))),
+        exp[0], rtol=2e-4, atol=2e-3)
+
+
 def test_sparse_ffn_weight_density_reduced(rng):
     w_in = rng.normal(size=(256, 512)).astype(np.float32)
     w_in[:128] = 0.0  # a dead K-chunk (e.g. pruned input features)
