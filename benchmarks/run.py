@@ -12,12 +12,13 @@ import time
 
 from benchmarks import (fig7_speedup, fig8_breakdown, fig9_energy,
                         fig10_isolation, fig11_buffers, kernel_bench,
-                        roofline, serve_bench, table3_asic)
+                        roofline, serve_bench, table3_asic, vision_bench)
 
 MODULES = {
     "fig7": fig7_speedup, "fig8": fig8_breakdown, "fig9": fig9_energy,
     "fig10": fig10_isolation, "fig11": fig11_buffers, "table3": table3_asic,
     "kernel": kernel_bench, "roofline": roofline, "serve": serve_bench,
+    "vision": vision_bench,
 }
 
 

@@ -1,68 +1,61 @@
 """Reproduce the paper's own experiment: sparse CNN inference at 32K MACs.
 
     PYTHONPATH=src python examples/sparse_cnn_sim.py [--bench VGGNet]
+        [--image-size 40] [--layers N]
 
-Runs the actual CNN compute path (im2col conv + two-sided chunk-sparse
-kernel) for one pruned conv layer, measures the real densities, then feeds
-them to the cycle-level simulator to produce this benchmark's row of the
-paper's Figure 7/8 — the framework's numerics and the reproduction's
-performance claims come from the same tensors.
+Runs the *whole* pruned network (paper Table-1 filter density) through the
+implicit-GEMM two-sided sparse conv Pallas kernel — every layer, fused ReLU,
+in-kernel occupancy emission — checks it against the dense oracle, compares
+the measured per-layer densities against the paper's Table 1 values, then
+feeds the measured network densities to the cycle-level simulator to produce
+this benchmark's row of the paper's Figure 7 — the framework's numerics and
+the reproduction's performance claims come from the same tensors.
 """
 from __future__ import annotations
 
 import argparse
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bitmask as bm
 from repro.core import simulator as S
-from repro.core.sparse import conv2d_im2col, prune_by_magnitude
-from repro.kernels import ops
-from repro.sparsity import instrument
+from repro.launch.vision import blob_images
+from repro.vision import (SUPPORTED_ARCHS, build_vision_model, layer_table,
+                          measured_densities, oracle_check)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--bench", default="VGGNet", choices=list(S.BENCHMARKS))
+    ap.add_argument("--bench", default="VGGNet", choices=SUPPORTED_ARCHS)
+    ap.add_argument("--image-size", type=int, default=40)
+    ap.add_argument("--layers", type=int, default=None,
+                    help="truncate the network (default: all layers)")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     bench = S.BENCHMARKS[args.bench]
-    rng = np.random.default_rng(0)
 
-    # --- real compute path: one mid-network conv layer ----------------------
-    layer = bench.layers[len(bench.layers) // 2]
-    cin, cout, k = layer.d, layer.n, layer.k
-    print(f"{args.bench}: conv {k}x{k}x{cin}->{cout} @ {layer.oh}x{layer.ow}")
-    w = rng.normal(size=(k, k, cin, cout)).astype(np.float32)
-    w *= prune_by_magnitude(w, bench.filter_density, axis_out=-1)
-    x = np.abs(rng.normal(size=(1, layer.oh, layer.ow, cin))
-               ).astype(np.float32)  # post-ReLU (non-negative) feature map
-    x[rng.random(x.shape) >= bench.map_density] = 0.0  # paper's map density
+    # --- real compute path: the whole pruned network ------------------------
+    model = build_vision_model(args.bench, num_layers=args.layers,
+                               seed=args.seed)
+    print(f"{args.bench}: {model.num_layers} conv layers @ "
+          f"{args.image_size}px, Table-1 filter density {model.density}")
+    rng = np.random.default_rng(args.seed)
+    x = jnp.asarray(blob_images(rng, 1, args.image_size, bench.map_density))
 
-    # im2col (the paper's matrix interface) + chunk-sparse kernel
-    patches = conv2d_im2col(jnp.asarray(x), jnp.asarray(np.eye(
-        k * k * cin, dtype=np.float32).reshape(k, k, cin, k * k * cin)))
-    lhs = np.asarray(patches).reshape(-1, k * k * cin)
-    w_mat = w.transpose(2, 0, 1, 3).reshape(k * k * cin, cout)
-    pad_k = (-w_mat.shape[0]) % bm.CHUNK
-    pad_n = (-cout) % bm.CHUNK
-    w_pad = np.pad(w_mat, ((0, pad_k), (0, pad_n)))
-    ws = bm.block_sparsify(w_pad)
-    out = ops.sparse_dense_matmul(
-        jnp.asarray(np.pad(lhs, ((0, 0), (0, pad_k)))), ws, two_sided=True)
-    ref = lhs @ w_mat
-    err = float(np.abs(np.asarray(out)[:, :cout] - ref).max())
-    rel = err / (np.abs(ref).max() + 1e-9)
-    print(f"two-sided sparse conv vs dense: rel err {rel:.2e}")
+    _, stats, rel = oracle_check(model, x)
+    print(f"two-sided sparse conv net vs dense oracle: rel err {rel:.2e}")
 
-    fd = float((w_mat != 0).mean())
-    md = float(instrument.scalar_density(jnp.asarray(lhs)))
-    print(f"measured densities: filters {fd:.3f} (paper "
-          f"{bench.filter_density}), maps {md:.3f} (paper {bench.map_density})")
+    # --- measured per-layer densities vs paper Table 1 ----------------------
+    for row in layer_table(stats, with_paper=True):
+        print(row)
+    fd, md = measured_densities(stats)
+    print(f"measured network densities: filters {fd:.3f} (paper "
+          f"{bench.filter_density}), maps {md:.3f} (paper "
+          f"{bench.map_density})")
 
     # --- the paper's experiment with these densities -------------------------
-    meas = S.Benchmark(args.bench, bench.layers, fd, md)
+    # simulate exactly the layers that were measured (all, unless --layers)
+    meas = S.Benchmark(args.bench, bench.layers[: model.num_layers], fd, md)
     dense = S.simulate(meas, "Dense").cycles
     print(f"Figure 7 row ({args.bench}, measured densities, 32K MACs):")
     for s in ("One-sided", "SCNN", "SparTen", "SparTen-Iso", "Synchronous",

@@ -9,7 +9,7 @@ contribute nothing.
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -35,17 +35,38 @@ def two_sided_matmul_ref(x: jnp.ndarray, w: bm.BlockSparseMatrix,
     return sparse_matmul_ref(x, w)
 
 
-def conv2d_im2col(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
-                  padding: str = "SAME") -> jnp.ndarray:
+Stride = Union[int, Tuple[int, int]]
+Padding = Union[str, Sequence[Tuple[int, int]]]
+
+
+def normalize_stride(stride: Stride) -> Tuple[int, int]:
+    """Accept an int (both axes) or an explicit ``(sh, sw)`` pair."""
+    if isinstance(stride, int):
+        return (stride, stride)
+    sh, sw = stride
+    return (int(sh), int(sw))
+
+
+def normalize_padding(padding: Padding) -> Union[str, Tuple[Tuple[int, int], ...]]:
+    """Accept ``"SAME"``/``"VALID"`` or explicit ``((ph0, ph1), (pw0, pw1))``."""
+    if isinstance(padding, str):
+        return padding.upper()
+    return tuple((int(lo), int(hi)) for lo, hi in padding)
+
+
+def conv2d_im2col(x: jnp.ndarray, w: jnp.ndarray, stride: Stride = 1,
+                  padding: Padding = "SAME") -> jnp.ndarray:
     """2-D convolution lowered to matmul (the paper's matrix interface).
 
     x: [B, H, W, Cin]; w: [kh, kw, Cin, Cout]. The paper's accelerator
     exposes matrix-vector / matrix-matrix products and linearizes tensors;
-    im2col is that linearization.
+    im2col is that linearization. ``stride`` may be an int or a per-axis
+    ``(sh, sw)`` pair; ``padding`` a string or explicit
+    ``((ph0, ph1), (pw0, pw1))`` tuples.
     """
     kh, kw, cin, cout = w.shape
     patches = jax.lax.conv_general_dilated_patches(
-        x, (kh, kw), (stride, stride), padding,
+        x, (kh, kw), normalize_stride(stride), normalize_padding(padding),
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
     b, oh, ow, _ = patches.shape
     lhs = patches.reshape(b * oh * ow, cin * kh * kw)
@@ -55,31 +76,44 @@ def conv2d_im2col(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
     return out.reshape(b, oh, ow, cout)
 
 
-def sparse_conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
-                  padding: str = "SAME",
+def sparse_conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: Stride = 1,
+                  padding: Padding = "SAME",
                   weight_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Two-sided sparse conv: sparse activations (post-ReLU) × pruned filters.
 
-    Semantics path — sparsity is exploited by the kernel/simulator layers;
-    numerically this equals the dense conv with masked weights.
+    Semantics path — sparsity is exploited by the kernel/simulator layers
+    (the performance path is :mod:`repro.kernels.sparse_conv`); numerically
+    this equals the dense conv with masked weights.
     """
     return conv2d_im2col(x, masked_weight(w, weight_mask), stride, padding)
 
 
-@functools.partial(jax.jit, static_argnames=("block",))
-def activation_tile_density(x: jnp.ndarray, block: int = 128) -> jnp.ndarray:
+@functools.partial(jax.jit, static_argnames=("block", "valid_rows",
+                                             "valid_cols"))
+def activation_tile_density(x: jnp.ndarray, block: int = 128,
+                            valid_rows: Optional[int] = None,
+                            valid_cols: Optional[int] = None) -> jnp.ndarray:
     """Fraction of non-zero (row-block × k-chunk) activation tiles.
 
     The two-sided kernel skips a tile when either the weight chunk or the
     activation tile is all-zero; this measures the activation-side skip
     opportunity (e.g. ~40-60% after squared-ReLU at inference batch 1).
+
+    The mean runs over the tiles that contain *real* data only. Kernel-side
+    operands arrive pre-padded to the block grid (``ops._pad_rows_k``, the
+    vision path's per-image row stacking), and an all-zero padding tile
+    counted in the mean understates the density; callers measuring a padded
+    tensor pass the real extent via ``valid_rows`` / ``valid_cols``.
     """
     x2 = x.reshape(-1, x.shape[-1])
     m, k = x2.shape
+    vr = m if valid_rows is None else min(valid_rows, m)
+    vc = k if valid_cols is None else min(valid_cols, k)
     pm, pk = (-m) % block, (-k) % block
     x2 = jnp.pad(x2, ((0, pm), (0, pk)))
     occ = bm.chunk_occupancy(x2, block, block)
-    return occ.mean()
+    rt, ct = -(-vr // block), -(-vc // block)  # tiles overlapping real data
+    return occ[:rt, :ct].mean()
 
 
 def prune_by_magnitude(w: np.ndarray, density: float,

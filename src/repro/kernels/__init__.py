@@ -1,3 +1,9 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# bitmask_spmm.py — chunk-granular two-sided sparse matmul (LM FFN path)
+# fused_ffn.py    — in-proj -> activation -> gate-mul in one launch
+# sparse_conv.py  — implicit-GEMM two-sided sparse conv2d (vision path):
+#                   fused ReLU epilogue, in-kernel occupancy emission,
+#                   image-parity output-buffer coloring

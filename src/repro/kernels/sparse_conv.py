@@ -1,0 +1,250 @@
+"""Pallas TPU kernel: implicit-GEMM two-sided sparse conv2d (BARISTA on CNNs).
+
+The paper's workload is pruned CNNs with ReLU feature maps. This kernel runs
+a whole conv layer as the paper's matrix interface: activations are
+linearized to im2col patch rows (``jax.lax.conv_general_dilated_patches``)
+and tiled against bitmask-packed pruned filter chunks — the same
+chunk-block-sparse layout and row-sub-block skip machinery as
+:mod:`repro.kernels.bitmask_spmm` (``subblock_macs`` is imported from there,
+so the skip predicate is literally the same circuit).
+
+On top of the spmm core, the conv kernel adds the three CNN-specific pieces:
+
+* **Fused ReLU epilogue** — the nonlinearity is applied to the fp32 VMEM
+  accumulator at the flush, so the *activated* feature map goes to HBM in
+  one pass and its zeros are real zeros the next layer can skip.
+* **In-kernel occupancy emission** — the flush also writes the next layer's
+  activation tile bitmask (``sub_m``-row × ``bn``-column occupancy of the
+  post-ReLU output), so the measured feature-map density used by the
+  simulator feedback loop comes from the same tensors the kernel produced,
+  not a separate O(MN) host pass.
+* **Output-buffer coloring (paper §3.3)** — output tiles are
+  double-buffered: two VMEM accumulators, selected by the *parity of the
+  image* a row block belongs to. Consecutive input maps of a batch use
+  alternating colors, so image ``i+1`` can start accumulating while image
+  ``i``'s tiles drain — the barrier-free advance between consecutive input
+  maps. The grid row axis spans all images (``mb_per_img`` row blocks
+  each); correctness is invariant to interleaving, which
+  ``tests/test_vision.py`` pins (batched == per-image sequential, bitwise).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import bitmask as bm
+from repro.core.sparse import Padding, Stride, normalize_padding, \
+    normalize_stride
+from repro.kernels.bitmask_spmm import (DEFAULT_BM, LANE, _CompilerParams,
+                                        activation_occupancy, subblock_macs)
+
+
+def _conv_kernel(idx_ref, occ_ref, x_ref, w_ref, *refs, nsteps: int,
+                 two_sided: bool, sub_m: int, bm_rows: int, mb_per_img: int,
+                 fuse_relu: bool, emit_occupancy: bool, count_macs: bool):
+    refs = list(refs)
+    o_ref = refs.pop(0)
+    occ_out_ref = refs.pop(0) if emit_occupancy else None
+    cntout_ref = refs.pop(0) if count_macs else None
+    acc0_ref, acc1_ref = refs.pop(0), refs.pop(0)
+    cnt_ref = refs.pop(0) if count_macs else None
+
+    n_i = pl.program_id(0)
+    m_i = pl.program_id(1)
+    j = pl.program_id(2)
+    # output-buffer color: parity of the image this row block belongs to
+    parity = (m_i // mb_per_img) % 2
+
+    @pl.when(jnp.logical_and(j == 0, parity == 0))
+    def _init0():
+        acc0_ref[...] = jnp.zeros_like(acc0_ref)
+
+    @pl.when(jnp.logical_and(j == 0, parity == 1))
+    def _init1():
+        acc1_ref[...] = jnp.zeros_like(acc1_ref)
+
+    if cnt_ref is not None:
+        @pl.when(j == 0)
+        def _initc():
+            cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    k_idx = idx_ref[n_i, j]
+    k_safe = jnp.maximum(k_idx, 0)
+    w = w_ref[0, 0].astype(jnp.float32)
+    # MAC into the accumulator of this image's color only
+    subblock_macs(jnp.logical_and(k_idx >= 0, parity == 0), k_safe, occ_ref,
+                  m_i, x_ref, w, acc0_ref, cnt_ref, two_sided=two_sided,
+                  sub_m=sub_m, bm=bm_rows)
+    subblock_macs(jnp.logical_and(k_idx >= 0, parity == 1), k_safe, occ_ref,
+                  m_i, x_ref, w, acc1_ref, cnt_ref, two_sided=two_sided,
+                  sub_m=sub_m, bm=bm_rows)
+
+    def _flush(acc_ref):
+        y = acc_ref[...]
+        if fuse_relu:
+            y = jnp.maximum(y, 0.0)
+        o_ref[...] = y.astype(o_ref.dtype)
+        if occ_out_ref is not None:
+            # next layer's activation tile bitmask: sub_m-row occupancy of
+            # the post-epilogue output tile, one column per n block
+            nsub = bm_rows // sub_m
+            occ_out_ref[...] = (y.reshape(nsub, sub_m, -1) != 0).any(
+                axis=(1, 2)).astype(jnp.int32).reshape(nsub, 1)
+        if cntout_ref is not None:
+            cntout_ref[...] = cnt_ref[...]
+
+    @pl.when(jnp.logical_and(j == nsteps - 1, parity == 0))
+    def _flush0():
+        _flush(acc0_ref)
+
+    @pl.when(jnp.logical_and(j == nsteps - 1, parity == 1))
+    def _flush1():
+        _flush(acc1_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "bn", "bm_rows", "sub_m",
+                                             "mb_per_img", "two_sided",
+                                             "fuse_relu", "emit_occupancy",
+                                             "interpret", "count_macs"))
+def sparse_conv_spmm(patches: jnp.ndarray, indices: jnp.ndarray,
+                     vals: jnp.ndarray, *, bk: int = LANE, bn: int = LANE,
+                     bm_rows: int = DEFAULT_BM, sub_m: Optional[int] = None,
+                     mb_per_img: Optional[int] = None, two_sided: bool = True,
+                     fuse_relu: bool = True, emit_occupancy: bool = False,
+                     interpret: bool = True, count_macs: bool = False):
+    """Implicit-GEMM core: ``patches [M, K] @ W [K, N]`` + fused epilogue.
+
+    ``patches`` stacks the per-image im2col rows, each image padded to a
+    whole number of ``bm_rows`` blocks (``mb_per_img`` blocks per image —
+    the coloring key). Weights are the chunk-block-sparse layout of
+    :class:`repro.core.bitmask.BlockSparseMatrix`.
+
+    Returns ``out [M, N]`` (x.dtype, fp32 accumulation, ReLU fused when
+    ``fuse_relu``), plus an int32 ``[M // sub_m, n_blocks]`` occupancy map
+    when ``emit_occupancy`` and an int32 ``[n_blocks, M // bm_rows]``
+    executed-MAC map when ``count_macs`` (in that order).
+    """
+    M, K = patches.shape
+    nb, max_nz = indices.shape
+    N = nb * bn
+    sub_m = bm_rows if sub_m is None else sub_m
+    mb = M // bm_rows
+    mb_per_img = mb if mb_per_img is None else mb_per_img
+    assert M % bm_rows == 0 and K % bk == 0, (M, K, bm_rows, bk)
+    assert bm_rows % sub_m == 0, (bm_rows, sub_m)
+    assert mb % mb_per_img == 0, (mb, mb_per_img)
+
+    occ = activation_occupancy(patches, sub_m, bk)
+
+    grid = (nb, mb, max_nz)
+    kernel = functools.partial(
+        _conv_kernel, nsteps=max_nz, two_sided=two_sided, sub_m=sub_m,
+        bm_rows=bm_rows, mb_per_img=mb_per_img, fuse_relu=fuse_relu,
+        emit_occupancy=emit_occupancy, count_macs=count_macs)
+
+    out_shape = [jax.ShapeDtypeStruct((M, N), patches.dtype)]
+    out_specs = [pl.BlockSpec((bm_rows, bn), lambda n, m, j, idx, occ_: (m, n))]
+    if emit_occupancy:
+        nsub = bm_rows // sub_m
+        out_shape.append(jax.ShapeDtypeStruct((M // sub_m, nb), jnp.int32))
+        out_specs.append(pl.BlockSpec((nsub, 1),
+                                      lambda n, m, j, idx, occ_: (m, n)))
+    if count_macs:
+        out_shape.append(jax.ShapeDtypeStruct((nb, mb), jnp.int32))
+        out_specs.append(pl.BlockSpec((1, 1),
+                                      lambda n, m, j, idx, occ_: (n, m)))
+    scratch = [pltpu.VMEM((bm_rows, bn), jnp.float32),   # color 0
+               pltpu.VMEM((bm_rows, bn), jnp.float32)]   # color 1
+    if count_macs:
+        scratch.append(pltpu.VMEM((1, 1), jnp.int32))
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,  # indices, occupancy
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm_rows, bk),
+                             lambda n, m, j, idx, occ_:
+                             (m, jnp.maximum(idx[n, j], 0))),
+                pl.BlockSpec((1, 1, bk, bn),
+                             lambda n, m, j, idx, occ_: (n, j, 0, 0)),
+            ],
+            out_specs=out_specs,
+            scratch_shapes=scratch,
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+    )(indices, occ, patches, vals)
+    return tuple(out)
+
+
+def extract_patches(x: jnp.ndarray, kh: int, kw: int, stride: Stride,
+                    padding: Padding) -> Tuple[jnp.ndarray, Tuple[int, int]]:
+    """im2col rows for the implicit GEMM: [B, OH*OW, Cin*kh*kw] (+ (OH, OW)).
+
+    Feature order is channel-major (cin, kh, kw), matching the
+    ``w.transpose(2, 0, 1, 3)`` matrixization of the packing path.
+    """
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), normalize_stride(stride), normalize_padding(padding),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    b, oh, ow, f = patches.shape
+    return patches.reshape(b, oh * ow, f), (oh, ow)
+
+
+def sparse_conv2d_nhwc(x: jnp.ndarray, w: bm.BlockSparseMatrix, kh: int,
+                       kw: int, cout: int, *, stride: Stride = 1,
+                       padding: Padding = "SAME", sub_m: int = 8,
+                       two_sided: bool = True, fuse_relu: bool = True,
+                       emit_occupancy: bool = False,
+                       interpret: Optional[bool] = None,
+                       count_macs: bool = False,
+                       bm_rows: int = DEFAULT_BM):
+    """One conv layer through the sparse kernel: x [B, H, W, Cin] -> [B, OH,
+    OW, Cout] (ReLU fused when ``fuse_relu``).
+
+    ``w`` packs the matrixized filters (``pack_conv_filters``): K =
+    Cin*kh*kw padded to the chunk, N = Cout padded to the chunk. Each
+    image's patch rows are padded to whole ``bm_rows`` blocks and stacked,
+    so the kernel's coloring alternates accumulators between consecutive
+    images. Returns ``(out, aux)`` where ``aux`` carries the optional
+    ``occupancy`` (int32 [B, ceil(M_img/sub_m), n_blocks], padded rows
+    zero) and ``mac_counts`` outputs plus the patch-matrix metadata the
+    stats path reuses.
+    """
+    from repro.kernels.ops import _resolve_interpret
+    interpret = _resolve_interpret(interpret)
+    b = x.shape[0]
+    patches, (oh, ow) = extract_patches(x, kh, kw, stride, padding)
+    m_img = oh * ow
+    k_total = w.shape[0]
+    pad_rows = (-m_img) % bm_rows
+    pad_k = k_total - patches.shape[-1]
+    assert pad_k >= 0, (patches.shape, k_total)
+    patches = jnp.pad(patches, ((0, 0), (0, pad_rows), (0, pad_k)))
+    m_pad = m_img + pad_rows
+    flat = patches.reshape(b * m_pad, k_total)
+    res = sparse_conv_spmm(
+        flat, w.indices, w.vals, bk=w.bk, bn=w.bn, bm_rows=bm_rows,
+        sub_m=sub_m, mb_per_img=m_pad // bm_rows, two_sided=two_sided,
+        fuse_relu=fuse_relu, emit_occupancy=emit_occupancy,
+        interpret=interpret, count_macs=count_macs)
+    out = res[0].reshape(b, m_pad, w.n_blocks * w.bn)
+    out = out[:, :m_img, :cout].reshape(b, oh, ow, cout)
+    aux = {"m_img": m_img, "k_total": k_total, "oh": oh, "ow": ow}
+    i = 1
+    if emit_occupancy:
+        occ = res[i].reshape(b, m_pad // sub_m, w.n_blocks)
+        aux["occupancy"] = occ[:, : -(-m_img // sub_m)]
+        i += 1
+    if count_macs:
+        aux["mac_counts"] = res[i]
+    return out, aux

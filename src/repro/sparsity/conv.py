@@ -1,0 +1,106 @@
+"""Conv-aware extension of the BARISTA offline packing path.
+
+The FFN pipeline (:mod:`repro.sparsity.sparse_ffn`) runs prune -> balance ->
+fold -> pack on [D, F] matrices. Conv filters are [kh, kw, Cin, Cout]
+tensors; the paper's accelerator linearizes them through the same matrix
+interface (im2col), so the conv path adds exactly two conv-specific steps
+and reuses everything else:
+
+* **matrixization** — ``w.transpose(2, 0, 1, 3).reshape(Cin*kh*kw, Cout)``,
+  channel-major to match ``conv_general_dilated_patches`` feature order,
+  then chunk-pad both axes for the BlockSpec grid.
+* **chain folding** — greedy-balancing layer *i*'s output channels permutes
+  the feature map's channel axis; the repair is folding the inverse into
+  layer *i+1*'s **input-channel** axis (axis 2 of the 4-D filter), which is
+  legal across ReLU and max-pool because both act per-channel. The last
+  layer keeps identity so the network's output channels are unpermuted.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import balance, bitmask as bm
+from repro.core.sparse import prune_by_magnitude
+
+
+def matrixize_filters(w: np.ndarray, chunk: int = bm.CHUNK) -> np.ndarray:
+    """[kh, kw, Cin, Cout] -> chunk-padded [K, N] (K = Cin*kh*kw, N = Cout),
+    channel-major feature order (the im2col patch layout)."""
+    kh, kw, cin, cout = w.shape
+    w_mat = np.asarray(w).transpose(2, 0, 1, 3).reshape(kh * kw * cin, cout)
+    pad_k = (-w_mat.shape[0]) % chunk
+    pad_n = (-cout) % chunk
+    return np.pad(w_mat, ((0, pad_k), (0, pad_n)))
+
+
+def pack_conv_filters(w: np.ndarray, chunk: int = bm.CHUNK,
+                      pad_to: Optional[int] = None) -> bm.BlockSparseMatrix:
+    """Pack (already pruned) conv filters into the chunk-block-sparse layout
+    the implicit-GEMM kernel consumes."""
+    return bm.block_sparsify(matrixize_filters(w, chunk), bk=chunk, bn=chunk,
+                             pad_to=pad_to)
+
+
+@dataclasses.dataclass
+class PackedConv:
+    """One conv layer, offline-processed: pruned (permuted/folded) dense
+    filters kept for the oracle, plus their packed kernel form."""
+
+    w_dense: np.ndarray           # [kh, kw, Cin, Cout] pruned, chain-folded
+    packed: bm.BlockSparseMatrix
+    perm: np.ndarray              # balance permutation of the Cout axis
+
+    @property
+    def kh(self) -> int:
+        return self.w_dense.shape[0]
+
+    @property
+    def kw(self) -> int:
+        return self.w_dense.shape[1]
+
+    @property
+    def cin(self) -> int:
+        return self.w_dense.shape[2]
+
+    @property
+    def cout(self) -> int:
+        return self.w_dense.shape[3]
+
+    def scalar_density(self) -> float:
+        return float((self.w_dense != 0).mean())
+
+    def chunk_density(self) -> float:
+        return self.packed.density()
+
+
+def build_sparse_chain(weights: Sequence[np.ndarray], *, density: float = 1.0,
+                       num_shards: int = 16, chunk: int = bm.CHUNK,
+                       balance_filters: bool = True) -> List[PackedConv]:
+    """Offline pipeline for a sequential conv chain: prune -> greedy-balance
+    -> fold into the next layer -> matrixize -> pack.
+
+    ``weights[i]`` is [kh, kw, Cin_i, Cout_i] with Cout_i == Cin_{i+1}.
+    Balancing alternates direction per layer (the paper's two fixed
+    permutations); the final layer is left unpermuted.
+    """
+    ws = [np.asarray(w, np.float32) for w in weights]
+    for a, b_ in zip(ws, ws[1:]):
+        assert a.shape[3] == b_.shape[2], (a.shape, b_.shape)
+    out: List[PackedConv] = []
+    for i, w in enumerate(ws):
+        if density < 1.0:
+            w = w * prune_by_magnitude(w, density, axis_out=-1)
+        last = i == len(ws) - 1
+        if balance_filters and not last:
+            dens = balance.filter_density(w, axis_out=-1)
+            perm = balance.greedy_balance(dens, num_shards, direction=i)
+            w = w[..., perm]
+            # repair: the next layer reads its input channels in perm order
+            ws[i + 1] = balance.fold_permutation(ws[i + 1], perm, axis_in=2)
+        else:
+            perm = np.arange(w.shape[3])
+        out.append(PackedConv(w, pack_conv_filters(w, chunk), perm))
+    return out

@@ -1,0 +1,16 @@
+"""Sparse CNN inference subsystem: the paper's actual workload, end to end.
+
+``model.py`` builds whole pruned CNNs (AlexNet / VGG16 / ResNet-18/50 — the
+simulator's Table-1 benchmarks) and runs them through the implicit-GEMM
+two-sided sparse conv kernel (:mod:`repro.kernels.sparse_conv`);
+``engine.py`` batches images through them with round-robin slot admission.
+"""
+from repro.vision.engine import ImageRequest, VisionEngine, VisionStats
+from repro.vision.model import (SUPPORTED_ARCHS, VisionModel,
+                                build_vision_model, dense_forward, forward,
+                                layer_table, measured_densities,
+                                oracle_check)
+
+__all__ = ["ImageRequest", "VisionEngine", "VisionStats", "SUPPORTED_ARCHS",
+           "VisionModel", "build_vision_model", "dense_forward", "forward",
+           "layer_table", "measured_densities", "oracle_check"]

@@ -1,0 +1,171 @@
+"""Batched vision inference engine: round-robin slot admission over the
+sparse CNN forward.
+
+The serving analogue of the LM scheduler (:mod:`repro.serve.scheduler`),
+specialized to vision: a request is one image, a step runs the *whole
+network* on the current slot batch, and every live slot retires each step
+(CNN inference is single-shot — there is no per-token loop to mask). The
+BARISTA mechanics carry over:
+
+* **Round-robin admission** (§3.3.2) — free slots are scanned in an order
+  rotated by :func:`repro.core.balance.round_robin_permutation`, so
+  successive admissions spread across lanes instead of pinning lane 0.
+* **Coloring** (§3.3) — the kernel itself double-buffers output tiles by
+  image parity, so the consecutive images of a slot batch advance without
+  a barrier; the engine simply stacks slots in lane order and lets the
+  kernel alternate colors.
+* **Fixed compiled batch width** — the batch is always ``num_slots`` wide
+  (free lanes carry zero images, which the two-sided skip elides at
+  ``sub_m``-row granularity — an idle lane costs occupancy lookups, not
+  MACs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.balance import round_robin_permutation
+from repro.vision import model as VM
+
+
+@dataclasses.dataclass
+class ImageRequest:
+    """One inference request. ``arrival`` is the engine step at which the
+    request becomes visible (staggered arrivals exercise admission)."""
+    rid: int
+    image: np.ndarray            # [H, W, C] float32
+    arrival: int = 0
+
+
+@dataclasses.dataclass
+class VisionStats:
+    engine_steps: int = 0
+    images: int = 0
+    active_lane_steps: int = 0
+    idle_lane_steps: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def slot_utilization(self) -> float:
+        total = self.active_lane_steps + self.idle_lane_steps
+        return self.active_lane_steps / total if total else 0.0
+
+    @property
+    def img_per_s(self) -> float:
+        return self.images / self.wall_s if self.wall_s > 0 else 0.0
+
+
+class VisionEngine:
+    """Image queue + slot table driving the sparse CNN forward.
+
+    ``num_slots`` is the compiled batch width; requests beyond it queue.
+    Outputs are the network's final feature maps, keyed by request id.
+    """
+
+    def __init__(self, model: VM.VisionModel, *, num_slots: int = 4,
+                 sub_m: int = 8, two_sided: bool = True,
+                 interpret: Optional[bool] = None):
+        self.model = model
+        self.num_slots = num_slots
+        self.sub_m = sub_m
+        self.two_sided = two_sided
+        self.interpret = interpret
+        self.slot_req = np.full(num_slots, -1, np.int64)
+        self._slot_img: List[Optional[np.ndarray]] = [None] * num_slots
+        self._image_shape: Optional[tuple] = None
+        self._rr = 0
+        self.clock = 0
+        self.queue: Deque[ImageRequest] = deque()
+        self.produced: Dict[int, np.ndarray] = {}
+        self.done_at: Dict[int, int] = {}
+        self.stats = VisionStats()
+
+    # -- queue -------------------------------------------------------------
+    def submit(self, req: ImageRequest) -> None:
+        img = np.asarray(req.image, np.float32)
+        if img.ndim != 3:
+            raise ValueError(f"request {req.rid}: image must be [H, W, C]")
+        # the batch is one compiled width x one shape; reject mismatches at
+        # submission instead of crashing mid-run when two sizes share a step
+        if self._image_shape is None:
+            self._image_shape = img.shape
+        elif img.shape != self._image_shape:
+            raise ValueError(
+                f"request {req.rid}: image shape {img.shape} != engine "
+                f"shape {self._image_shape} (one engine serves one size)")
+        self.queue.append(ImageRequest(req.rid, img, req.arrival))
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and not (self.slot_req >= 0).any()
+
+    # -- slot lifecycle ----------------------------------------------------
+    def _next_arrived(self) -> Optional[ImageRequest]:
+        for i, req in enumerate(self.queue):
+            if req.arrival <= self.clock:
+                del self.queue[i]
+                return req
+        return None
+
+    def _admit_ready(self) -> None:
+        """Admit queued, arrived requests into free slots, rotating the scan
+        order across lanes (BARISTA round-robin)."""
+        if not self.queue:
+            return
+        for s in round_robin_permutation(self.num_slots, self._rr):
+            if self.slot_req[s] >= 0:
+                continue
+            req = self._next_arrived()
+            if req is None:
+                break
+            self.slot_req[s] = req.rid
+            self._slot_img[s] = req.image
+            self._rr += 1
+
+    # -- engine ------------------------------------------------------------
+    def step(self) -> bool:
+        """One engine tick: admissions, then one whole-network forward over
+        the slot batch; all live slots retire. Returns False when idle."""
+        self._admit_ready()
+        active = self.slot_req >= 0
+        if not active.any():
+            if self.queue:               # waiting on future arrivals
+                self.clock += 1
+                return True
+            return False
+        batch = np.zeros((self.num_slots,) + self._image_shape, np.float32)
+        for s in np.nonzero(active)[0]:
+            batch[s] = self._slot_img[s]
+        out, _ = VM.forward(self.model, jnp.asarray(batch), sub_m=self.sub_m,
+                            two_sided=self.two_sided,
+                            interpret=self.interpret)
+        out = np.asarray(out)
+        self.stats.engine_steps += 1
+        self.stats.active_lane_steps += int(active.sum())
+        self.stats.idle_lane_steps += int((~active).sum())
+        for s in np.nonzero(active)[0]:
+            rid = int(self.slot_req[s])
+            self.produced[rid] = out[s]
+            self.done_at[rid] = self.clock
+            self.stats.images += 1
+            self.slot_req[s] = -1
+            self._slot_img[s] = None
+        self.clock += 1
+        return True
+
+    def run(self, requests: Optional[List[ImageRequest]] = None
+            ) -> Dict[int, np.ndarray]:
+        """Serve ``requests`` (plus anything queued) to completion; returns
+        {rid: final feature map} and fills ``self.stats``."""
+        for r in requests or []:
+            self.submit(r)
+        t0 = time.time()
+        while self.step():
+            pass
+        self.stats.wall_s += time.time() - t0
+        return self.produced

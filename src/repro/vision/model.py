@@ -1,0 +1,244 @@
+"""Full-network sparse CNN forward for the simulator's Table-1 benchmarks.
+
+The cycle simulator (:mod:`repro.core.simulator`) has carried the paper's
+benchmark topologies as :class:`LayerSpec` lists since the seed; this module
+turns those specs into *runnable* networks: synthetic He-initialized
+filters, magnitude-pruned to the paper's densities, offline-processed by the
+conv-aware packing chain (:mod:`repro.sparsity.conv`), and executed layer by
+layer through the implicit-GEMM two-sided Pallas kernel with fused ReLU and
+in-kernel occupancy emission (:mod:`repro.kernels.sparse_conv`).
+
+The nets are fully convolutional, so any input size runs; pooling placement
+is derived *statically* from the spec list (a max-pool wherever the paper's
+layer table halves the spatial size), which keeps measured per-layer
+densities attributable to the paper's layers. Inception-v4's branchy
+topology does not linearize into a chain and stays simulator-only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import simulator as S
+from repro.core.sparse import Padding, Stride
+from repro.kernels.bitmask_spmm import DEFAULT_BM
+from repro.kernels.sparse_conv import sparse_conv2d_nhwc
+from repro.sparsity.conv import PackedConv, build_sparse_chain
+
+# stem geometry per arch: (canonical input size, layer-0 stride, padding)
+ARCH_STEM: Dict[str, Tuple[int, Tuple[int, int], str]] = {
+    "AlexNet": (227, (4, 4), "VALID"),
+    "VGGNet": (224, (1, 1), "SAME"),
+    "ResNet18": (224, (2, 2), "SAME"),
+    "ResNet50": (224, (2, 2), "SAME"),
+}
+SUPPORTED_ARCHS = tuple(ARCH_STEM)
+
+
+@dataclasses.dataclass
+class VisionLayer:
+    conv: PackedConv
+    stride: Tuple[int, int]
+    padding: Padding
+    pool_after: Optional[Tuple[int, int]]  # (window, stride) max-pool or None
+
+
+@dataclasses.dataclass
+class VisionModel:
+    name: str
+    layers: List[VisionLayer]
+    input_size: int
+    density: float                # pruning target (paper Table 1 filters)
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.layers)
+
+
+def _pool_between(prev_oh: int, next_oh: int) -> Optional[Tuple[int, int]]:
+    """Max-pool (window, stride) mapping the spec's spatial step, if any."""
+    if next_oh >= prev_oh:
+        return None
+    for k, s in ((2, 2), (3, 2), (2, 3), (3, 3)):
+        if (prev_oh - k) // s + 1 == next_oh:
+            return (k, s)
+    raise ValueError(f"no pool maps {prev_oh} -> {next_oh}")
+
+
+def build_vision_model(name: str = "VGGNet", *,
+                       density: Optional[float] = None, seed: int = 0,
+                       num_layers: Optional[int] = None,
+                       balance_filters: bool = True,
+                       num_shards: int = 16) -> VisionModel:
+    """Synthetic pruned network for one simulator benchmark.
+
+    ``density`` defaults to the paper's Table-1 filter density for the
+    benchmark; ``num_layers`` truncates the chain (smoke nets). Weights are
+    He-scaled so activations stay O(1) through deep chains.
+    """
+    if name not in ARCH_STEM:
+        raise ValueError(f"{name} does not linearize into a conv chain; "
+                         f"supported: {SUPPORTED_ARCHS}")
+    if num_layers is not None and num_layers < 1:
+        raise ValueError(f"num_layers must be >= 1, got {num_layers}")
+    bench = S.BENCHMARKS[name]
+    specs = list(bench.layers)
+    if num_layers is not None:
+        specs = specs[:num_layers]
+    for a, b in zip(specs, specs[1:]):
+        assert a.n == b.d, f"{name} chain break: {a} -> {b}"
+    density = bench.filter_density if density is None else density
+    rng = np.random.default_rng(seed)
+    weights = []
+    for spec in specs:
+        fan_in = spec.k * spec.k * spec.d
+        weights.append((rng.normal(size=(spec.k, spec.k, spec.d, spec.n))
+                        * np.sqrt(2.0 / fan_in)).astype(np.float32))
+    chain = build_sparse_chain(weights, density=density,
+                               num_shards=num_shards,
+                               balance_filters=balance_filters)
+    stem_size, stem_stride, stem_pad = ARCH_STEM[name]
+    layers: List[VisionLayer] = []
+    for i, (spec, conv) in enumerate(zip(specs, chain)):
+        stride: Stride = stem_stride if i == 0 else (1, 1)
+        padding: Padding = stem_pad if i == 0 else "SAME"
+        pool = (_pool_between(spec.oh, specs[i + 1].oh)
+                if i + 1 < len(specs) else None)
+        layers.append(VisionLayer(conv, stride, padding, pool))
+    return VisionModel(name, layers, stem_size, density)
+
+
+def max_pool(x: jnp.ndarray, window: int, stride: int) -> jnp.ndarray:
+    """Channel-wise max-pool (skipped when the map is already too small)."""
+    if min(x.shape[1], x.shape[2]) < window:
+        return x
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, window, window, 1),
+        (1, stride, stride, 1), "VALID")
+
+
+def forward(model: VisionModel, x: jnp.ndarray, *, sub_m: int = 8,
+            two_sided: bool = True, interpret: Optional[bool] = None,
+            collect_stats: bool = False
+            ) -> Tuple[jnp.ndarray, List[Dict[str, float]]]:
+    """Whole network through the sparse conv kernel path.
+
+    x: [B, H, W, 3] float32. Returns the final feature map and (when
+    ``collect_stats``) one dict per layer with the measured densities the
+    simulator feedback loop consumes: scalar map/filter densities (the
+    paper's Table-1 quantities), chunk-granular weight density, and the
+    kernel's executed vs skippable tile MACs (from its own ``count_macs``
+    counters — the skip numbers are the kernel's, not a model's).
+    """
+    stats: List[Dict[str, float]] = []
+    for i, layer in enumerate(model.layers):
+        c = layer.conv
+        if collect_stats:
+            map_scalar = float(jnp.mean((x != 0).astype(jnp.float32)))
+        out, aux = sparse_conv2d_nhwc(
+            x, c.packed, c.kh, c.kw, c.cout, stride=layer.stride,
+            padding=layer.padding, sub_m=sub_m, two_sided=two_sided,
+            fuse_relu=True, emit_occupancy=collect_stats,
+            interpret=interpret, count_macs=collect_stats)
+        if collect_stats:
+            executed = float(np.asarray(aux["mac_counts"]).sum())
+            n_chunks = int(np.asarray(c.packed.indices >= 0).sum())
+            # denominators at the kernel's own (padded) tiling, in the same
+            # unit the counters use: sub-block MACs when two-sided, whole
+            # tiles when one-sided (subblock_macs counts once per tile then)
+            mb_total = int(aux["mac_counts"].shape[1])
+            units = mb_total * (DEFAULT_BM // sub_m) if two_sided else mb_total
+            kb = c.packed.shape[0] // c.packed.bk
+            weight_tile = n_chunks * units
+            dense_tile = c.packed.n_blocks * kb * units
+            occ = np.asarray(aux["occupancy"])
+            spec = S.BENCHMARKS[model.name].layers[i]
+            stats.append({
+                "layer": i,
+                "kh": c.kh, "cin": c.cin, "cout": c.cout,
+                "macs": float(x.shape[0]) * aux["oh"] * aux["ow"]
+                        * c.kh * c.kw * c.cin * c.cout,
+                "map_scalar_density": map_scalar,
+                "filter_scalar_density": c.scalar_density(),
+                "filter_chunk_density": c.chunk_density(),
+                "paper_map_density": S.BENCHMARKS[model.name].map_density,
+                "paper_filter_density": S.BENCHMARKS[model.name]
+                                         .filter_density,
+                "executed_tile_macs": executed,
+                "weight_tile_macs": float(weight_tile),
+                "dense_tile_macs": float(dense_tile),
+                "skipped_tile_frac": 1.0 - executed / max(weight_tile, 1),
+                "out_occupancy_density": float(occ.mean()),
+                "spec_oh": spec.oh,
+            })
+        x = out
+        if layer.pool_after is not None:
+            x = max_pool(x, *layer.pool_after)
+    return x, stats
+
+
+def dense_forward(model: VisionModel, x: jnp.ndarray) -> jnp.ndarray:
+    """Oracle: the same pruned (chain-folded) filters through
+    ``jax.lax.conv_general_dilated`` + ReLU + pooling."""
+    for layer in model.layers:
+        w = jnp.asarray(layer.conv.w_dense)
+        x = jax.lax.conv_general_dilated(
+            x, w, layer.stride, layer.padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jnp.maximum(x, 0.0)
+        if layer.pool_after is not None:
+            x = max_pool(x, *layer.pool_after)
+    return x
+
+
+def oracle_check(model: VisionModel, x: jnp.ndarray, *, sub_m: int = 8,
+                 two_sided: bool = True, collect_stats: bool = True
+                 ) -> Tuple[jnp.ndarray, List[Dict[str, float]], float]:
+    """Sparse kernel path vs dense oracle on one batch.
+
+    Returns ``(sparse_out, stats, rel_err)`` — the shared verification step
+    every entry point (launcher, example, bench) runs before reporting.
+    """
+    out, stats = forward(model, x, sub_m=sub_m, two_sided=two_sided,
+                         collect_stats=collect_stats)
+    ref = dense_forward(model, x)
+    rel = float(jnp.abs(out - ref).max()) / (float(jnp.abs(ref).max()) + 1e-9)
+    return out, stats, rel
+
+
+def layer_table(stats: List[Dict[str, float]],
+                with_paper: bool = False) -> List[str]:
+    """Formatted per-layer density/skip rows (one shared schema for all
+    entry points)."""
+    hdr = (f"  {'layer':>5s} {'shape':>17s} {'map':>6s} {'filter':>7s} "
+           f"{'w-chunk':>8s} {'skipped':>8s}")
+    if with_paper:
+        hdr += f" {'map(paper)':>11s} {'filt(paper)':>12s}"
+    rows = [hdr]
+    for s in stats:
+        row = (f"  {s['layer']:5d} {s['kh']}x{s['kh']}x{s['cin']:4d}"
+               f"->{s['cout']:4d}  {s['map_scalar_density']:6.3f} "
+               f"{s['filter_scalar_density']:7.3f} "
+               f"{s['filter_chunk_density']:8.3f} "
+               f"{s['skipped_tile_frac']:8.3f}")
+        if with_paper:
+            row += (f" {s['paper_map_density']:11.3f} "
+                    f"{s['paper_filter_density']:12.3f}")
+        rows.append(row)
+    return rows
+
+
+def measured_densities(stats: List[Dict[str, float]]
+                       ) -> Tuple[float, float]:
+    """MAC-weighted network filter / map scalar densities — the Table-1
+    quantities, measured from the tensors the kernel actually ran."""
+    macs = np.array([s["macs"] for s in stats])
+    fd = float((macs * [s["filter_scalar_density"] for s in stats]).sum()
+               / macs.sum())
+    md = float((macs * [s["map_scalar_density"] for s in stats]).sum()
+               / macs.sum())
+    return fd, md

@@ -1,0 +1,336 @@
+"""Vision subsystem: implicit-GEMM sparse conv kernel vs
+``jax.lax.conv_general_dilated``, output-buffer coloring, whole-network
+forward, engine admission, and the conv2d_im2col / tile-density satellites."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import simulator as S
+from repro.core.sparse import (activation_tile_density, conv2d_im2col,
+                               prune_by_magnitude)
+from repro.kernels.sparse_conv import sparse_conv2d_nhwc, sparse_conv_spmm
+from repro.sparsity.conv import build_sparse_chain, pack_conv_filters
+from repro.vision import (ImageRequest, VisionEngine, build_vision_model,
+                          dense_forward, forward, measured_densities)
+
+
+def _conv_operands(rng, B=2, H=9, W=11, cin=8, cout=20, k=3, density=0.4,
+                   map_density=0.6):
+    w = rng.normal(size=(k, k, cin, cout)).astype(np.float32)
+    if density < 1.0:
+        w *= prune_by_magnitude(w, density, axis_out=-1)
+    x = np.abs(rng.normal(size=(B, H, W, cin))).astype(np.float32)
+    x[rng.random(x.shape) >= map_density] = 0.0
+    return x, w
+
+
+def _lax_ref(x, w, stride, padding, relu=True):
+    st = (stride, stride) if isinstance(stride, int) else stride
+    out = jax.lax.conv_general_dilated(
+        jnp.asarray(x), jnp.asarray(w), st, padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return jnp.maximum(out, 0.0) if relu else out
+
+
+# ---------------------------------------------------------------------------
+# kernel == lax.conv_general_dilated across the satellite's sweep
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+@pytest.mark.parametrize("density", [1.0, 0.4])
+def test_sparse_conv_matches_lax(rng, stride, padding, density):
+    x, w = _conv_operands(rng, H=9, W=11, density=density)  # odd spatial
+    ws = pack_conv_filters(w)
+    out, _ = sparse_conv2d_nhwc(jnp.asarray(x), ws, 3, 3, w.shape[-1],
+                                stride=stride, padding=padding,
+                                fuse_relu=True)
+    exp = _lax_ref(x, w, stride, padding)
+    assert out.shape == exp.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_sparse_conv_per_axis_stride_and_explicit_padding(rng):
+    x, w = _conv_operands(rng, H=13, W=9)
+    ws = pack_conv_filters(w)
+    stride, padding = (1, 2), ((2, 0), (1, 1))
+    out, _ = sparse_conv2d_nhwc(jnp.asarray(x), ws, 3, 3, w.shape[-1],
+                                stride=stride, padding=padding,
+                                fuse_relu=True)
+    exp = _lax_ref(x, w, stride, padding)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_relu_epilogue_off(rng):
+    """fuse_relu=False must reproduce the raw (signed) conv output."""
+    x, w = _conv_operands(rng)
+    ws = pack_conv_filters(w)
+    out, _ = sparse_conv2d_nhwc(jnp.asarray(x), ws, 3, 3, w.shape[-1],
+                                fuse_relu=False)
+    exp = _lax_ref(x, w, 1, "SAME", relu=False)
+    assert float(jnp.min(out)) < 0  # signed outputs actually exercised
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_emitted_occupancy_matches_host(rng):
+    """The in-kernel tile bitmask must equal a host recompute on the
+    kernel's own output."""
+    sub_m = 8
+    x, w = _conv_operands(rng, B=2, H=12, W=12, map_density=0.3)
+    ws = pack_conv_filters(w)
+    out, aux = sparse_conv2d_nhwc(jnp.asarray(x), ws, 3, 3, w.shape[-1],
+                                  sub_m=sub_m, fuse_relu=True,
+                                  emit_occupancy=True)
+    occ = np.asarray(aux["occupancy"])       # [B, ceil(M/sub_m), n_blocks]
+    b, oh, ow, cout = out.shape
+    m_img = oh * ow
+    flat = np.zeros((b, -(-m_img // sub_m) * sub_m, ws.n_blocks * ws.bn),
+                    np.float32)
+    flat[:, :m_img, :cout] = np.asarray(out).reshape(b, m_img, cout)
+    host = (flat.reshape(b, -1, sub_m, ws.n_blocks, ws.bn) != 0
+            ).any(axis=(2, 4)).astype(np.int32)
+    np.testing.assert_array_equal(occ, host)
+
+
+def test_two_sided_equals_one_sided_numerics(rng):
+    """Activation-side skips only elide exact zeros."""
+    x, w = _conv_operands(rng, B=2, H=16, W=16, map_density=0.2)
+    x[0, :8] = 0.0                            # whole zero region
+    ws = pack_conv_filters(w)
+    outs = []
+    for two_sided in (False, True):
+        out, _ = sparse_conv2d_nhwc(jnp.asarray(x), ws, 3, 3, w.shape[-1],
+                                    two_sided=two_sided)
+        outs.append(np.asarray(out))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_skip_counters_fire_on_zero_rows(rng):
+    """A zero image in the batch must cost no MACs in two-sided mode."""
+    x, w = _conv_operands(rng, B=2, H=12, W=12, map_density=0.9)
+    x[1] = 0.0
+    ws = pack_conv_filters(w)
+    _, aux2 = sparse_conv2d_nhwc(jnp.asarray(x), ws, 3, 3, w.shape[-1],
+                                 two_sided=True, count_macs=True)
+    two = np.asarray(aux2["mac_counts"])      # [nb, mb] sub-block MACs
+    mb = two.shape[1]
+    assert np.all(two[:, mb // 2:] == 0)      # second image fully skipped
+    assert two[:, : mb // 2].sum() > 0        # first image did real work
+
+
+# ---------------------------------------------------------------------------
+# output-buffer coloring (paper §3.3)
+# ---------------------------------------------------------------------------
+def test_coloring_interleaved_equals_sequential(rng):
+    """A batch of consecutive images through the colored double-buffered
+    kernel must be BITWISE identical to each image run alone."""
+    x, w = _conv_operands(rng, B=4, H=10, W=10, map_density=0.5)
+    ws = pack_conv_filters(w)
+    batched, _ = sparse_conv2d_nhwc(jnp.asarray(x), ws, 3, 3, w.shape[-1])
+    for i in range(x.shape[0]):
+        solo, _ = sparse_conv2d_nhwc(jnp.asarray(x[i:i + 1]), ws, 3, 3,
+                                     w.shape[-1])
+        np.testing.assert_array_equal(np.asarray(batched[i]),
+                                      np.asarray(solo[0]))
+
+
+def test_coloring_multi_block_images(rng):
+    """Images spanning several row blocks keep per-image parity (all blocks
+    of one image share a color; the flush order cannot mix images)."""
+    x, w = _conv_operands(rng, B=3, H=16, W=16, cin=4, cout=8)  # 256 rows/img
+    ws = pack_conv_filters(w)
+    batched, _ = sparse_conv2d_nhwc(jnp.asarray(x), ws, 3, 3, w.shape[-1])
+    solo = [np.asarray(sparse_conv2d_nhwc(jnp.asarray(x[i:i + 1]), ws, 3, 3,
+                                          w.shape[-1])[0][0])
+            for i in range(3)]
+    np.testing.assert_array_equal(np.asarray(batched), np.stack(solo))
+
+
+# ---------------------------------------------------------------------------
+# whole networks (model zoo) — acceptance: pruned VGG16 end to end
+# ---------------------------------------------------------------------------
+def test_vgg16_full_network_matches_dense(rng):
+    model = build_vision_model("VGGNet", seed=0)   # Table-1 density 0.334
+    assert model.num_layers == 13
+    x = np.abs(rng.normal(size=(1, 24, 24, 3))).astype(np.float32)
+    x[rng.random(x.shape) >= 0.45] = 0.0
+    out, stats = forward(model, jnp.asarray(x), collect_stats=True)
+    ref = dense_forward(model, jnp.asarray(x))
+    rel = float(jnp.abs(out - ref).max()) / (float(jnp.abs(ref).max()) + 1e-9)
+    assert rel < 1e-4
+    fd, md = measured_densities(stats)
+    assert abs(fd - 0.334) < 0.01              # pruning hit Table-1 density
+    assert 0.0 < md <= 1.0
+    assert all(s["skipped_tile_frac"] >= 0.0 for s in stats)
+
+
+@pytest.mark.parametrize("arch", ["AlexNet", "ResNet18"])
+def test_other_archs_short_chain(rng, arch):
+    model = build_vision_model(arch, num_layers=3, seed=1)
+    size = 35 if arch == "AlexNet" else 16
+    x = np.abs(rng.normal(size=(1, size, size, 3))).astype(np.float32)
+    out, _ = forward(model, jnp.asarray(x))
+    ref = dense_forward(model, jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_unsupported_arch_raises():
+    with pytest.raises(ValueError):
+        build_vision_model("Inception-v4")
+    with pytest.raises(ValueError):
+        build_vision_model("VGGNet", num_layers=0)
+
+
+def test_one_sided_skip_frac_unit(rng):
+    """Regression: one-sided counters are whole-tile units; a dense input
+    must report ~0 skipped, not the 15/16 a sub-block denominator gives."""
+    model = build_vision_model("VGGNet", num_layers=1, seed=0)
+    x = jnp.asarray(np.abs(rng.normal(size=(1, 16, 16, 3))
+                           ).astype(np.float32))
+    _, stats = forward(model, x, two_sided=False, collect_stats=True)
+    assert stats[0]["skipped_tile_frac"] == 0.0
+
+
+def test_chain_balance_fold_roundtrip(rng):
+    """Greedy-balancing + folding must leave the chain's function intact."""
+    ws = [rng.normal(size=(3, 3, 4, 24)).astype(np.float32),
+          rng.normal(size=(3, 3, 24, 16)).astype(np.float32)]
+    x = np.abs(rng.normal(size=(1, 8, 8, 4))).astype(np.float32)
+
+    def run_chain(chain):
+        h = jnp.asarray(x)
+        for c in chain:
+            h = _lax_ref(h, c.w_dense, 1, "SAME")
+        return np.asarray(h)
+
+    plain = build_sparse_chain(ws, density=0.5, balance_filters=False)
+    balanced = build_sparse_chain(ws, density=0.5, balance_filters=True)
+    np.testing.assert_allclose(run_chain(plain), run_chain(balanced),
+                               rtol=1e-5, atol=1e-5)
+    assert not np.array_equal(balanced[0].perm,
+                              np.arange(balanced[0].perm.shape[0]))
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+def _requests(rng, n, size=10, stagger=0):
+    return [ImageRequest(rid=i, image=np.abs(
+        rng.normal(size=(size, size, 3))).astype(np.float32),
+        arrival=i * stagger) for i in range(n)]
+
+
+def test_engine_matches_solo_forward(rng):
+    model = build_vision_model("VGGNet", num_layers=2, seed=0)
+    eng = VisionEngine(model, num_slots=2)
+    reqs = _requests(rng, 5, stagger=1)
+    produced = eng.run(reqs)
+    assert sorted(produced) == [0, 1, 2, 3, 4]
+    for r in reqs:
+        solo, _ = forward(model, jnp.asarray(r.image[None]))
+        np.testing.assert_allclose(produced[r.rid], np.asarray(solo)[0],
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_engine_batch_composition_invariance(rng):
+    """Outputs must not depend on which lane or batch an image rode in."""
+    model = build_vision_model("VGGNet", num_layers=2, seed=0)
+    reqs = _requests(rng, 4)
+    together = VisionEngine(model, num_slots=4).run(
+        [ImageRequest(r.rid, r.image, 0) for r in reqs])
+    staggered = VisionEngine(model, num_slots=2).run(
+        [ImageRequest(r.rid, r.image, r.rid) for r in reqs])
+    for r in reqs:
+        np.testing.assert_allclose(together[r.rid], staggered[r.rid],
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_engine_round_robin_spreads_lanes(rng):
+    """Consecutive single admissions must rotate across lanes, not pin
+    lane 0 (BARISTA round-robin admission)."""
+    model = build_vision_model("VGGNet", num_layers=1, seed=0)
+    eng = VisionEngine(model, num_slots=3)
+    lanes = []
+    for i, r in enumerate(_requests(rng, 3, size=8)):
+        eng.submit(r)
+        eng._admit_ready()
+        lanes.append(int(np.nonzero(eng.slot_req == r.rid)[0][0]))
+        eng.step()
+    assert len(set(lanes)) > 1, f"admissions pinned lane {lanes}"
+
+
+def test_engine_rejects_mixed_image_shapes(rng):
+    model = build_vision_model("VGGNet", num_layers=1, seed=0)
+    eng = VisionEngine(model, num_slots=2)
+    eng.submit(ImageRequest(0, np.ones((8, 8, 3), np.float32)))
+    with pytest.raises(ValueError):
+        eng.submit(ImageRequest(1, np.ones((10, 10, 3), np.float32)))
+
+
+def test_engine_utilization_and_counts(rng):
+    model = build_vision_model("VGGNet", num_layers=1, seed=0)
+    eng = VisionEngine(model, num_slots=2)
+    eng.run(_requests(rng, 4, size=8))
+    assert eng.stats.images == 4
+    assert eng.stats.engine_steps == 2          # 2 full batches
+    assert eng.stats.slot_utilization == 1.0
+
+
+# ---------------------------------------------------------------------------
+# satellites: conv2d_im2col generalization + tile-density padding fix
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("stride,padding", [
+    (1, "SAME"), ((2, 1), "VALID"), ((1, 2), ((1, 0), (2, 1))), (3, "SAME")])
+def test_conv2d_im2col_generalized(rng, stride, padding):
+    x = rng.normal(size=(2, 11, 9, 5)).astype(np.float32)
+    w = rng.normal(size=(3, 3, 5, 7)).astype(np.float32)
+    out = conv2d_im2col(jnp.asarray(x), jnp.asarray(w), stride, padding)
+    exp = _lax_ref(x, w, stride, padding, relu=False)
+    assert out.shape == exp.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_im2col_legacy_signature(rng):
+    """int stride + string padding must keep working unchanged."""
+    x = rng.normal(size=(1, 8, 8, 4)).astype(np.float32)
+    w = rng.normal(size=(3, 3, 4, 6)).astype(np.float32)
+    out = conv2d_im2col(jnp.asarray(x), jnp.asarray(w), 2, "VALID")
+    exp = _lax_ref(x, w, 2, "VALID", relu=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_activation_tile_density_odd_shape(rng):
+    """Regression: odd (non-block-multiple) shapes must not be diluted by
+    padding tiles. An all-ones [130, 70] tensor is 100% dense."""
+    x = jnp.ones((130, 70), jnp.float32)
+    assert float(activation_tile_density(x, block=128)) == 1.0
+
+
+def test_activation_tile_density_prepadded(rng):
+    """Kernel-side operands arrive pre-padded to the block grid; the padded
+    tiles must be excluded from the mean via valid_rows/valid_cols."""
+    x = jnp.ones((130, 128), jnp.float32)
+    padded = jnp.pad(x, ((0, 126), (0, 128)))   # the kernel's [256, 256]
+    naive = float(activation_tile_density(padded, block=128))
+    fixed = float(activation_tile_density(padded, block=128,
+                                          valid_rows=130, valid_cols=128))
+    assert naive == 0.5                         # understated by padding
+    assert fixed == 1.0
+    assert float(activation_tile_density(x, block=128)) == 1.0
+
+
+def test_spmm_rejects_ragged_rows(rng):
+    """The raw grid entry point asserts block-aligned rows (the NHWC wrapper
+    owns the padding)."""
+    w = rng.normal(size=(128, 128)).astype(np.float32)
+    from repro.core import bitmask as bm
+    ws = bm.block_sparsify(w)
+    with pytest.raises(AssertionError):
+        sparse_conv_spmm(jnp.ones((100, 128), jnp.float32), ws.indices,
+                         ws.vals)
