@@ -1,0 +1,107 @@
+"""Bench-regression gate for the vision pipeline (CI smoke step).
+
+    PYTHONPATH=src python -m benchmarks.check_vision_regression \
+        BENCH_vision.json BENCH_vision_new.json
+
+Compares a freshly generated ``BENCH_vision.json`` against the committed
+baseline and fails (exit 1) when the sparse path regresses structurally:
+
+  * ``rel_err_vs_dense`` above 1e-5 — numerics drifted off the oracle,
+  * ``mean_skipped_tile_frac`` dropped — the two-sided skip stopped firing,
+  * the compacted schedule grew — more grid steps scheduled than the
+    baseline for the same settings, or dead steps crept back in
+    (``scheduled_steps != live_chunk_steps + flush_only_steps``),
+  * the compiled pipeline stopped being bitwise-equal to the kernel path.
+
+Wall-clock numbers are *reported* but never gated — CI machines vary; the
+structural counters are what must not regress.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+REL_ERR_CEILING = 1e-5
+SKIP_FRAC_TOL = 1e-6
+
+
+def check(baseline: dict, new: dict) -> list:
+    failures = []
+    same_settings = all(
+        baseline.get(k) == new.get(k)
+        for k in ("bench", "image_size", "batch", "num_layers"))
+    if not same_settings:
+        failures.append(
+            f"settings mismatch: baseline "
+            f"{[baseline.get(k) for k in ('bench', 'image_size', 'batch', 'num_layers')]} "
+            f"vs new "
+            f"{[new.get(k) for k in ('bench', 'image_size', 'batch', 'num_layers')]} "
+            f"— regenerate the committed baseline at the CI settings")
+        return failures
+
+    if new["rel_err_vs_dense"] > REL_ERR_CEILING:
+        failures.append(f"rel_err_vs_dense {new['rel_err_vs_dense']:.2e} "
+                        f"exceeds {REL_ERR_CEILING:.0e}")
+    if new["mean_skipped_tile_frac"] < (baseline["mean_skipped_tile_frac"]
+                                        - SKIP_FRAC_TOL):
+        failures.append(
+            f"mean_skipped_tile_frac dropped: "
+            f"{baseline['mean_skipped_tile_frac']:.4f} -> "
+            f"{new['mean_skipped_tile_frac']:.4f}")
+    if not new.get("compiled_pipeline_bitwise_equal", True):
+        failures.append("compiled pipeline no longer bitwise-equal to the "
+                        "kernel path")
+
+    sched_new = new.get("schedule")
+    sched_base = baseline.get("schedule")
+    if sched_new is not None:
+        live = sched_new["live_chunk_steps"] + sched_new["flush_only_steps"]
+        if sched_new["scheduled_steps"] != live:
+            failures.append(
+                f"dead steps scheduled: {sched_new['scheduled_steps']:.0f} "
+                f"scheduled != {live:.0f} live-chunk + flush-only")
+        if sched_base is not None and (sched_new["scheduled_steps"]
+                                       > sched_base["scheduled_steps"]):
+            failures.append(
+                f"schedule grew: {sched_base['scheduled_steps']:.0f} -> "
+                f"{sched_new['scheduled_steps']:.0f} steps")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed BENCH_vision.json")
+    ap.add_argument("new", help="freshly generated BENCH_vision.json")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+
+    print(f"{'metric':<28s} {'baseline':>12s} {'new':>12s}")
+    for k in ("sparse_img_per_s", "dense_img_per_s",
+              "sparse_over_dense_speedup", "rel_err_vs_dense",
+              "mean_skipped_tile_frac"):
+        b, n = baseline.get(k), new.get(k)
+        fb = f"{b:.4g}" if isinstance(b, (int, float)) else str(b)
+        fn_ = f"{n:.4g}" if isinstance(n, (int, float)) else str(n)
+        print(f"{k:<28s} {fb:>12s} {fn_:>12s}")
+    for k in ("scheduled_steps", "dense_grid_steps"):
+        b = (baseline.get("schedule") or {}).get(k)
+        n = (new.get("schedule") or {}).get(k)
+        print(f"schedule.{k:<19s} "
+              f"{(f'{b:.0f}' if b is not None else '-'):>12s} "
+              f"{(f'{n:.0f}' if n is not None else '-'):>12s}")
+
+    failures = check(baseline, new)
+    if failures:
+        print("\nREGRESSION:")
+        for f_ in failures:
+            print(f"  - {f_}")
+        sys.exit(1)
+    print("\nno structural regressions")
+
+
+if __name__ == "__main__":
+    main()

@@ -120,6 +120,8 @@ class BlockSparseMatrix:
     indices: int32 [n_blocks, max_nz]          — K-chunk ids, -1 padded
     vals:    dtype [n_blocks, max_nz, bk, bn]  — the non-zero chunk tiles
     shape:   (K, N)
+    indices_np: host copy of ``indices`` kept from pack time so schedule
+        builders (work-list compaction) never read back from device.
     """
 
     indices: jnp.ndarray
@@ -127,6 +129,14 @@ class BlockSparseMatrix:
     shape: Tuple[int, int]
     bk: int
     bn: int
+    indices_np: np.ndarray | None = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def host_indices(self) -> np.ndarray:
+        """Chunk index lists as host numpy (pack-time copy when available)."""
+        if self.indices_np is None:
+            self.indices_np = np.asarray(self.indices)
+        return self.indices_np
 
     @property
     def n_blocks(self) -> int:
@@ -165,7 +175,8 @@ def block_sparsify(w: np.ndarray, bk: int = CHUNK, bn: int = CHUNK,
         ks = np.nonzero(occupied[n])[0]
         indices[n, : ks.shape[0]] = ks
         vals[n, : ks.shape[0]] = tiles[n, ks]
-    return BlockSparseMatrix(jnp.asarray(indices), jnp.asarray(vals), (K, N), bk, bn)
+    return BlockSparseMatrix(jnp.asarray(indices), jnp.asarray(vals), (K, N),
+                             bk, bn, indices_np=indices)
 
 
 def block_densify(m: BlockSparseMatrix) -> jnp.ndarray:

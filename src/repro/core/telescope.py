@@ -14,7 +14,7 @@ simulator and by the buffer-sensitivity benchmark (paper Fig. 11).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -120,6 +120,50 @@ def refetch_curve(num_nodes: int, buffer_depths: Sequence[int],
             f += telescoping_combine(arr, fetch_latency).fetches
         out.append(f / trials)
     return out
+
+
+def combine_schedule_requests(chunk_ids: Sequence[int],
+                              fetch_latency: Optional[float] = None,
+                              groups: Sequence[int] = DEFAULT_TELESCOPE
+                              ) -> dict:
+    """Request-combining model applied to a *kernel schedule* (§3.2 ↔ grid).
+
+    ``chunk_ids`` is the serialized work list's per-step input-chunk id
+    (-1 entries are flush-only steps and issue no request). Each scheduled
+    step is one node-request for its chunk at "time" = its position in
+    the schedule; the telescoping combiner
+    (:func:`telescoping_combine`) then predicts how many cache fetches
+    the schedule actually issues per chunk — requests landing while a
+    fetch is outstanding are combined for free (snarfed).
+
+    ``fetch_latency`` is in *steps*. Pass the schedule's mean per-pair
+    run length (``wl.num_steps / wl.num_pairs`` — a fetch stays
+    outstanding for about one pair's sweep, the weight-stationary reuse
+    window; the conv stats path does). The default, computable from
+    ``chunk_ids`` alone, is the mean spacing between a chunk's
+    re-requests (total scheduled reads / distinct chunks) — a tighter
+    window, so it under- rather than over-states combining. Returns
+    ``requests`` (scheduled chunk reads), ``fetches`` (after combining),
+    and ``combine_factor`` (requests per fetch; 1.0 = no combining).
+    This is the same model the cycle simulator uses, so the simulated
+    bandwidth story and the kernel's schedule are pinned to one
+    mechanism.
+    """
+    ids = np.asarray(chunk_ids)
+    times = np.nonzero(ids >= 0)[0].astype(np.float64)  # schedule positions
+    ids = ids[ids >= 0]
+    if ids.size == 0:
+        return {"requests": 0, "fetches": 0.0, "combine_factor": 1.0}
+    uniq = np.unique(ids)
+    if fetch_latency is None:
+        fetch_latency = float(ids.size) / max(len(uniq), 1)
+    fetches = 0.0
+    for u in uniq:
+        fetches += telescoping_combine(times[ids == u], fetch_latency,
+                                       groups=groups).fetches
+    requests = int(ids.size)
+    return {"requests": requests, "fetches": float(fetches),
+            "combine_factor": requests / max(fetches, 1e-9)}
 
 
 def uncombined_fetches(num_nodes: int, spread: float, fetch_latency: float,

@@ -3,7 +3,9 @@
 # kernel. Leave this package empty if the paper has none.
 #
 # bitmask_spmm.py — chunk-granular two-sided sparse matmul (LM FFN path)
+#                   + the telescoped work-list builder (ConvWorkList)
 # fused_ffn.py    — in-proj -> activation -> gate-mul in one launch
 # sparse_conv.py  — implicit-GEMM two-sided sparse conv2d (vision path):
 #                   fused ReLU epilogue, in-kernel occupancy emission,
-#                   image-parity output-buffer coloring
+#                   image-parity output-buffer coloring, and the
+#                   work-list-scheduled grid (pallas) / XLA executor pair

@@ -38,11 +38,13 @@ order reuses it across input blocks.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -55,7 +57,7 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) \
 
 
 def subblock_macs(valid, k_safe, occ_ref, m_i, x_ref, w, acc_ref, cnt_ref, *,
-                  two_sided: bool, sub_m: int, bm: int):
+                  two_sided: bool, sub_m: int, bm: int, color=None):
     """MAC one (bm, bk) x (bk, bn) tile into ``acc_ref``.
 
     In two-sided mode the tile is processed as ``bm // sub_m`` row
@@ -65,12 +67,32 @@ def subblock_macs(valid, k_safe, occ_ref, m_i, x_ref, w, acc_ref, cnt_ref, *,
     scratch) counts executed sub-block MACs (tile MACs when one-sided) so
     tests can assert the skip logic fires exactly. Shared with the fused
     FFN kernel (:mod:`repro.kernels.fused_ffn`).
+
+    When ``color`` (a traced int32 scalar) is given, ``acc_ref`` carries a
+    leading color axis — shape (ncolors, bm, bn) — and the MAC lands in
+    ``acc_ref[color]``: the double-buffered output accumulators of the
+    paper's §3.3 coloring, selected dynamically instead of duplicating the
+    call per color.
     """
+    def _acc_read(lo, size):
+        if color is None:
+            return acc_ref[lo:lo + size, :]
+        return pl.load(acc_ref, (pl.dslice(color, 1), pl.dslice(lo, size),
+                                 slice(None)))[0]
+
+    def _acc_write(lo, size, v):
+        if color is None:
+            acc_ref[lo:lo + size, :] = v
+        else:
+            pl.store(acc_ref, (pl.dslice(color, 1), pl.dslice(lo, size),
+                               slice(None)), v[None])
+
     if not two_sided:
         @pl.when(valid)
         def _mac():
-            acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
-                                    preferred_element_type=jnp.float32)
+            _acc_write(0, bm, _acc_read(0, bm) + jnp.dot(
+                x_ref[...].astype(jnp.float32), w,
+                preferred_element_type=jnp.float32))
             if cnt_ref is not None:
                 cnt_ref[0, 0] = cnt_ref[0, 0] + 1
         return
@@ -82,11 +104,122 @@ def subblock_macs(valid, k_safe, occ_ref, m_i, x_ref, w, acc_ref, cnt_ref, *,
         @pl.when(live)
         def _mac(si=si):
             lo = si * sub_m
-            acc_ref[lo:lo + sub_m, :] = acc_ref[lo:lo + sub_m, :] + jnp.dot(
+            _acc_write(lo, sub_m, _acc_read(lo, sub_m) + jnp.dot(
                 x_ref[lo:lo + sub_m, :].astype(jnp.float32), w,
-                preferred_element_type=jnp.float32)
+                preferred_element_type=jnp.float32))
             if cnt_ref is not None:
                 cnt_ref[0, 0] = cnt_ref[0, 0] + 1
+
+
+# ---------------------------------------------------------------------------
+# Telescoped work-list compaction (BARISTA §3.2 applied to the grid)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ConvWorkList:
+    """Compacted schedule for a chunk-block-sparse matmul grid.
+
+    The dense grid runs ``nb * mb * max_nz`` steps and *predicates* dead
+    work away inside the lane. This schedule instead enumerates, per
+    ``(n_block, m_block)`` pair, the intersection of the stored filter
+    chunk list with the activation-chunk occupancy, so dead ``k`` steps
+    are never scheduled at all. Two equivalent forms are kept:
+
+    * ``ragged_idx [nb, mb, max_live]`` + ``steps_per_pair [nb, mb]`` —
+      the ragged-padded per-pair slot lists (slot = position in the packed
+      ``vals``; -1 padded),
+    * flat arrays ``n/m/k/j/first/last [num_steps]`` — the same entries
+      serialized pair-major (n outer, m inner, live slots in j order),
+      which is what drives the Pallas grid / XLA executor. A pair with no
+      live work degenerates to a single flush-only step (``k == j == -1``)
+      so its output block is still written (zeros).
+
+    ``mac_steps`` counts real MAC steps (``k >= 0``); ``num_steps`` adds
+    the flush-only steps. The dense grid would have scheduled
+    ``dense_grid_steps``.
+    """
+
+    n: np.ndarray
+    m: np.ndarray
+    k: np.ndarray
+    j: np.ndarray
+    first: np.ndarray
+    last: np.ndarray
+    ragged_idx: np.ndarray
+    steps_per_pair: np.ndarray
+    nb: int
+    mb: int
+    max_nz: int
+
+    @property
+    def num_steps(self) -> int:
+        return int(self.n.shape[0])
+
+    @property
+    def num_pairs(self) -> int:
+        return self.nb * self.mb
+
+    @property
+    def mac_steps(self) -> int:
+        return int((self.k >= 0).sum())
+
+    @property
+    def flush_only_steps(self) -> int:
+        return self.num_steps - self.mac_steps
+
+    @property
+    def dense_grid_steps(self) -> int:
+        return self.nb * self.mb * self.max_nz
+
+    def prefetch_args(self):
+        """The flat schedule as device arrays in kernel argument order."""
+        return tuple(jnp.asarray(a) for a in
+                     (self.n, self.m, self.k, self.j, self.first, self.last))
+
+
+def build_worklist(indices: np.ndarray, mb: int, *,
+                   occ_blk: Optional[np.ndarray] = None) -> ConvWorkList:
+    """Compact a [nb, max_nz] chunk index table into a :class:`ConvWorkList`.
+
+    ``indices`` is the packed weight layout's per-n-block k-chunk list (-1
+    padded) — host numpy, known at pack time. ``occ_blk`` (optional bool
+    [mb, kb]) is the activation occupancy at (row-block x chunk)
+    granularity; when given, the per-pair lists are the *intersection*
+    (two-sided compaction — data-dependent, so eager callers only).
+    """
+    indices = np.asarray(indices)
+    nb, max_nz = indices.shape
+    valid = indices >= 0                                     # [nb, max_nz]
+    if occ_blk is None:
+        live = np.broadcast_to(valid[:, None, :], (nb, mb, max_nz))
+    else:
+        occ_blk = np.asarray(occ_blk, bool)
+        assert occ_blk.shape[0] == mb, (occ_blk.shape, mb)
+        safe = np.where(valid, indices, 0)
+        # live[n, m, j] = stored chunk j of n-block ∧ activation block
+        # (m, chunk) occupied
+        live = valid[:, None, :] & occ_blk[:, safe].transpose(1, 0, 2)
+    steps = live.sum(-1).astype(np.int64)                    # [nb, mb]
+    max_live = max(int(steps.max(initial=0)), 1)
+    # live slots first (stable keeps ascending j order), then -1 padding
+    order = np.argsort(~live, axis=-1, kind="stable")
+    ragged = np.where(np.arange(max_nz)[None, None, :] < steps[..., None],
+                      order, -1)[..., :max_live].astype(np.int32)
+    # flatten pair-major; dead pairs contribute one flush-only step
+    counts = np.maximum(steps, 1).reshape(-1)                # [nb*mb]
+    total = int(counts.sum())
+    pair = np.repeat(np.arange(nb * mb), counts)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    pos = np.arange(total) - starts[pair]
+    n_arr = (pair // mb).astype(np.int32)
+    m_arr = (pair % mb).astype(np.int32)
+    j_arr = ragged.reshape(nb * mb, max_live)[
+        pair, np.minimum(pos, max_live - 1)]
+    k_arr = np.where(j_arr >= 0,
+                     indices[n_arr, np.maximum(j_arr, 0)], -1).astype(np.int32)
+    first = (pos == 0).astype(np.int32)
+    last = (pos == counts[pair] - 1).astype(np.int32)
+    return ConvWorkList(n_arr, m_arr, k_arr, j_arr.astype(np.int32), first,
+                        last, ragged, steps.astype(np.int32), nb, mb, max_nz)
 
 
 def _kernel(idx_ref, occ_ref, x_ref, w_ref, *refs, nsteps: int,

@@ -133,6 +133,37 @@ def sparse_matmul_tile_stats(x: jnp.ndarray, indices: jnp.ndarray, *,
             "dense_tile_macs": dense}
 
 
+def conv_schedule_stats(patches: jnp.ndarray, indices: jnp.ndarray, *,
+                        bk: int, bm_rows: int = 128
+                        ) -> Dict[str, jnp.ndarray]:
+    """Pure-jnp model of the telescoped work-list schedule (no kernel).
+
+    Predicts, at (n-block, m-block, k-chunk) grid granularity, the steps
+    the compacted schedule runs: ``live_chunk_steps`` = stored weight
+    chunk ∧ occupied activation block (the §3.2 intersection),
+    ``dead_pairs`` = (n, m) pairs with no live chunk (each degenerates to
+    one flush-only step), ``scheduled_steps`` = live + flush-only, and
+    ``dense_grid_steps`` = what the predicated dense grid schedules.
+    ``tests/test_vision.py`` pins this model to
+    :func:`repro.kernels.bitmask_spmm.build_worklist`'s actual step
+    counts, so benches can report schedule compaction without building
+    work lists in the hot loop.
+    """
+    M, K = patches.shape
+    mb, kb = M // bm_rows, K // bk
+    nb, max_nz = indices.shape
+    occ = (patches.reshape(mb, bm_rows, kb, bk) != 0).any(axis=(1, 3))
+    valid = indices >= 0
+    safe = jnp.where(valid, indices, 0)
+    live = valid[:, None, :] & occ[:, safe].transpose(1, 0, 2)  # [nb,mb,nz]
+    live_steps = live.sum()
+    dead_pairs = (live.sum(-1) == 0).sum()
+    return {"live_chunk_steps": live_steps,
+            "dead_pairs": dead_pairs,
+            "scheduled_steps": live_steps + dead_pairs,
+            "dense_grid_steps": jnp.int32(nb * mb * max_nz)}
+
+
 def sparse_dense_matmul_ref(x: jnp.ndarray, w: bm.BlockSparseMatrix) -> jnp.ndarray:
     lead = x.shape[:-1]
     out = ref.bitmask_spmm_ref(x.reshape(-1, x.shape[-1]), w.indices, w.vals,

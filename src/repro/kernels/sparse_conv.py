@@ -8,7 +8,30 @@ chunk-block-sparse layout and row-sub-block skip machinery as
 :mod:`repro.kernels.bitmask_spmm` (``subblock_macs`` is imported from there,
 so the skip predicate is literally the same circuit).
 
-On top of the spmm core, the conv kernel adds the three CNN-specific pieces:
+Two schedules drive the layer:
+
+* **Telescoped work-list schedule (default)** — the paper's §3.2 insight
+  applied to the grid itself: sparsity is exploited by *not scheduling*
+  dead work, not by predicating it away in-lane. At pack time (weights) or
+  call time (activations, eager only) the per-``(n_block, m_block)``
+  intersection of the stored filter chunk list with the activation-chunk
+  occupancy is compacted into a :class:`~repro.kernels.bitmask_spmm.\
+ConvWorkList` and the Pallas grid is the *flat work list* — one grid step
+  per live chunk, dead row blocks degenerating to a flush-only step. Each
+  scheduled step is a full dense (bm, bk) x (bk, bn) MXU tile MAC: the MXU
+  is a dense systolic array, so once a tile is *scheduled* there is
+  nothing left to predicate. The same work list can be executed by an
+  XLA gather + batched-GEMM + segment-sum pipeline
+  (``executor="xla"``) — bit-identical outputs — which is what non-TPU
+  backends use so wall-clock sparsity wins do not depend on Pallas
+  interpret mode.
+* **Dense-grid schedule (``schedule="dense"``)** — the original
+  ``(nb, mb, max_nz)`` grid with in-lane predication (``subblock_macs``):
+  keeps the instrumented counters (``count_macs``) and the ``sub_m``-row
+  occupancy skip, so it remains the measurement path the skip statistics
+  come from. Tests pin both schedules bitwise-equal.
+
+On top of the spmm core, the conv kernels add the CNN-specific pieces:
 
 * **Fused ReLU epilogue** — the nonlinearity is applied to the fp32 VMEM
   accumulator at the flush, so the *activated* feature map goes to HBM in
@@ -19,13 +42,13 @@ On top of the spmm core, the conv kernel adds the three CNN-specific pieces:
   simulator feedback loop comes from the same tensors the kernel produced,
   not a separate O(MN) host pass.
 * **Output-buffer coloring (paper §3.3)** — output tiles are
-  double-buffered: two VMEM accumulators, selected by the *parity of the
-  image* a row block belongs to. Consecutive input maps of a batch use
-  alternating colors, so image ``i+1`` can start accumulating while image
-  ``i``'s tiles drain — the barrier-free advance between consecutive input
-  maps. The grid row axis spans all images (``mb_per_img`` row blocks
-  each); correctness is invariant to interleaving, which
-  ``tests/test_vision.py`` pins (batched == per-image sequential, bitwise).
+  double-buffered: one (2, bm, bn) VMEM accumulator, the color selected by
+  the *parity of the image* a row block belongs to. Consecutive input maps
+  of a batch use alternating colors, so image ``i+1`` can start
+  accumulating while image ``i``'s tiles drain — the barrier-free advance
+  between consecutive input maps. Correctness is invariant to
+  interleaving, which ``tests/test_vision.py`` pins (batched ==
+  per-image sequential, bitwise) for both schedules.
 """
 from __future__ import annotations
 
@@ -34,6 +57,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -41,7 +65,8 @@ from repro.core import bitmask as bm
 from repro.core.sparse import Padding, Stride, normalize_padding, \
     normalize_stride
 from repro.kernels.bitmask_spmm import (DEFAULT_BM, LANE, _CompilerParams,
-                                        activation_occupancy, subblock_macs)
+                                        ConvWorkList, activation_occupancy,
+                                        build_worklist, subblock_macs)
 
 
 def _conv_kernel(idx_ref, occ_ref, x_ref, w_ref, *refs, nsteps: int,
@@ -51,7 +76,7 @@ def _conv_kernel(idx_ref, occ_ref, x_ref, w_ref, *refs, nsteps: int,
     o_ref = refs.pop(0)
     occ_out_ref = refs.pop(0) if emit_occupancy else None
     cntout_ref = refs.pop(0) if count_macs else None
-    acc0_ref, acc1_ref = refs.pop(0), refs.pop(0)
+    acc_ref = refs.pop(0)                       # (2, bm, bn): §3.3 colors
     cnt_ref = refs.pop(0) if count_macs else None
 
     n_i = pl.program_id(0)
@@ -60,32 +85,24 @@ def _conv_kernel(idx_ref, occ_ref, x_ref, w_ref, *refs, nsteps: int,
     # output-buffer color: parity of the image this row block belongs to
     parity = (m_i // mb_per_img) % 2
 
-    @pl.when(jnp.logical_and(j == 0, parity == 0))
-    def _init0():
-        acc0_ref[...] = jnp.zeros_like(acc0_ref)
-
-    @pl.when(jnp.logical_and(j == 0, parity == 1))
-    def _init1():
-        acc1_ref[...] = jnp.zeros_like(acc1_ref)
-
-    if cnt_ref is not None:
-        @pl.when(j == 0)
-        def _initc():
+    @pl.when(j == 0)
+    def _init():
+        pl.store(acc_ref, (pl.dslice(parity, 1), slice(None), slice(None)),
+                 jnp.zeros((1,) + acc_ref.shape[1:], acc_ref.dtype))
+        if cnt_ref is not None:
             cnt_ref[...] = jnp.zeros_like(cnt_ref)
 
     k_idx = idx_ref[n_i, j]
-    k_safe = jnp.maximum(k_idx, 0)
-    w = w_ref[0, 0].astype(jnp.float32)
-    # MAC into the accumulator of this image's color only
-    subblock_macs(jnp.logical_and(k_idx >= 0, parity == 0), k_safe, occ_ref,
-                  m_i, x_ref, w, acc0_ref, cnt_ref, two_sided=two_sided,
-                  sub_m=sub_m, bm=bm_rows)
-    subblock_macs(jnp.logical_and(k_idx >= 0, parity == 1), k_safe, occ_ref,
-                  m_i, x_ref, w, acc1_ref, cnt_ref, two_sided=two_sided,
-                  sub_m=sub_m, bm=bm_rows)
+    # MAC into the accumulator of this image's color (single call — the
+    # color is a dynamic index, not a predicated pair of calls)
+    subblock_macs(k_idx >= 0, jnp.maximum(k_idx, 0), occ_ref, m_i, x_ref,
+                  w_ref[0, 0].astype(jnp.float32), acc_ref, cnt_ref,
+                  two_sided=two_sided, sub_m=sub_m, bm=bm_rows, color=parity)
 
-    def _flush(acc_ref):
-        y = acc_ref[...]
+    @pl.when(j == nsteps - 1)
+    def _flush():
+        y = pl.load(acc_ref, (pl.dslice(parity, 1), slice(None),
+                              slice(None)))[0]
         if fuse_relu:
             y = jnp.maximum(y, 0.0)
         o_ref[...] = y.astype(o_ref.dtype)
@@ -98,14 +115,6 @@ def _conv_kernel(idx_ref, occ_ref, x_ref, w_ref, *refs, nsteps: int,
         if cntout_ref is not None:
             cntout_ref[...] = cnt_ref[...]
 
-    @pl.when(jnp.logical_and(j == nsteps - 1, parity == 0))
-    def _flush0():
-        _flush(acc0_ref)
-
-    @pl.when(jnp.logical_and(j == nsteps - 1, parity == 1))
-    def _flush1():
-        _flush(acc1_ref)
-
 
 @functools.partial(jax.jit, static_argnames=("bk", "bn", "bm_rows", "sub_m",
                                              "mb_per_img", "two_sided",
@@ -116,19 +125,27 @@ def sparse_conv_spmm(patches: jnp.ndarray, indices: jnp.ndarray,
                      bm_rows: int = DEFAULT_BM, sub_m: Optional[int] = None,
                      mb_per_img: Optional[int] = None, two_sided: bool = True,
                      fuse_relu: bool = True, emit_occupancy: bool = False,
-                     interpret: bool = True, count_macs: bool = False):
-    """Implicit-GEMM core: ``patches [M, K] @ W [K, N]`` + fused epilogue.
+                     interpret: Optional[bool] = None,
+                     count_macs: bool = False):
+    """Dense-grid implicit-GEMM core: ``patches [M, K] @ W [K, N]`` + fused
+    epilogue, with in-lane predication (the instrumented measurement path).
 
     ``patches`` stacks the per-image im2col rows, each image padded to a
     whole number of ``bm_rows`` blocks (``mb_per_img`` blocks per image —
     the coloring key). Weights are the chunk-block-sparse layout of
     :class:`repro.core.bitmask.BlockSparseMatrix`.
 
+    ``interpret=None`` resolves from the backend at call time
+    (:func:`repro.kernels.ops._resolve_interpret`) like every other
+    kernel — compiled on TPU, interpreter elsewhere.
+
     Returns ``out [M, N]`` (x.dtype, fp32 accumulation, ReLU fused when
     ``fuse_relu``), plus an int32 ``[M // sub_m, n_blocks]`` occupancy map
     when ``emit_occupancy`` and an int32 ``[n_blocks, M // bm_rows]``
     executed-MAC map when ``count_macs`` (in that order).
     """
+    from repro.kernels.ops import _resolve_interpret
+    interpret = _resolve_interpret(interpret)
     M, K = patches.shape
     nb, max_nz = indices.shape
     N = nb * bn
@@ -158,8 +175,7 @@ def sparse_conv_spmm(patches: jnp.ndarray, indices: jnp.ndarray,
         out_shape.append(jax.ShapeDtypeStruct((nb, mb), jnp.int32))
         out_specs.append(pl.BlockSpec((1, 1),
                                       lambda n, m, j, idx, occ_: (n, m)))
-    scratch = [pltpu.VMEM((bm_rows, bn), jnp.float32),   # color 0
-               pltpu.VMEM((bm_rows, bn), jnp.float32)]   # color 1
+    scratch = [pltpu.VMEM((2, bm_rows, bn), jnp.float32)]  # §3.3 colors
     if count_macs:
         scratch.append(pltpu.VMEM((1, 1), jnp.int32))
 
@@ -186,18 +202,222 @@ def sparse_conv_spmm(patches: jnp.ndarray, indices: jnp.ndarray,
     return tuple(out)
 
 
+# ---------------------------------------------------------------------------
+# Telescoped work-list schedule (grid = the compacted list itself)
+# ---------------------------------------------------------------------------
+def _conv_wl_kernel(n_ref, m_ref, k_ref, j_ref, first_ref, last_ref, x_ref,
+                    w_ref, *refs, mb_per_img: int, sub_m: int, bm_rows: int,
+                    fuse_relu: bool, emit_occupancy: bool):
+    refs = list(refs)
+    o_ref = refs.pop(0)
+    occ_out_ref = refs.pop(0) if emit_occupancy else None
+    acc_ref = refs.pop(0)                       # (2, bm, bn): §3.3 colors
+    t = pl.program_id(0)
+    parity = (m_ref[t] // mb_per_img) % 2
+
+    @pl.when(first_ref[t] == 1)
+    def _init():
+        pl.store(acc_ref, (pl.dslice(parity, 1), slice(None), slice(None)),
+                 jnp.zeros((1,) + acc_ref.shape[1:], acc_ref.dtype))
+
+    @pl.when(k_ref[t] >= 0)
+    def _mac():
+        # a scheduled step is a live chunk by construction: one dense MXU
+        # tile MAC, nothing left to predicate in-lane
+        acc = pl.load(acc_ref, (pl.dslice(parity, 1), slice(None),
+                                slice(None)))[0]
+        acc = acc + jnp.dot(x_ref[...].astype(jnp.float32),
+                            w_ref[0, 0].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+        pl.store(acc_ref, (pl.dslice(parity, 1), slice(None), slice(None)),
+                 acc[None])
+
+    @pl.when(last_ref[t] == 1)
+    def _flush():
+        y = pl.load(acc_ref, (pl.dslice(parity, 1), slice(None),
+                              slice(None)))[0]
+        if fuse_relu:
+            y = jnp.maximum(y, 0.0)
+        o_ref[...] = y.astype(o_ref.dtype)
+        if occ_out_ref is not None:
+            nsub = bm_rows // sub_m
+            occ_out_ref[...] = (y.reshape(nsub, sub_m, -1) != 0).any(
+                axis=(1, 2)).astype(jnp.int32).reshape(nsub, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "bn", "bm_rows", "sub_m",
+                                             "mb_per_img", "nb", "fuse_relu",
+                                             "emit_occupancy", "interpret"))
+def _worklist_spmm_pallas(patches, vals, wl_n, wl_m, wl_k, wl_j, wl_first,
+                          wl_last, *, bk, bn, bm_rows, sub_m, mb_per_img, nb,
+                          fuse_relu, emit_occupancy, interpret):
+    M, K = patches.shape
+    T = wl_n.shape[0]
+    kernel = functools.partial(
+        _conv_wl_kernel, mb_per_img=mb_per_img, sub_m=sub_m, bm_rows=bm_rows,
+        fuse_relu=fuse_relu, emit_occupancy=emit_occupancy)
+    out_shape = [jax.ShapeDtypeStruct((M, nb * bn), patches.dtype)]
+    out_specs = [pl.BlockSpec((bm_rows, bn),
+                              lambda t, n, m, k, j, f, l: (m[t], n[t]))]
+    if emit_occupancy:
+        nsub = bm_rows // sub_m
+        out_shape.append(jax.ShapeDtypeStruct((M // sub_m, nb), jnp.int32))
+        out_specs.append(pl.BlockSpec(
+            (nsub, 1), lambda t, n, m, k, j, f, l: (m[t], n[t])))
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=6,  # the flat work list
+            grid=(T,),
+            in_specs=[
+                pl.BlockSpec((bm_rows, bk),
+                             lambda t, n, m, k, j, f, l:
+                             (m[t], jnp.maximum(k[t], 0))),
+                pl.BlockSpec((1, 1, bk, bn),
+                             lambda t, n, m, k, j, f, l:
+                             (n[t], jnp.maximum(j[t], 0), 0, 0)),
+            ],
+            out_specs=out_specs,
+            scratch_shapes=[pltpu.VMEM((2, bm_rows, bn), jnp.float32)],
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    )(wl_n, wl_m, wl_k, wl_j, wl_first, wl_last, patches, vals)
+    return tuple(out)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "bn", "bm_rows", "sub_m",
+                                             "nb", "mb", "fuse_relu",
+                                             "emit_occupancy"))
+def _worklist_spmm_xla(patches, vals, wl_n, wl_m, wl_k, wl_j, *, bk, bn,
+                       bm_rows, sub_m, nb, mb, fuse_relu, emit_occupancy):
+    """XLA executor of the same compacted work list (non-TPU backends).
+
+    Gathers exactly the scheduled (x block, W chunk) tile pairs, runs one
+    batched GEMM over them, and segment-sums per (n, m) pair in schedule
+    order — the same fp32 accumulation order as the Pallas kernel, so the
+    outputs are bit-identical (``tests/test_vision.py`` pins this). The
+    caller passes only the *live* entries: ``segment_sum`` already yields
+    zeros for pairs with no scheduled MACs, so flush-only steps (a Pallas
+    grid necessity — its output blocks must be written) cost nothing here.
+    """
+    M, K = patches.shape
+    kb = K // bk
+    x4 = patches.reshape(mb, bm_rows, kb, bk)
+    xg = x4[wl_m, :, wl_k, :]                     # [T, bm, bk]
+    wg = vals[wl_n, wl_j]                         # [T, bk, bn]
+    prod = jax.lax.dot_general(
+        xg.astype(jnp.float32), wg.astype(jnp.float32),
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)       # [T, bm, bn]
+    pair = wl_n * mb + wl_m
+    acc = jax.ops.segment_sum(prod, pair, num_segments=nb * mb)
+    if fuse_relu:
+        acc = jnp.maximum(acc, 0.0)
+    out = acc.reshape(nb, mb, bm_rows, bn).transpose(1, 2, 0, 3) \
+             .reshape(M, nb * bn).astype(patches.dtype)
+    res = [out]
+    if emit_occupancy:
+        res.append((out.reshape(M // sub_m, sub_m, nb, bn) != 0)
+                   .any(axis=(1, 3)).astype(jnp.int32))
+    return tuple(res)
+
+
+def sparse_conv_spmm_wl(patches: jnp.ndarray, vals: jnp.ndarray,
+                        wl: ConvWorkList, *, bk: int = LANE, bn: int = LANE,
+                        bm_rows: int = DEFAULT_BM,
+                        sub_m: Optional[int] = None,
+                        mb_per_img: Optional[int] = None,
+                        fuse_relu: bool = True, emit_occupancy: bool = False,
+                        interpret: Optional[bool] = None,
+                        executor: Optional[str] = None):
+    """Work-list-scheduled implicit-GEMM core (the wall-clock path).
+
+    ``wl`` is the compacted schedule from
+    :func:`repro.kernels.bitmask_spmm.build_worklist`; exactly
+    ``wl.num_steps`` grid steps run — ``wl.mac_steps`` live-chunk MACs
+    plus one flush-only step per dead (n, m) pair. ``executor`` picks the
+    backend that walks the list: ``"pallas"`` (the grid — compiled on TPU,
+    interpreter elsewhere) or ``"xla"`` (gather + batched GEMM +
+    segment-sum); ``None`` resolves per backend: pallas on TPU, xla on
+    CPU (where the scatter-add of ``segment_sum`` runs in schedule order,
+    so outputs are bit-identical across executors and vs the dense-grid
+    kernel — the property tests pin this), and the pallas interpreter on
+    any other backend, because a GPU scatter-add is atomic and would only
+    promise rtol-level agreement, not bits.
+    """
+    from repro.kernels.ops import _resolve_interpret, on_tpu
+    if executor is None:
+        if on_tpu():
+            executor = "pallas"
+        else:
+            executor = "xla" if jax.default_backend() == "cpu" else "pallas"
+    sub_m = bm_rows if sub_m is None else sub_m
+    M = patches.shape[0]
+    mb = M // bm_rows
+    mb_per_img = mb if mb_per_img is None else mb_per_img
+    assert wl.mb == mb, (wl.mb, mb)
+    if executor == "xla":
+        live = wl.k >= 0                  # flush-only steps are free in XLA
+        return _worklist_spmm_xla(
+            patches, vals,
+            *(jnp.asarray(a[live]) for a in (wl.n, wl.m, wl.k, wl.j)),
+            bk=bk, bn=bn, bm_rows=bm_rows, sub_m=sub_m, nb=wl.nb, mb=mb,
+            fuse_relu=fuse_relu, emit_occupancy=emit_occupancy)
+    return _worklist_spmm_pallas(
+        patches, vals, *wl.prefetch_args(), bk=bk, bn=bn, bm_rows=bm_rows,
+        sub_m=sub_m, mb_per_img=mb_per_img, nb=wl.nb, fuse_relu=fuse_relu,
+        emit_occupancy=emit_occupancy,
+        interpret=_resolve_interpret(interpret))
+
+
 def extract_patches(x: jnp.ndarray, kh: int, kw: int, stride: Stride,
-                    padding: Padding) -> Tuple[jnp.ndarray, Tuple[int, int]]:
+                    padding: Padding, *, strategy: str = "auto"
+                    ) -> Tuple[jnp.ndarray, Tuple[int, int]]:
     """im2col rows for the implicit GEMM: [B, OH*OW, Cin*kh*kw] (+ (OH, OW)).
 
     Feature order is channel-major (cin, kh, kw), matching the
-    ``w.transpose(2, 0, 1, 3)`` matrixization of the packing path.
+    ``w.transpose(2, 0, 1, 3)`` matrixization of the packing path. All
+    strategies are pure jax ops, so patch extraction fuses into whatever
+    jit the caller runs under — the K-fold patch blow-up never crosses a
+    host boundary:
+
+    * ``"patches"`` — ``jax.lax.conv_general_dilated_patches``.
+    * ``"slices"``  — kh*kw strided slices of the padded map, stacked;
+      XLA:CPU fuses this ~2x better than the patches primitive.
+    * ``"auto"``    — patches on TPU, slices elsewhere (resolved at trace
+      time, like the interpret/executor knobs).
     """
-    patches = jax.lax.conv_general_dilated_patches(
-        x, (kh, kw), normalize_stride(stride), normalize_padding(padding),
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    b, oh, ow, f = patches.shape
-    return patches.reshape(b, oh * ow, f), (oh, ow)
+    if strategy == "auto":
+        from repro.kernels.ops import on_tpu
+        strategy = "patches" if on_tpu() else "slices"
+    sh, sw = normalize_stride(stride)
+    pad = normalize_padding(padding)
+    if strategy == "patches":
+        patches = jax.lax.conv_general_dilated_patches(
+            x, (kh, kw), (sh, sw), pad,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        b, oh, ow, f = patches.shape
+        return patches.reshape(b, oh * ow, f), (oh, ow)
+    if strategy != "slices":
+        raise ValueError(f"unknown im2col strategy {strategy!r}")
+    b, H, W, cin = x.shape
+    if isinstance(pad, str):
+        pads = jax.lax.padtype_to_pads((H, W), (kh, kw), (sh, sw), pad)
+    else:
+        pads = pad
+    xp = jnp.pad(x, ((0, 0), tuple(pads[0]), tuple(pads[1]), (0, 0)))
+    H2, W2 = xp.shape[1], xp.shape[2]
+    oh = (H2 - kh) // sh + 1
+    ow = (W2 - kw) // sw + 1
+    parts = [xp[:, dy:dy + (oh - 1) * sh + 1:sh,
+                dx:dx + (ow - 1) * sw + 1:sw, :]
+             for dy in range(kh) for dx in range(kw)]
+    p = jnp.stack(parts, axis=3)                  # [b, oh, ow, kh*kw, cin]
+    p = p.transpose(0, 1, 2, 4, 3)                # channel-major features
+    return p.reshape(b, oh * ow, cin * kh * kw), (oh, ow)
 
 
 def sparse_conv2d_nhwc(x: jnp.ndarray, w: bm.BlockSparseMatrix, kh: int,
@@ -207,7 +427,13 @@ def sparse_conv2d_nhwc(x: jnp.ndarray, w: bm.BlockSparseMatrix, kh: int,
                        emit_occupancy: bool = False,
                        interpret: Optional[bool] = None,
                        count_macs: bool = False,
-                       bm_rows: int = DEFAULT_BM):
+                       bm_rows: int = DEFAULT_BM,
+                       schedule: str = "compact",
+                       executor: Optional[str] = None,
+                       im2col: str = "auto",
+                       compact_activations: bool = False,
+                       report_schedule: bool = False,
+                       wl_cache: Optional[dict] = None):
     """One conv layer through the sparse kernel: x [B, H, W, Cin] -> [B, OH,
     OW, Cout] (ReLU fused when ``fuse_relu``).
 
@@ -215,15 +441,32 @@ def sparse_conv2d_nhwc(x: jnp.ndarray, w: bm.BlockSparseMatrix, kh: int,
     Cin*kh*kw padded to the chunk, N = Cout padded to the chunk. Each
     image's patch rows are padded to whole ``bm_rows`` blocks and stacked,
     so the kernel's coloring alternates accumulators between consecutive
-    images. Returns ``(out, aux)`` where ``aux`` carries the optional
+    images.
+
+    ``schedule="compact"`` (default) drives the grid from the telescoped
+    work list (pack-time weight chunk lists; plus the activation-chunk
+    intersection when ``compact_activations`` — eager calls only, the
+    occupancy is data). ``schedule="dense"`` is the instrumented
+    dense-grid path (required for ``count_macs``). ``executor`` and
+    ``im2col`` select the work-list walker and the patch-extraction
+    strategy (both resolve per backend when ``None``/default).
+
+    Returns ``(out, aux)`` where ``aux`` carries the optional
     ``occupancy`` (int32 [B, ceil(M_img/sub_m), n_blocks], padded rows
-    zero) and ``mac_counts`` outputs plus the patch-matrix metadata the
-    stats path reuses.
+    zero) and ``mac_counts`` outputs, the patch-matrix metadata the stats
+    path reuses, and — for compact schedules or ``report_schedule`` — a
+    ``schedule`` dict with scheduled vs dense-grid step counts.
     """
     from repro.kernels.ops import _resolve_interpret
     interpret = _resolve_interpret(interpret)
+    if count_macs and schedule == "compact":
+        # the executed-MAC counters live in the dense-grid kernel; keep
+        # the promised aux["schedule"] by reporting the compact schedule
+        schedule = "dense"
+        report_schedule = True
     b = x.shape[0]
-    patches, (oh, ow) = extract_patches(x, kh, kw, stride, padding)
+    patches, (oh, ow) = extract_patches(x, kh, kw, stride, padding,
+                                        strategy=im2col)
     m_img = oh * ow
     k_total = w.shape[0]
     pad_rows = (-m_img) % bm_rows
@@ -232,14 +475,70 @@ def sparse_conv2d_nhwc(x: jnp.ndarray, w: bm.BlockSparseMatrix, kh: int,
     patches = jnp.pad(patches, ((0, 0), (0, pad_rows), (0, pad_k)))
     m_pad = m_img + pad_rows
     flat = patches.reshape(b * m_pad, k_total)
-    res = sparse_conv_spmm(
-        flat, w.indices, w.vals, bk=w.bk, bn=w.bn, bm_rows=bm_rows,
-        sub_m=sub_m, mb_per_img=m_pad // bm_rows, two_sided=two_sided,
-        fuse_relu=fuse_relu, emit_occupancy=emit_occupancy,
-        interpret=interpret, count_macs=count_macs)
+    mb = (b * m_pad) // bm_rows
+    aux = {"m_img": m_img, "k_total": k_total, "oh": oh, "ow": ow}
+
+    wl = None
+    if schedule == "compact" or report_schedule:
+        occ_blk = None
+        if compact_activations:
+            if isinstance(flat, jax.core.Tracer):
+                raise ValueError(
+                    "compact_activations intersects the schedule with the "
+                    "activation occupancy, which is data — eager (concrete) "
+                    "calls only; under jit use the pack-time weight "
+                    "compaction (compact_activations=False)")
+            occ_blk = np.asarray(
+                bm.chunk_occupancy(flat, bm_rows, w.bk))
+        if occ_blk is None and wl_cache is not None:
+            # static (pack-time) schedules depend only on the row-block
+            # count, so repeat eager calls reuse the compacted list
+            wl = wl_cache.get(mb)
+        if wl is None:
+            wl = build_worklist(w.host_indices(), mb, occ_blk=occ_blk)
+            if occ_blk is None and wl_cache is not None:
+                wl_cache[mb] = wl
+        aux["schedule"] = {
+            "scheduled_steps": wl.num_steps,
+            "mac_steps": wl.mac_steps,
+            "flush_only_steps": wl.flush_only_steps,
+            "dense_grid_steps": wl.dense_grid_steps,
+            "activation_compacted": occ_blk is not None,
+        }
+        if report_schedule:
+            from repro.core.telescope import combine_schedule_requests
+            # a fetch stays outstanding for ~one pair's sweep (the
+            # weight-stationary reuse window)
+            aux["schedule"]["combining"] = combine_schedule_requests(
+                wl.k, fetch_latency=wl.num_steps / max(wl.num_pairs, 1))
+            if occ_blk is not None:
+                # what the static (pack-time-only) schedule would run —
+                # the compiled pipeline's grid size for this geometry
+                wl_s = wl_cache.get(mb) if wl_cache is not None else None
+                if wl_s is None:
+                    wl_s = build_worklist(w.host_indices(), mb)
+                    if wl_cache is not None:
+                        wl_cache[mb] = wl_s
+                aux["schedule"]["static_scheduled_steps"] = wl_s.num_steps
+            else:
+                aux["schedule"]["static_scheduled_steps"] = wl.num_steps
+
+    if schedule == "compact":
+        res = sparse_conv_spmm_wl(
+            flat, w.vals, wl, bk=w.bk, bn=w.bn, bm_rows=bm_rows, sub_m=sub_m,
+            mb_per_img=m_pad // bm_rows, fuse_relu=fuse_relu,
+            emit_occupancy=emit_occupancy, interpret=interpret,
+            executor=executor)
+    elif schedule == "dense":
+        res = sparse_conv_spmm(
+            flat, w.indices, w.vals, bk=w.bk, bn=w.bn, bm_rows=bm_rows,
+            sub_m=sub_m, mb_per_img=m_pad // bm_rows, two_sided=two_sided,
+            fuse_relu=fuse_relu, emit_occupancy=emit_occupancy,
+            interpret=interpret, count_macs=count_macs)
+    else:
+        raise ValueError(f"unknown schedule {schedule!r}")
     out = res[0].reshape(b, m_pad, w.n_blocks * w.bn)
     out = out[:, :m_img, :cout].reshape(b, oh, ow, cout)
-    aux = {"m_img": m_img, "k_total": k_total, "oh": oh, "ow": ow}
     i = 1
     if emit_occupancy:
         occ = res[i].reshape(b, m_pad // sub_m, w.n_blocks)

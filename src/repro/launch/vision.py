@@ -96,7 +96,7 @@ def main() -> None:
     st = eng.stats
     print(f"engine: {st.images} images on {args.slots} slots in "
           f"{st.engine_steps} steps, {st.wall_s:.2f}s "
-          f"({st.img_per_s:.2f} img/s incl. compile, "
+          f"({st.img_per_s:.2f} img/s steady, compile {st.compile_s:.2f}s, "
           f"util {st.slot_utilization:.2f})")
     assert np.allclose(produced[0], np.asarray(out0)[0], atol=1e-5), \
         "engine output must match the solo forward"

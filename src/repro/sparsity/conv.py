@@ -47,11 +47,19 @@ def pack_conv_filters(w: np.ndarray, chunk: int = bm.CHUNK,
 @dataclasses.dataclass
 class PackedConv:
     """One conv layer, offline-processed: pruned (permuted/folded) dense
-    filters kept for the oracle, plus their packed kernel form."""
+    filters kept for the oracle, plus their packed kernel form.
+
+    The packed layout keeps its chunk index lists on the host
+    (``packed.indices_np``, set at pack time), so schedule builders never
+    read back from device; ``wl_cache`` memoizes the static (weight-side)
+    telescoped work lists per row-block count — the offline part of the
+    §3.2 compaction, computed once per (layer, batch geometry)."""
 
     w_dense: np.ndarray           # [kh, kw, Cin, Cout] pruned, chain-folded
     packed: bm.BlockSparseMatrix
     perm: np.ndarray              # balance permutation of the Cout axis
+    wl_cache: dict = dataclasses.field(default_factory=dict, repr=False,
+                                       compare=False)
 
     @property
     def kh(self) -> int:

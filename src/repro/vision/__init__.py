@@ -7,10 +7,12 @@ two-sided sparse conv kernel (:mod:`repro.kernels.sparse_conv`);
 """
 from repro.vision.engine import ImageRequest, VisionEngine, VisionStats
 from repro.vision.model import (SUPPORTED_ARCHS, VisionModel,
-                                build_vision_model, dense_forward, forward,
-                                layer_table, measured_densities,
-                                oracle_check)
+                                build_vision_model, compile_forward,
+                                dense_forward, forward, layer_table,
+                                measured_densities, oracle_check,
+                                schedule_summary)
 
 __all__ = ["ImageRequest", "VisionEngine", "VisionStats", "SUPPORTED_ARCHS",
-           "VisionModel", "build_vision_model", "dense_forward", "forward",
-           "layer_table", "measured_densities", "oracle_check"]
+           "VisionModel", "build_vision_model", "compile_forward",
+           "dense_forward", "forward", "layer_table", "measured_densities",
+           "oracle_check", "schedule_summary"]

@@ -17,7 +17,8 @@ topology does not linearize into a chain and stays simulator-only.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+import functools
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +54,8 @@ class VisionModel:
     layers: List[VisionLayer]
     input_size: int
     density: float                # pruning target (paper Table 1 filters)
+    _fwd_cache: Dict = dataclasses.field(default_factory=dict, repr=False,
+                                         compare=False)
 
     @property
     def num_layers(self) -> int:
@@ -121,19 +124,78 @@ def max_pool(x: jnp.ndarray, window: int, stride: int) -> jnp.ndarray:
         (1, stride, stride, 1), "VALID")
 
 
+def _forward_layers(model: VisionModel, x: jnp.ndarray, *, sub_m: int,
+                    two_sided: bool, schedule: str, executor: Optional[str],
+                    im2col: str, interpret: Optional[bool]) -> jnp.ndarray:
+    """The pure whole-net graph: every layer (patch extraction included)
+    in one trace, activations handed layer-to-layer in-device."""
+    for layer in model.layers:
+        c = layer.conv
+        x, _ = sparse_conv2d_nhwc(
+            x, c.packed, c.kh, c.kw, c.cout, stride=layer.stride,
+            padding=layer.padding, sub_m=sub_m, two_sided=two_sided,
+            fuse_relu=True, interpret=interpret, schedule=schedule,
+            executor=executor, im2col=im2col, wl_cache=c.wl_cache)
+        if layer.pool_after is not None:
+            x = max_pool(x, *layer.pool_after)
+    return x
+
+
+def compile_forward(model: VisionModel, *, sub_m: int = 8,
+                    two_sided: bool = True, schedule: str = "compact",
+                    executor: Optional[str] = None, im2col: str = "auto",
+                    interpret: Optional[bool] = None,
+                    donate: bool = False) -> Callable[[jnp.ndarray],
+                                                      jnp.ndarray]:
+    """One jit of the full forward (cached on the model per config).
+
+    The layer loop is unrolled over the static layer specs inside a single
+    ``jax.jit``: im2col patch extraction, the work-list kernels, and the
+    pools all fuse into one compiled program — no host boundary between
+    layers, and the telescoped work lists are baked in at trace time from
+    the pack-time chunk lists. ``donate=True`` donates the input buffer
+    (serving engines hand a fresh batch every step); leave it off when
+    the caller reuses ``x``. Retracing per input shape is handled by jit.
+    """
+    key = (sub_m, two_sided, schedule, executor, im2col, interpret, donate)
+    fn = model._fwd_cache.get(key)
+    if fn is None:
+        body = functools.partial(
+            _forward_layers, model, sub_m=sub_m, two_sided=two_sided,
+            schedule=schedule, executor=executor, im2col=im2col,
+            interpret=interpret)
+        fn = jax.jit(body, donate_argnums=(0,) if donate else ())
+        model._fwd_cache[key] = fn
+    return fn
+
+
 def forward(model: VisionModel, x: jnp.ndarray, *, sub_m: int = 8,
             two_sided: bool = True, interpret: Optional[bool] = None,
-            collect_stats: bool = False
+            collect_stats: bool = False, schedule: str = "compact",
+            executor: Optional[str] = None, im2col: str = "auto",
+            compiled: Optional[bool] = None
             ) -> Tuple[jnp.ndarray, List[Dict[str, float]]]:
     """Whole network through the sparse conv kernel path.
 
-    x: [B, H, W, 3] float32. Returns the final feature map and (when
-    ``collect_stats``) one dict per layer with the measured densities the
-    simulator feedback loop consumes: scalar map/filter densities (the
-    paper's Table-1 quantities), chunk-granular weight density, and the
-    kernel's executed vs skippable tile MACs (from its own ``count_macs``
-    counters — the skip numbers are the kernel's, not a model's).
+    x: [B, H, W, 3] float32. By default (``compiled=None``) the fast path
+    runs: one jit of the full forward over the telescoped work-list
+    schedule (see :func:`compile_forward`). ``collect_stats`` switches to
+    the instrumented per-layer path and returns one dict per layer with
+    the measured densities the simulator feedback loop consumes: scalar
+    map/filter densities (the paper's Table-1 quantities), chunk-granular
+    weight density, the kernel's executed vs skippable tile MACs (from
+    its own ``count_macs`` counters — the skip numbers are the kernel's,
+    not a model's), and the compacted schedule's step counts (scheduled
+    vs dense-grid, with the §3.2 request-combining model applied to the
+    layer's work list).
     """
+    if compiled is None:
+        compiled = not collect_stats
+    if compiled and not collect_stats:
+        fn = compile_forward(model, sub_m=sub_m, two_sided=two_sided,
+                             schedule=schedule, executor=executor,
+                             im2col=im2col, interpret=interpret)
+        return fn(x), []
     stats: List[Dict[str, float]] = []
     for i, layer in enumerate(model.layers):
         c = layer.conv
@@ -143,7 +205,11 @@ def forward(model: VisionModel, x: jnp.ndarray, *, sub_m: int = 8,
             x, c.packed, c.kh, c.kw, c.cout, stride=layer.stride,
             padding=layer.padding, sub_m=sub_m, two_sided=two_sided,
             fuse_relu=True, emit_occupancy=collect_stats,
-            interpret=interpret, count_macs=collect_stats)
+            interpret=interpret, count_macs=collect_stats,
+            schedule="dense" if collect_stats else schedule,
+            executor=executor, im2col=im2col, wl_cache=c.wl_cache,
+            compact_activations=collect_stats,
+            report_schedule=collect_stats)
         if collect_stats:
             executed = float(np.asarray(aux["mac_counts"]).sum())
             n_chunks = int(np.asarray(c.packed.indices >= 0).sum())
@@ -157,7 +223,16 @@ def forward(model: VisionModel, x: jnp.ndarray, *, sub_m: int = 8,
             dense_tile = c.packed.n_blocks * kb * units
             occ = np.asarray(aux["occupancy"])
             spec = S.BENCHMARKS[model.name].layers[i]
+            sched = aux["schedule"]
             stats.append({
+                "scheduled_steps": sched["scheduled_steps"],
+                "live_chunk_steps": sched["mac_steps"],
+                "flush_only_steps": sched["flush_only_steps"],
+                "dense_grid_steps": sched["dense_grid_steps"],
+                "static_scheduled_steps": sched["static_scheduled_steps"],
+                "schedule_requests": sched["combining"]["requests"],
+                "schedule_fetches": sched["combining"]["fetches"],
+                "combine_factor": sched["combining"]["combine_factor"],
                 "layer": i,
                 "kh": c.kh, "cin": c.cin, "cout": c.cout,
                 "macs": float(x.shape[0]) * aux["oh"] * aux["ow"]
@@ -230,6 +305,21 @@ def layer_table(stats: List[Dict[str, float]],
                     f"{s['paper_filter_density']:12.3f}")
         rows.append(row)
     return rows
+
+
+def schedule_summary(stats: List[Dict[str, float]]) -> Dict[str, float]:
+    """Network totals of the telescoped-schedule counters: what the
+    compacted grid schedules vs what the dense grid would have, plus the
+    §3.2 request-combining factor over the whole net."""
+    tot = {k: float(sum(s[k] for s in stats)) for k in
+           ("scheduled_steps", "live_chunk_steps", "flush_only_steps",
+            "dense_grid_steps", "static_scheduled_steps",
+            "schedule_requests", "schedule_fetches")}
+    tot["combine_factor"] = (tot["schedule_requests"]
+                             / max(tot["schedule_fetches"], 1e-9))
+    tot["grid_compaction"] = (1.0 - tot["scheduled_steps"]
+                              / max(tot["dense_grid_steps"], 1e-9))
+    return tot
 
 
 def measured_densities(stats: List[Dict[str, float]]

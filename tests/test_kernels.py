@@ -184,6 +184,38 @@ def test_fused_ffn_handles_leading_dims_and_k_pad(rng):
     np.testing.assert_allclose(np.asarray(got), r * r, rtol=2e-4, atol=2e-3)
 
 
+def test_sparse_conv_spmm_interpret_default_routes_through_resolver(
+        monkeypatch, rng):
+    """Satellite regression: ``sparse_conv_spmm`` used to hardcode
+    ``interpret=True``, silently pinning direct spmm callers (and the
+    bench's kernel-level path) to interpret mode even on TPU. Its default
+    must be None and resolve through ``ops._resolve_interpret`` like
+    every other kernel."""
+    import inspect
+
+    from repro.kernels import sparse_conv
+
+    sig = inspect.signature(sparse_conv.sparse_conv_spmm.__wrapped__)
+    assert sig.parameters["interpret"].default is None
+    seen = []
+    real = ops._resolve_interpret
+
+    def spy(v):
+        seen.append(v)
+        return real(v)
+
+    monkeypatch.setattr(ops, "_resolve_interpret", spy)
+    w = _sparse(rng, (128, 128), 0.5)
+    ws = bm.block_sparsify(w)
+    x = jnp.asarray(_sparse(rng, (128 + 128, 128), 0.5))  # fresh jit shape
+    out = sparse_conv.sparse_conv_spmm(x, ws.indices, ws.vals)[0]
+    assert None in seen                     # default flowed to the resolver
+    np.testing.assert_allclose(
+        np.asarray(out),
+        np.maximum(np.asarray(x) @ np.asarray(bm.block_densify(ws)), 0.0),
+        rtol=1e-5, atol=1e-4)
+
+
 def test_interpret_default_resolves_at_call_time(monkeypatch):
     """The interpret default must track jax.default_backend() *now*, not a
     snapshot taken at import (the backend may be initialized later, e.g.

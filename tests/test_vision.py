@@ -1,18 +1,25 @@
 """Vision subsystem: implicit-GEMM sparse conv kernel vs
-``jax.lax.conv_general_dilated``, output-buffer coloring, whole-network
-forward, engine admission, and the conv2d_im2col / tile-density satellites."""
+``jax.lax.conv_general_dilated``, telescoped work-list compaction vs the
+dense grid, output-buffer coloring, whole-network forward (eager and
+compiled), engine admission, and the conv2d_im2col / tile-density
+satellites."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis_stubs import given, settings, st
 
 from repro.core import simulator as S
 from repro.core.sparse import (activation_tile_density, conv2d_im2col,
                                prune_by_magnitude)
-from repro.kernels.sparse_conv import sparse_conv2d_nhwc, sparse_conv_spmm
+from repro.kernels import ops
+from repro.kernels.bitmask_spmm import build_worklist
+from repro.kernels.sparse_conv import (extract_patches, sparse_conv2d_nhwc,
+                                       sparse_conv_spmm)
 from repro.sparsity.conv import build_sparse_chain, pack_conv_filters
 from repro.vision import (ImageRequest, VisionEngine, build_vision_model,
-                          dense_forward, forward, measured_densities)
+                          compile_forward, dense_forward, forward,
+                          measured_densities)
 
 
 def _conv_operands(rng, B=2, H=9, W=11, cin=8, cout=20, k=3, density=0.4,
@@ -150,8 +157,170 @@ def test_coloring_multi_block_images(rng):
 
 
 # ---------------------------------------------------------------------------
-# whole networks (model zoo) — acceptance: pruned VGG16 end to end
+# telescoped work-list compaction (the grid is the schedule)
 # ---------------------------------------------------------------------------
+@pytest.mark.parametrize("executor", ["pallas", "xla"])
+def test_compacted_schedule_bitwise_equals_dense_grid(rng, executor):
+    """Moving the skip from in-lane predication into the schedule must not
+    change a single bit, for both work-list walkers."""
+    x, w = _conv_operands(rng, B=2, H=12, W=12, map_density=0.4)
+    ws = pack_conv_filters(w)
+    dense, _ = sparse_conv2d_nhwc(jnp.asarray(x), ws, 3, 3, w.shape[-1],
+                                  schedule="dense")
+    compact, aux = sparse_conv2d_nhwc(jnp.asarray(x), ws, 3, 3, w.shape[-1],
+                                      schedule="compact", executor=executor)
+    np.testing.assert_array_equal(np.asarray(compact), np.asarray(dense))
+    sched = aux["schedule"]
+    assert sched["scheduled_steps"] <= sched["dense_grid_steps"]
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([0.05, 0.3, 0.7, 1.0]),
+       st.sampled_from([0.1, 0.5, 0.9]), st.integers(1, 3),
+       st.sampled_from([(8, 9, 11), (4, 16, 16), (12, 10, 7)]))
+@settings(max_examples=12, deadline=None)
+def test_compaction_property_random_densities(seed, density, map_density,
+                                              batch, geom):
+    """Property (satellite): compacted-grid output == dense-grid output for
+    random densities/shapes, on both executors, including the dynamic
+    activation-side intersection."""
+    rng = np.random.default_rng(seed)
+    cin, H, W = geom
+    x, w = _conv_operands(rng, B=batch, H=H, W=W, cin=cin, cout=12,
+                          density=density, map_density=map_density)
+    ws = pack_conv_filters(w)
+    dense, _ = sparse_conv2d_nhwc(jnp.asarray(x), ws, 3, 3, w.shape[-1],
+                                  schedule="dense")
+    for kwargs in ({"executor": "pallas"}, {"executor": "xla"},
+                   {"executor": "xla", "compact_activations": True}):
+        compact, _ = sparse_conv2d_nhwc(jnp.asarray(x), ws, 3, 3,
+                                        w.shape[-1], schedule="compact",
+                                        **kwargs)
+        np.testing.assert_array_equal(np.asarray(compact), np.asarray(dense))
+
+
+def test_scheduled_steps_match_skip_model(rng):
+    """Exactness (satellite): the compacted schedule's MAC step count must
+    equal the pure-jnp skip model's predicted live-chunk count — no dead
+    steps scheduled, none missing."""
+    x, w = _conv_operands(rng, B=2, H=16, W=16, cin=8, cout=20,
+                          density=0.3, map_density=0.15)
+    # zero image rows 0..8: every 3x3 patch of the first 8 output rows
+    # (the first 128-row patch block) is all-zero -> a dead block
+    x[0, :9] = 0.0
+    ws = pack_conv_filters(w)
+    patches, _ = extract_patches(jnp.asarray(x), 3, 3, 1, "SAME")
+    m_img = patches.shape[1]
+    pad_rows = (-m_img) % 128
+    pad_k = ws.shape[0] - patches.shape[-1]
+    flat = jnp.pad(patches, ((0, 0), (0, pad_rows), (0, pad_k))
+                   ).reshape(-1, ws.shape[0])
+    model = ops.conv_schedule_stats(flat, ws.indices, bk=ws.bk)
+    occ_blk = np.asarray((np.asarray(flat).reshape(
+        flat.shape[0] // 128, 128, -1, ws.bk) != 0).any(axis=(1, 3)))
+    wl = build_worklist(ws.host_indices(), flat.shape[0] // 128,
+                        occ_blk=occ_blk)
+    assert wl.mac_steps == int(model["live_chunk_steps"])
+    assert wl.num_steps == int(model["scheduled_steps"])
+    assert wl.flush_only_steps == int(model["dead_pairs"])
+    assert wl.dense_grid_steps == int(model["dense_grid_steps"])
+    # compaction actually fired on this input
+    assert wl.mac_steps < wl.dense_grid_steps
+    # and every scheduled MAC step is genuinely live: stored chunk + block
+    live = wl.k >= 0
+    assert occ_blk[wl.m[live], wl.k[live]].all()
+    host_idx = ws.host_indices()
+    assert all(wl.k[t] in host_idx[wl.n[t]] for t in np.nonzero(live)[0])
+
+
+def test_worklist_ragged_and_flat_forms_agree(rng):
+    """The ragged-padded [nb, mb, max_live] tensor and the flat schedule
+    are two serializations of the same intersection."""
+    x, w = _conv_operands(rng, B=1, H=16, W=16, cin=8, cout=20,
+                          density=0.3, map_density=0.2)
+    ws = pack_conv_filters(w)
+    patches, _ = extract_patches(jnp.asarray(x), 3, 3, 1, "SAME")
+    m_img = patches.shape[1]
+    flat = jnp.pad(patches, ((0, 0), (0, (-m_img) % 128),
+                             (0, ws.shape[0] - patches.shape[-1]))
+                   ).reshape(-1, ws.shape[0])
+    occ_blk = np.asarray((np.asarray(flat).reshape(
+        flat.shape[0] // 128, 128, -1, ws.bk) != 0).any(axis=(1, 3)))
+    wl = build_worklist(ws.host_indices(), flat.shape[0] // 128,
+                        occ_blk=occ_blk)
+    assert (wl.steps_per_pair == (wl.ragged_idx >= 0).sum(-1)).all()
+    assert wl.mac_steps == int(wl.steps_per_pair.sum())
+    for t in range(wl.num_steps):
+        n, m, j = int(wl.n[t]), int(wl.m[t]), int(wl.j[t])
+        if j >= 0:
+            assert j in wl.ragged_idx[n, m]
+
+
+def test_coloring_worklist_kernel_batched_equals_sequential(rng):
+    """§3.3 coloring regression (satellite): after collapsing to a single
+    color-indexed accumulator, batched output must stay bitwise-equal to
+    per-image sequential — on the dense grid and on both work-list
+    walkers."""
+    x, w = _conv_operands(rng, B=4, H=10, W=10, map_density=0.5)
+    ws = pack_conv_filters(w)
+    for kwargs in ({"schedule": "dense"},
+                   {"schedule": "compact", "executor": "pallas"},
+                   {"schedule": "compact", "executor": "xla"}):
+        batched, _ = sparse_conv2d_nhwc(jnp.asarray(x), ws, 3, 3,
+                                        w.shape[-1], **kwargs)
+        for i in range(x.shape[0]):
+            solo, _ = sparse_conv2d_nhwc(jnp.asarray(x[i:i + 1]), ws, 3, 3,
+                                         w.shape[-1], **kwargs)
+            np.testing.assert_array_equal(np.asarray(batched[i]),
+                                          np.asarray(solo[0]))
+
+
+def test_im2col_strategies_bitwise_equal(rng):
+    """Both in-jit patch extraction strategies produce the identical patch
+    matrix (channel-major feature order)."""
+    x = rng.normal(size=(2, 11, 9, 5)).astype(np.float32)
+    for stride, padding in ((1, "SAME"), ((2, 1), "VALID"),
+                            ((1, 2), ((1, 0), (2, 1)))):
+        a, (oh, ow) = extract_patches(jnp.asarray(x), 3, 3, stride, padding,
+                                      strategy="patches")
+        b, (oh2, ow2) = extract_patches(jnp.asarray(x), 3, 3, stride,
+                                        padding, strategy="slices")
+        assert (oh, ow) == (oh2, ow2)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_compact_activations_rejected_under_jit(rng):
+    """The dynamic intersection needs concrete activations; under a trace
+    it must raise, not silently fall back."""
+    x, w = _conv_operands(rng)
+    ws = pack_conv_filters(w)
+
+    @jax.jit
+    def f(v):
+        return sparse_conv2d_nhwc(v, ws, 3, 3, w.shape[-1],
+                                  schedule="compact", executor="xla",
+                                  compact_activations=True)[0]
+
+    with pytest.raises(ValueError, match="compact_activations"):
+        f(jnp.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# compiled whole-net pipeline
+# ---------------------------------------------------------------------------
+def test_compiled_forward_bitwise_equals_eager(rng):
+    model = build_vision_model("VGGNet", num_layers=2, seed=0)
+    x = np.abs(rng.normal(size=(2, 24, 24, 3))).astype(np.float32)
+    x[rng.random(x.shape) >= 0.45] = 0.0
+    eager, stats = forward(model, jnp.asarray(x), collect_stats=True)
+    fn = compile_forward(model)
+    np.testing.assert_array_equal(np.asarray(fn(jnp.asarray(x))),
+                                  np.asarray(eager))
+    # the jit is cached per config on the model
+    assert compile_forward(model) is fn
+    # stats carry the schedule compaction numbers
+    assert all(s["scheduled_steps"] <= s["dense_grid_steps"] for s in stats)
+    assert all(s["live_chunk_steps"] <= s["scheduled_steps"] for s in stats)
+    assert all(s["combine_factor"] >= 1.0 for s in stats)
 def test_vgg16_full_network_matches_dense(rng):
     model = build_vision_model("VGGNet", seed=0)   # Table-1 density 0.334
     assert model.num_layers == 13
