@@ -7,7 +7,9 @@ feedback loop into the cycle simulator.
 Runs a whole pruned network (Table-1 filter densities) through BOTH paths —
 ``jax.lax.conv_general_dilated`` on the pruned dense weights and the
 compiled whole-net sparse pipeline (one jit of every layer over the
-telescoped work-list schedule) — and reports:
+telescoped work-list schedule) — once per pruning **pattern**
+(``unstructured`` and ``chunk``, the tile-aligned structured pruner), with
+per-layer tile autotuning on by default, and reports:
 
   * compile time and *steady-state* img/s for each path (warm-up iteration
     first, then timed iterations — jit cost never pollutes throughput),
@@ -17,15 +19,20 @@ telescoped work-list schedule) — and reports:
     compaction — dead steps are not predicated, they are never scheduled)
     and the request-combining factor from the telescope model,
   * per-layer measured densities (scalar map/filter — the paper's Table-1
-    quantities — plus chunk-granular weight density) and the kernel's own
-    skipped-tile fraction from its ``count_macs`` counters,
+    quantities — plus chunk-granular weight density and dead-chunk
+    fraction) and the kernel's own skipped-tile fraction from its
+    ``count_macs`` counters,
+  * the autotuner's winning per-layer tile configs (``tuned_configs``),
   * the Fig. 7 row simulated at the *measured* network densities — the
     reproduction's performance claims and its numerics come from the same
     tensors.
 
-Everything goes to machine-readable ``BENCH_vision.json`` (CI uploads it as
-an artifact and gates regressions via ``benchmarks.check_vision_regression``)
-and to the shared CSV rows of ``benchmarks.run``.
+The top-level record is the **chunk + autotune** configuration (the
+headline the CI gate tracks); every pattern's full sub-record lands under
+``"patterns"``. Everything goes to machine-readable ``BENCH_vision.json``
+(CI uploads it as an artifact and gates regressions via
+``benchmarks.check_vision_regression``) and to the shared CSV rows of
+``benchmarks.run``.
 """
 from __future__ import annotations
 
@@ -40,12 +47,19 @@ import jax.numpy as jnp
 
 from repro.core import simulator as S
 from repro.launch.vision import blob_images
-from repro.vision import (build_vision_model, compile_forward, dense_forward,
-                          layer_table, measured_densities, oracle_check,
+from repro.vision import (autotune_model, build_vision_model,
+                          compile_forward, dense_forward, layer_table,
+                          measured_densities, oracle_check,
                           schedule_summary)
 
 FIG7_SCHEMES = ("One-sided", "SCNN", "SparTen", "SparTen-Iso", "Synchronous",
                 "BARISTA", "Ideal")
+#: committed-baseline input live fraction: sparse enough that whole
+#: activation row blocks go dead, so the schedule's flush-only steps and
+#: grid compaction are exercised (Table-1 map densities leave every
+#: 128-row block live at smoke geometry)
+DEFAULT_MAP_DENSITY = 0.12
+PATTERNS = ("unstructured", "chunk")
 
 
 def time_compiled(fn, reps: int = 10):
@@ -60,26 +74,23 @@ def time_compiled(fn, reps: int = 10):
     return compile_s, (time.time() - t0) / reps
 
 
-def run(csv_rows, bench: str = "VGGNet", image_size: int = 56,
-        batch: int = 2, density: float = None, num_layers: int = None,
-        seed: int = 0, reps: int = 10,
-        out_path: str = "BENCH_vision_new.json"):
+def run_pattern(pattern: str, x, *, bench: str, image_size: int, batch: int,
+                density, num_layers, seed: int, reps: int,
+                autotune: bool) -> dict:
+    """One full dense-vs-sparse comparison for one pruning pattern."""
     model = build_vision_model(bench, density=density, num_layers=num_layers,
-                               seed=seed)
-    md_target = S.BENCHMARKS[bench].map_density
-    rng = np.random.default_rng(seed)
-    x = jnp.asarray(blob_images(rng, batch, image_size, md_target))
-
-    print(f"vision_bench bench={bench} layers={model.num_layers} "
-          f"image={image_size}px batch={batch} "
-          f"filter_density={model.density}")
+                               seed=seed, pattern=pattern)
+    tuned = autotune_model(model, image_size, batch=batch) if autotune \
+        else {}
+    print(f"[{pattern}] layers={model.num_layers} "
+          f"filter_density={model.density} autotune={autotune}")
 
     # correctness + per-layer stats through the instrumented kernel path
     out_ref, stats, rel = oracle_check(model, x)
     assert rel < 1e-5, f"sparse path diverged: rel err {rel}"
 
     dense_fn = jax.jit(lambda v: dense_forward(model, v))
-    sparse_fn = compile_forward(model)
+    sparse_fn = compile_forward(model, use_tuned=autotune)
     dense_compile_s, dense_s = time_compiled(
         lambda: dense_fn(x).block_until_ready(), reps)
     sparse_compile_s, sparse_s = time_compiled(
@@ -87,12 +98,13 @@ def run(csv_rows, bench: str = "VGGNet", image_size: int = 56,
     dense_img_s = batch / dense_s
     sparse_img_s = batch / sparse_s
     speedup = sparse_img_s / dense_img_s
-    # the compiled pipeline must be the numbers the oracle checked
+    # the compiled (tuned) pipeline must be the numbers the oracle checked
     pipeline_bitwise = bool(np.array_equal(np.asarray(sparse_fn(x)),
                                            np.asarray(out_ref)))
     assert pipeline_bitwise, "compiled pipeline diverged from kernel path"
 
     sched = schedule_summary(stats)
+    dead_chunk = float(np.mean([s["dead_chunk_fraction"] for s in stats]))
     print(f"  dense  {dense_img_s:8.2f} img/s steady "
           f"(compile {dense_compile_s:5.2f}s)")
     print(f"  sparse {sparse_img_s:8.2f} img/s steady "
@@ -103,9 +115,14 @@ def run(csv_rows, bench: str = "VGGNet", image_size: int = 56,
           f"{int(sched['flush_only_steps'])} flush-only) vs "
           f"{int(sched['dense_grid_steps'])} dense-grid steps "
           f"[{sched['grid_compaction']:.0%} never scheduled]; "
-          f"request combining {sched['combine_factor']:.1f}x")
+          f"request combining {sched['combine_factor']:.1f}x; "
+          f"mean dead-chunk fraction {dead_chunk:.3f}")
     for row in layer_table(stats):
         print(row)
+    for i, rec in tuned.items():
+        c = rec.config
+        print(f"  tuned layer {i}: bm={c.bm_rows} bn={c.bn} "
+              f"sub_m={c.sub_m} im2col={c.im2col}")
 
     # density feedback loop: measured network densities -> Fig. 7 row
     # (simulate exactly the layers that were measured — a truncated net
@@ -124,9 +141,10 @@ def run(csv_rows, bench: str = "VGGNet", image_size: int = 56,
           + "  ".join(f"{s} {v:.2f}x" for s, v in fig7.items()))
 
     skipped = float(np.mean([s["skipped_tile_frac"] for s in stats]))
-    record = {
-        "bench": bench, "image_size": image_size, "batch": batch,
-        "num_layers": model.num_layers, "filter_density_target": model.density,
+    return {
+        "pattern": pattern, "autotune": autotune,
+        "num_layers": model.num_layers,
+        "filter_density_target": model.density,
         "rel_err_vs_dense": rel,
         "dense_img_per_s": dense_img_s, "sparse_img_per_s": sparse_img_s,
         "sparse_over_dense_speedup": speedup,
@@ -135,6 +153,8 @@ def run(csv_rows, bench: str = "VGGNet", image_size: int = 56,
         "timing_reps": reps,
         "compiled_pipeline_bitwise_equal": pipeline_bitwise,
         "schedule": sched,
+        "mean_dead_chunk_fraction": dead_chunk,
+        "tuned_configs": {str(i): r.as_dict() for i, r in tuned.items()},
         "measured_filter_density": fd, "measured_map_density": md,
         "paper_filter_density": S.BENCHMARKS[bench].filter_density,
         "paper_map_density": S.BENCHMARKS[bench].map_density,
@@ -142,26 +162,67 @@ def run(csv_rows, bench: str = "VGGNet", image_size: int = 56,
         "fig7_at_measured_densities": fig7,
         "layers": stats,
     }
+
+
+def run(csv_rows, bench: str = "VGGNet", image_size: int = 56,
+        batch: int = 2, density: float = None, num_layers: int = None,
+        seed: int = 0, reps: int = 10,
+        out_path: str = "BENCH_vision_new.json",
+        map_density: float = DEFAULT_MAP_DENSITY,
+        patterns=PATTERNS, autotune: bool = True):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(blob_images(rng, batch, image_size, map_density))
+
+    print(f"vision_bench bench={bench} image={image_size}px batch={batch} "
+          f"map_density={map_density} patterns={','.join(patterns)}")
+
+    per_pattern = {}
+    for pattern in patterns:
+        per_pattern[pattern] = run_pattern(
+            pattern, x, bench=bench, image_size=image_size, batch=batch,
+            density=density, num_layers=num_layers, seed=seed, reps=reps,
+            autotune=autotune)
+
+    # headline = the chunk-pattern (tile-aligned + autotuned) run
+    headline = per_pattern.get("chunk", per_pattern[patterns[-1]])
+    record = dict(headline)
+    record.update({
+        "bench": bench, "image_size": image_size, "batch": batch,
+        "seed": seed, "map_density_target": map_density,
+        "patterns": per_pattern,
+    })
     with open(out_path, "w") as f:
         json.dump(record, f, indent=2)
-    print(f"  wrote {out_path}")
+    print(f"  wrote {out_path} (headline pattern: {headline['pattern']})")
 
-    csv_rows.append(("vision", "dense_img_s", round(dense_img_s, 2), ""))
-    csv_rows.append(("vision", "sparse_img_s", round(sparse_img_s, 2), ""))
-    csv_rows.append(("vision", "sparse_over_dense_speedup",
-                     round(speedup, 3), ""))
+    sched = headline["schedule"]
+    csv_rows.append(("vision", "dense_img_s",
+                     round(headline["dense_img_per_s"], 2), ""))
+    csv_rows.append(("vision", "sparse_img_s",
+                     round(headline["sparse_img_per_s"], 2), ""))
+    for pattern, rec in per_pattern.items():
+        csv_rows.append(("vision", f"sparse_over_dense_speedup[{pattern}]",
+                         round(rec["sparse_over_dense_speedup"], 3), ""))
+        csv_rows.append(("vision", f"dead_chunk_fraction[{pattern}]",
+                         round(rec["mean_dead_chunk_fraction"], 3), ""))
     csv_rows.append(("vision", "scheduled_steps",
                      int(sched["scheduled_steps"]),
                      int(sched["dense_grid_steps"])))
-    csv_rows.append(("vision", "rel_err_vs_dense", f"{rel:.1e}", 0))
-    csv_rows.append(("vision", "measured_filter_density", round(fd, 3),
+    csv_rows.append(("vision", "grid_compaction",
+                     round(sched["grid_compaction"], 3), ""))
+    csv_rows.append(("vision", "rel_err_vs_dense",
+                     f"{headline['rel_err_vs_dense']:.1e}", 0))
+    csv_rows.append(("vision", "measured_filter_density",
+                     round(headline["measured_filter_density"], 3),
                      S.BENCHMARKS[bench].filter_density))
-    csv_rows.append(("vision", "measured_map_density", round(md, 3),
+    csv_rows.append(("vision", "measured_map_density",
+                     round(headline["measured_map_density"], 3),
                      S.BENCHMARKS[bench].map_density))
-    csv_rows.append(("vision", "mean_skipped_tile_frac", round(skipped, 3),
-                     ""))
+    csv_rows.append(("vision", "mean_skipped_tile_frac",
+                     round(headline["mean_skipped_tile_frac"], 3), ""))
     csv_rows.append(("vision", "fig7_barista_at_measured",
-                     round(fig7["BARISTA"], 2), ""))
+                     round(headline["fig7_at_measured_densities"]["BARISTA"],
+                           2), ""))
     return csv_rows
 
 
@@ -173,6 +234,14 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--layers", type=int, default=None)
     ap.add_argument("--density", type=float, default=None)
+    ap.add_argument("--map-density", type=float, default=DEFAULT_MAP_DENSITY,
+                    help="input live-pixel fraction for the blob images "
+                         "(the committed baseline uses the default)")
+    ap.add_argument("--pattern", default=None,
+                    choices=["unstructured", "chunk"],
+                    help="run a single pattern (default: both)")
+    ap.add_argument("--no-autotune", action="store_true",
+                    help="skip per-layer tile autotuning")
     ap.add_argument("--reps", type=int, default=10,
                     help="steady-state timing iterations (after warm-up)")
     ap.add_argument("--smoke", action="store_true",
@@ -185,9 +254,11 @@ def main() -> None:
     size = args.image_size if args.image_size is not None else \
         (24 if args.smoke else 56)
     batch = 1 if args.smoke else args.batch
+    patterns = (args.pattern,) if args.pattern else PATTERNS
     run([], bench=args.bench, image_size=size, batch=batch,
         density=args.density, num_layers=args.layers, reps=args.reps,
-        out_path=args.out)
+        out_path=args.out, map_density=args.map_density, patterns=patterns,
+        autotune=not args.no_autotune)
 
 
 if __name__ == "__main__":

@@ -133,8 +133,10 @@ def sparse_matmul_tile_stats(x: jnp.ndarray, indices: jnp.ndarray, *,
             "dense_tile_macs": dense}
 
 
-def conv_schedule_stats(patches: jnp.ndarray, indices: jnp.ndarray, *,
-                        bk: int, bm_rows: int = 128
+def conv_schedule_stats(patches: Optional[jnp.ndarray],
+                        indices: jnp.ndarray, *, bk: int, bm_rows: int = 128,
+                        occ: Optional[jnp.ndarray] = None,
+                        mb: Optional[int] = None
                         ) -> Dict[str, jnp.ndarray]:
     """Pure-jnp model of the telescoped work-list schedule (no kernel).
 
@@ -148,11 +150,27 @@ def conv_schedule_stats(patches: jnp.ndarray, indices: jnp.ndarray, *,
     :func:`repro.kernels.bitmask_spmm.build_worklist`'s actual step
     counts, so benches can report schedule compaction without building
     work lists in the hot loop.
+
+    Instead of ``patches`` the caller may pass the block-occupancy map
+    directly (``occ`` bool [mb, kb]) or — for the *static* pack-time
+    schedule, where every activation block counts as live — just ``mb``.
+    This is what the autotuner scores candidate tile configs with: the
+    occupancy stays O(mb * kb) per candidate instead of re-materializing
+    an O(M * K) patch matrix per (bm, bn) point.
     """
-    M, K = patches.shape
-    mb, kb = M // bm_rows, K // bk
+    if patches is not None:
+        M, K = patches.shape
+        mb, kb = M // bm_rows, K // bk
+        occ = (patches.reshape(mb, bm_rows, kb, bk) != 0).any(axis=(1, 3))
+    elif occ is not None:
+        occ = jnp.asarray(occ, bool)
+        mb, kb = occ.shape
+    else:
+        if mb is None:
+            raise ValueError("need patches, occ, or mb")
+        kb = int(jnp.max(indices) + 1) if indices.size else 1
+        occ = jnp.ones((mb, max(kb, 1)), bool)
     nb, max_nz = indices.shape
-    occ = (patches.reshape(mb, bm_rows, kb, bk) != 0).any(axis=(1, 3))
     valid = indices >= 0
     safe = jnp.where(valid, indices, 0)
     live = valid[:, None, :] & occ[:, safe].transpose(1, 0, 2)  # [nb,mb,nz]

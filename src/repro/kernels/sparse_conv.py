@@ -325,6 +325,57 @@ def _worklist_spmm_xla(patches, vals, wl_n, wl_m, wl_k, wl_j, *, bk, bn,
     return tuple(res)
 
 
+@functools.partial(jax.jit, static_argnames=("bn", "bm_rows", "sub_m", "nb",
+                                             "mb", "fuse_relu",
+                                             "emit_occupancy"))
+def _worklist_spmm_xla_slabs(slabs, vals, wl_slot, wl_m, wl_n, wl_j, *, bn,
+                             bm_rows, sub_m, nb, mb, fuse_relu,
+                             emit_occupancy):
+    """The XLA work-list walker over *lazily extracted* chunk slabs.
+
+    ``slabs [L, M, bk]`` holds only the K-chunks some scheduled step
+    touches (:func:`extract_tap_slabs`); ``wl_slot`` maps each live step's
+    ``wl.k`` to its slab row.  From the gather on, this is op-for-op
+    :func:`_worklist_spmm_xla` — same batched GEMM, same segment-sum in
+    schedule order — so outputs stay bit-identical to the full-patch
+    executors while the dead 1 - density of the im2col blow-up is never
+    materialized (the lazy analogue of §3.2: dead *bytes*, like dead
+    steps, simply never get scheduled).
+    """
+    L, M, bk = slabs.shape
+    x4 = slabs.reshape(L, mb, bm_rows, bk)
+    xg = x4[wl_slot, wl_m]                        # [T, bm, bk]
+    wg = vals[wl_n, wl_j]                         # [T, bk, bn]
+    prod = jax.lax.dot_general(
+        xg.astype(jnp.float32), wg.astype(jnp.float32),
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)       # [T, bm, bn]
+    pair = wl_n * mb + wl_m
+    acc = jax.ops.segment_sum(prod, pair, num_segments=nb * mb)
+    if fuse_relu:
+        acc = jnp.maximum(acc, 0.0)
+    out = acc.reshape(nb, mb, bm_rows, bn).transpose(1, 2, 0, 3) \
+             .reshape(M, nb * bn).astype(slabs.dtype)
+    res = [out]
+    if emit_occupancy:
+        res.append((out.reshape(M // sub_m, sub_m, nb, bn) != 0)
+                   .any(axis=(1, 3)).astype(jnp.int32))
+    return tuple(res)
+
+
+def resolve_executor(executor: Optional[str]) -> str:
+    """Work-list walker for this backend: pallas on TPU, xla on CPU (its
+    scatter-add runs in schedule order — bit-identical to the grid), the
+    pallas interpreter anywhere else (GPU scatter-adds are atomic and
+    would only promise rtol agreement, not bits)."""
+    if executor is not None:
+        return executor
+    from repro.kernels.ops import on_tpu
+    if on_tpu():
+        return "pallas"
+    return "xla" if jax.default_backend() == "cpu" else "pallas"
+
+
 def sparse_conv_spmm_wl(patches: jnp.ndarray, vals: jnp.ndarray,
                         wl: ConvWorkList, *, bk: int = LANE, bn: int = LANE,
                         bm_rows: int = DEFAULT_BM,
@@ -348,12 +399,8 @@ def sparse_conv_spmm_wl(patches: jnp.ndarray, vals: jnp.ndarray,
     any other backend, because a GPU scatter-add is atomic and would only
     promise rtol-level agreement, not bits.
     """
-    from repro.kernels.ops import _resolve_interpret, on_tpu
-    if executor is None:
-        if on_tpu():
-            executor = "pallas"
-        else:
-            executor = "xla" if jax.default_backend() == "cpu" else "pallas"
+    from repro.kernels.ops import _resolve_interpret
+    executor = resolve_executor(executor)
     sub_m = bm_rows if sub_m is None else sub_m
     M = patches.shape[0]
     mb = M // bm_rows
@@ -373,36 +420,11 @@ def sparse_conv_spmm_wl(patches: jnp.ndarray, vals: jnp.ndarray,
         interpret=_resolve_interpret(interpret))
 
 
-def extract_patches(x: jnp.ndarray, kh: int, kw: int, stride: Stride,
-                    padding: Padding, *, strategy: str = "auto"
-                    ) -> Tuple[jnp.ndarray, Tuple[int, int]]:
-    """im2col rows for the implicit GEMM: [B, OH*OW, Cin*kh*kw] (+ (OH, OW)).
-
-    Feature order is channel-major (cin, kh, kw), matching the
-    ``w.transpose(2, 0, 1, 3)`` matrixization of the packing path. All
-    strategies are pure jax ops, so patch extraction fuses into whatever
-    jit the caller runs under — the K-fold patch blow-up never crosses a
-    host boundary:
-
-    * ``"patches"`` — ``jax.lax.conv_general_dilated_patches``.
-    * ``"slices"``  — kh*kw strided slices of the padded map, stacked;
-      XLA:CPU fuses this ~2x better than the patches primitive.
-    * ``"auto"``    — patches on TPU, slices elsewhere (resolved at trace
-      time, like the interpret/executor knobs).
-    """
-    if strategy == "auto":
-        from repro.kernels.ops import on_tpu
-        strategy = "patches" if on_tpu() else "slices"
+def _padded_input(x: jnp.ndarray, kh: int, kw: int, stride: Stride,
+                  padding: Padding) -> Tuple[jnp.ndarray, int, int, int, int]:
+    """Zero-pad ``x`` for the conv window; returns (xp, oh, ow, sh, sw)."""
     sh, sw = normalize_stride(stride)
     pad = normalize_padding(padding)
-    if strategy == "patches":
-        patches = jax.lax.conv_general_dilated_patches(
-            x, (kh, kw), (sh, sw), pad,
-            dimension_numbers=("NHWC", "HWIO", "NHWC"))
-        b, oh, ow, f = patches.shape
-        return patches.reshape(b, oh * ow, f), (oh, ow)
-    if strategy != "slices":
-        raise ValueError(f"unknown im2col strategy {strategy!r}")
     b, H, W, cin = x.shape
     if isinstance(pad, str):
         pads = jax.lax.padtype_to_pads((H, W), (kh, kw), (sh, sw), pad)
@@ -412,12 +434,101 @@ def extract_patches(x: jnp.ndarray, kh: int, kw: int, stride: Stride,
     H2, W2 = xp.shape[1], xp.shape[2]
     oh = (H2 - kh) // sh + 1
     ow = (W2 - kw) // sw + 1
+    return xp, oh, ow, sh, sw
+
+
+def conv_out_size(H: int, W: int, kh: int, kw: int, stride: Stride,
+                  padding: Padding) -> Tuple[int, int]:
+    """(OH, OW) for the layer geometry — host arithmetic, no arrays (the
+    autotuner and the lazy path need the patch-row count before any
+    extraction happens)."""
+    sh, sw = normalize_stride(stride)
+    pad = normalize_padding(padding)
+    if isinstance(pad, str):
+        pads = jax.lax.padtype_to_pads((H, W), (kh, kw), (sh, sw), pad)
+    else:
+        pads = pad
+    H2 = H + pads[0][0] + pads[0][1]
+    W2 = W + pads[1][0] + pads[1][1]
+    return (H2 - kh) // sh + 1, (W2 - kw) // sw + 1
+
+
+def extract_patches(x: jnp.ndarray, kh: int, kw: int, stride: Stride,
+                    padding: Padding, *, strategy: str = "auto"
+                    ) -> Tuple[jnp.ndarray, Tuple[int, int]]:
+    """im2col rows for the implicit GEMM: [B, OH*OW, Cin*kh*kw] (+ (OH, OW)).
+
+    All strategies are pure jax ops, so patch extraction fuses into
+    whatever jit the caller runs under — the K-fold patch blow-up never
+    crosses a host boundary:
+
+    * ``"patches"`` — ``jax.lax.conv_general_dilated_patches``;
+      channel-major feature order (cin, kh, kw), matching the
+      ``w.transpose(2, 0, 1, 3)`` matrixization of the packing path.
+    * ``"slices"``  — kh*kw strided slices of the padded map, stacked and
+      transposed to the same channel-major order; XLA:CPU fuses this ~2x
+      better than the patches primitive.
+    * ``"taps"``    — the same slices *without* the transpose: tap-major
+      feature order (kh, kw, cin), matching ``layout="tap"`` packing
+      (``w.reshape(kh*kw*cin, cout)``) — cheaper still, since the
+      channel-major shuffle never materializes.
+    * ``"auto"``    — patches on TPU, slices elsewhere (resolved at trace
+      time, like the interpret/executor knobs).
+    """
+    if strategy == "auto":
+        from repro.kernels.ops import on_tpu
+        strategy = "patches" if on_tpu() else "slices"
+    if strategy == "patches":
+        sh, sw = normalize_stride(stride)
+        pad = normalize_padding(padding)
+        patches = jax.lax.conv_general_dilated_patches(
+            x, (kh, kw), (sh, sw), pad,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        b, oh, ow, f = patches.shape
+        return patches.reshape(b, oh * ow, f), (oh, ow)
+    if strategy not in ("slices", "taps"):
+        raise ValueError(f"unknown im2col strategy {strategy!r}")
+    b, H, W, cin = x.shape
+    xp, oh, ow, sh, sw = _padded_input(x, kh, kw, stride, padding)
     parts = [xp[:, dy:dy + (oh - 1) * sh + 1:sh,
                 dx:dx + (ow - 1) * sw + 1:sw, :]
              for dy in range(kh) for dx in range(kw)]
     p = jnp.stack(parts, axis=3)                  # [b, oh, ow, kh*kw, cin]
-    p = p.transpose(0, 1, 2, 4, 3)                # channel-major features
+    if strategy == "slices":
+        p = p.transpose(0, 1, 2, 4, 3)            # channel-major features
     return p.reshape(b, oh * ow, cin * kh * kw), (oh, ow)
+
+
+def extract_tap_slabs(x: jnp.ndarray, kh: int, kw: int, stride: Stride,
+                      padding: Padding, *, chunks: np.ndarray, bk: int,
+                      m_pad: int) -> jnp.ndarray:
+    """Lazy im2col: materialize only the *live* K-chunks of the tap-major
+    patch matrix.
+
+    In ``layout="tap"`` a K-chunk is one ``(tap, channel-group)`` pair, so
+    its ``[M, bk]`` column slab is a single shifted strided slice of the
+    padded input — no stack, no transpose, no dead-chunk bytes.  Returns
+    ``[len(chunks), B * m_pad, bk]`` with each image's rows zero-padded to
+    ``m_pad``; slab values are bitwise-identical to the corresponding
+    columns of :func:`extract_patches` (any strategy), which is what keeps
+    the lazy executor bit-equal to the full-patch ones.  ``chunks`` is a
+    static (host) list — it comes from the pack-time work list.
+    """
+    b, H, W, cin = x.shape
+    assert cin % bk == 0, (cin, bk)
+    cpt = cin // bk                               # chunks per tap
+    xp, oh, ow, sh, sw = _padded_input(x, kh, kw, stride, padding)
+    m_img = oh * ow
+    slabs = []
+    for c in [int(c) for c in np.asarray(chunks)]:
+        tap, sub = divmod(c, cpt)
+        dy, dx = divmod(tap, kw)
+        s = xp[:, dy:dy + (oh - 1) * sh + 1:sh,
+               dx:dx + (ow - 1) * sw + 1:sw, sub * bk:(sub + 1) * bk]
+        slabs.append(s.reshape(b, m_img, bk))
+    p = jnp.stack(slabs, axis=0)                  # [L, b, m_img, bk]
+    p = jnp.pad(p, ((0, 0), (0, 0), (0, m_pad - m_img), (0, 0)))
+    return p.reshape(len(slabs), b * m_pad, bk)
 
 
 def sparse_conv2d_nhwc(x: jnp.ndarray, w: bm.BlockSparseMatrix, kh: int,
@@ -431,6 +542,7 @@ def sparse_conv2d_nhwc(x: jnp.ndarray, w: bm.BlockSparseMatrix, kh: int,
                        schedule: str = "compact",
                        executor: Optional[str] = None,
                        im2col: str = "auto",
+                       layout: str = "channel",
                        compact_activations: bool = False,
                        report_schedule: bool = False,
                        wl_cache: Optional[dict] = None):
@@ -451,6 +563,16 @@ def sparse_conv2d_nhwc(x: jnp.ndarray, w: bm.BlockSparseMatrix, kh: int,
     ``im2col`` select the work-list walker and the patch-extraction
     strategy (both resolve per backend when ``None``/default).
 
+    ``layout`` must match how ``w`` was matrixized
+    (:func:`repro.sparsity.conv.pack_conv_filters`): ``"channel"`` pairs
+    with the ``patches``/``slices`` strategies, ``"tap"`` with ``taps``
+    or ``lazy``.  ``im2col="lazy"`` (tap layout, compact schedule, XLA
+    executor) materializes only the live K-chunk slabs named by the
+    pack-time work list instead of the full im2col matrix; combinations
+    that need the full patch matrix (dense grid, activation compaction,
+    the Pallas walker) silently demote ``lazy`` to ``taps`` — slab
+    values equal patch values bitwise, so the result is unchanged.
+
     Returns ``(out, aux)`` where ``aux`` carries the optional
     ``occupancy`` (int32 [B, ceil(M_img/sub_m), n_blocks], padded rows
     zero) and ``mac_counts`` outputs, the patch-matrix metadata the stats
@@ -464,17 +586,32 @@ def sparse_conv2d_nhwc(x: jnp.ndarray, w: bm.BlockSparseMatrix, kh: int,
         # the promised aux["schedule"] by reporting the compact schedule
         schedule = "dense"
         report_schedule = True
+    if layout == "tap":
+        if im2col in ("auto", "patches", "slices"):
+            im2col = "taps"
+    elif im2col in ("taps", "lazy"):
+        raise ValueError(f"im2col={im2col!r} needs layout='tap' packing")
+    lazy = im2col == "lazy"
+    if lazy and (schedule != "compact" or compact_activations
+                 or resolve_executor(executor) != "xla"):
+        im2col, lazy = "taps", False
     b = x.shape[0]
-    patches, (oh, ow) = extract_patches(x, kh, kw, stride, padding,
-                                        strategy=im2col)
+    if lazy:
+        oh, ow = conv_out_size(x.shape[1], x.shape[2], kh, kw, stride,
+                               padding)
+        flat = None
+    else:
+        patches, (oh, ow) = extract_patches(x, kh, kw, stride, padding,
+                                            strategy=im2col)
     m_img = oh * ow
     k_total = w.shape[0]
     pad_rows = (-m_img) % bm_rows
-    pad_k = k_total - patches.shape[-1]
-    assert pad_k >= 0, (patches.shape, k_total)
-    patches = jnp.pad(patches, ((0, 0), (0, pad_rows), (0, pad_k)))
     m_pad = m_img + pad_rows
-    flat = patches.reshape(b * m_pad, k_total)
+    if not lazy:
+        pad_k = k_total - patches.shape[-1]
+        assert pad_k >= 0, (patches.shape, k_total)
+        patches = jnp.pad(patches, ((0, 0), (0, pad_rows), (0, pad_k)))
+        flat = patches.reshape(b * m_pad, k_total)
     mb = (b * m_pad) // bm_rows
     aux = {"m_img": m_img, "k_total": k_total, "oh": oh, "ow": ow}
 
@@ -523,7 +660,27 @@ def sparse_conv2d_nhwc(x: jnp.ndarray, w: bm.BlockSparseMatrix, kh: int,
             else:
                 aux["schedule"]["static_scheduled_steps"] = wl.num_steps
 
-    if schedule == "compact":
+    if lazy:
+        live = wl.k >= 0
+        union = np.unique(wl.k[live])
+        if union.size == 0:
+            M = b * m_pad
+            out0 = jnp.zeros((M, w.n_blocks * w.bn), x.dtype)
+            res = (out0,) + ((jnp.zeros((M // sub_m, w.n_blocks),
+                                        jnp.int32),) if emit_occupancy
+                             else ())
+        else:
+            slot_of = np.zeros(k_total // w.bk, np.int32)
+            slot_of[union] = np.arange(union.size, dtype=np.int32)
+            slabs = extract_tap_slabs(x, kh, kw, stride, padding,
+                                      chunks=union, bk=w.bk, m_pad=m_pad)
+            res = _worklist_spmm_xla_slabs(
+                slabs, w.vals, jnp.asarray(slot_of[wl.k[live]]),
+                jnp.asarray(wl.m[live]), jnp.asarray(wl.n[live]),
+                jnp.asarray(wl.j[live]), bn=w.bn, bm_rows=bm_rows,
+                sub_m=sub_m, nb=wl.nb, mb=mb, fuse_relu=fuse_relu,
+                emit_occupancy=emit_occupancy)
+    elif schedule == "compact":
         res = sparse_conv_spmm_wl(
             flat, w.vals, wl, bk=w.bk, bn=w.bn, bm_rows=bm_rows, sub_m=sub_m,
             mb_per_img=m_pad // bm_rows, fuse_relu=fuse_relu,

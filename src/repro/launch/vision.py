@@ -18,8 +18,9 @@ import argparse
 import jax.numpy as jnp
 import numpy as np
 
-from repro.vision import (ImageRequest, VisionEngine, build_vision_model,
-                          layer_table, measured_densities, oracle_check)
+from repro.vision import (ImageRequest, VisionEngine, autotune_model,
+                          build_vision_model, layer_table,
+                          measured_densities, oracle_check)
 
 
 def blob_images(rng: np.random.Generator, n: int, size: int,
@@ -57,6 +58,13 @@ def main() -> None:
     ap.add_argument("--image-size", type=int, default=None)
     ap.add_argument("--density", type=float, default=None,
                     help="filter density (default: paper Table 1)")
+    ap.add_argument("--pattern", default="unstructured",
+                    choices=["unstructured", "chunk"],
+                    help="pruning pattern: chunk = tile-aligned structured "
+                         "pruning (real dead chunks for the schedule)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="per-layer tile autotuning (deterministic cost "
+                         "model); the engine bakes the tuned schedules")
     ap.add_argument("--map-density", type=float, default=None,
                     help="input live-pixel fraction (default: Table 1)")
     ap.add_argument("--requests", type=int, default=4)
@@ -69,7 +77,14 @@ def main() -> None:
     size = args.image_size if args.image_size is not None else \
         (16 if args.smoke else 32)
     model = build_vision_model(args.bench, density=args.density,
-                               num_layers=layers, seed=args.seed)
+                               num_layers=layers, seed=args.seed,
+                               pattern=args.pattern)
+    if args.autotune:
+        recs = autotune_model(model, size)
+        for i, r in recs.items():
+            c = r.config
+            print(f"autotune layer {i}: bm={c.bm_rows} bn={c.bn} "
+                  f"sub_m={c.sub_m} im2col={c.im2col}")
     from repro.core import simulator as S
     md = args.map_density if args.map_density is not None else \
         S.BENCHMARKS[args.bench].map_density
@@ -89,7 +104,7 @@ def main() -> None:
     fd, md_meas = measured_densities(stats)
     print(f"measured network densities: filters {fd:.3f}, maps {md_meas:.3f}")
 
-    eng = VisionEngine(model, num_slots=args.slots)
+    eng = VisionEngine(model, num_slots=args.slots, use_tuned=args.autotune)
     reqs = [ImageRequest(rid=i, image=imgs[i], arrival=i * args.stagger)
             for i in range(args.requests)]
     produced = eng.run(reqs)

@@ -6,42 +6,73 @@ tensors; the paper's accelerator linearizes them through the same matrix
 interface (im2col), so the conv path adds exactly two conv-specific steps
 and reuses everything else:
 
-* **matrixization** — ``w.transpose(2, 0, 1, 3).reshape(Cin*kh*kw, Cout)``,
-  channel-major to match ``conv_general_dilated_patches`` feature order,
-  then chunk-pad both axes for the BlockSpec grid.
+* **matrixization** — two layouts. ``layout="channel"`` (the unstructured
+  default) is ``w.transpose(2, 0, 1, 3).reshape(Cin*kh*kw, Cout)``,
+  matching ``conv_general_dilated_patches`` feature order.
+  ``layout="tap"`` (the chunk-aligned pattern) is the plain
+  ``w.reshape(kh*kw*Cin, Cout)`` — K index = tap * Cin + channel — so a
+  K-chunk lies inside one filter tap and a live chunk maps to one
+  shifted-slab slice of the input (the lazy im2col path). Both are
+  chunk-padded for the BlockSpec grid.
 * **chain folding** — greedy-balancing layer *i*'s output channels permutes
   the feature map's channel axis; the repair is folding the inverse into
   layer *i+1*'s **input-channel** axis (axis 2 of the 4-D filter), which is
   legal across ReLU and max-pool because both act per-channel. The last
   layer keeps identity so the network's output channels are unpermuted.
+  The chunk pattern folds *bank-granular* permutations through the same
+  path (whole ``bn`` blocks, so tile alignment survives the fold).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import balance, bitmask as bm
 from repro.core.sparse import prune_by_magnitude
+from repro.sparsity import structured
 
 
-def matrixize_filters(w: np.ndarray, chunk: int = bm.CHUNK) -> np.ndarray:
-    """[kh, kw, Cin, Cout] -> chunk-padded [K, N] (K = Cin*kh*kw, N = Cout),
-    channel-major feature order (the im2col patch layout)."""
+def matrixize_filters(w: np.ndarray, chunk: int = bm.CHUNK,
+                      layout: str = "channel", *, bk: Optional[int] = None,
+                      bn: Optional[int] = None) -> np.ndarray:
+    """[kh, kw, Cin, Cout] -> block-padded [K, N] (K = Cin*kh*kw, N = Cout).
+
+    ``layout="channel"`` uses channel-major feature order (the
+    ``conv_general_dilated_patches`` layout); ``layout="tap"`` keeps the
+    tensor's natural tap-major order (K = tap * Cin + c). K pads to
+    ``bk`` blocks and N to ``bn`` blocks (both default to ``chunk``).
+    """
     kh, kw, cin, cout = w.shape
-    w_mat = np.asarray(w).transpose(2, 0, 1, 3).reshape(kh * kw * cin, cout)
-    pad_k = (-w_mat.shape[0]) % chunk
-    pad_n = (-cout) % chunk
+    bk = chunk if bk is None else bk
+    bn = chunk if bn is None else bn
+    if layout == "channel":
+        w_mat = np.asarray(w).transpose(2, 0, 1, 3).reshape(
+            kh * kw * cin, cout)
+    elif layout == "tap":
+        if cin % bk != 0:
+            raise ValueError(f"tap layout needs cin % bk == 0, got "
+                             f"cin={cin} bk={bk}")
+        w_mat = np.asarray(w).reshape(kh * kw * cin, cout)
+    else:
+        raise ValueError(f"unknown layout {layout!r}")
+    pad_k = (-w_mat.shape[0]) % bk
+    pad_n = (-cout) % bn
     return np.pad(w_mat, ((0, pad_k), (0, pad_n)))
 
 
 def pack_conv_filters(w: np.ndarray, chunk: int = bm.CHUNK,
-                      pad_to: Optional[int] = None) -> bm.BlockSparseMatrix:
+                      pad_to: Optional[int] = None, *,
+                      layout: str = "channel", bk: Optional[int] = None,
+                      bn: Optional[int] = None) -> bm.BlockSparseMatrix:
     """Pack (already pruned) conv filters into the chunk-block-sparse layout
     the implicit-GEMM kernel consumes."""
-    return bm.block_sparsify(matrixize_filters(w, chunk), bk=chunk, bn=chunk,
-                             pad_to=pad_to)
+    bk = chunk if bk is None else bk
+    bn = chunk if bn is None else bn
+    return bm.block_sparsify(
+        matrixize_filters(w, chunk, layout, bk=bk, bn=bn), bk=bk, bn=bn,
+        pad_to=pad_to)
 
 
 @dataclasses.dataclass
@@ -53,13 +84,26 @@ class PackedConv:
     (``packed.indices_np``, set at pack time), so schedule builders never
     read back from device; ``wl_cache`` memoizes the static (weight-side)
     telescoped work lists per row-block count — the offline part of the
-    §3.2 compaction, computed once per (layer, batch geometry)."""
+    §3.2 compaction, computed once per (layer, batch geometry).
+
+    ``layout``/``pattern`` record how the filters were matrixized and
+    pruned (``"channel"``+``"unstructured"`` is the legacy path); ``tuned``
+    holds the autotuner's winning per-layer tile config
+    (:class:`repro.kernels.autotune.TuneRecord`) when
+    :func:`repro.kernels.autotune.autotune_conv` has run, and
+    ``compile_forward`` bakes it into the whole-net jit."""
 
     w_dense: np.ndarray           # [kh, kw, Cin, Cout] pruned, chain-folded
     packed: bm.BlockSparseMatrix
     perm: np.ndarray              # balance permutation of the Cout axis
     wl_cache: dict = dataclasses.field(default_factory=dict, repr=False,
                                        compare=False)
+    layout: str = "channel"
+    pattern: str = "unstructured"
+    prune_info: Optional[structured.ChunkPruneInfo] = \
+        dataclasses.field(default=None, repr=False, compare=False)
+    tuned: Optional[Any] = dataclasses.field(default=None, repr=False,
+                                             compare=False)
 
     @property
     def kh(self) -> int:
@@ -81,34 +125,81 @@ class PackedConv:
         return float((self.w_dense != 0).mean())
 
     def chunk_density(self) -> float:
+        """Live fraction of the packed chunk map the work list is built
+        from — ``packed`` is re-read here (not a pack-time snapshot) so a
+        re-pack (e.g. the autotuner changing ``bn``) is reflected.  A 1.0
+        reading at 0.33 scalar density is a *pattern artifact*, not a
+        measurement bug: unstructured pruning leaves a survivor in every
+        (bk, bn) tile (``tests/test_structured_pruning.py`` pins both the
+        artifact and this map's consistency with ``w_dense``)."""
         return self.packed.density()
+
+    def dead_chunk_fraction(self) -> float:
+        return 1.0 - self.chunk_density()
 
 
 def build_sparse_chain(weights: Sequence[np.ndarray], *, density: float = 1.0,
                        num_shards: int = 16, chunk: int = bm.CHUNK,
-                       balance_filters: bool = True) -> List[PackedConv]:
-    """Offline pipeline for a sequential conv chain: prune -> greedy-balance
-    -> fold into the next layer -> matrixize -> pack.
+                       balance_filters: bool = True,
+                       pattern: str = "unstructured",
+                       micro_ranges: int = 3) -> List[PackedConv]:
+    """Offline pipeline for a sequential conv chain: prune -> balance ->
+    fold into the next layer -> matrixize -> pack.
 
     ``weights[i]`` is [kh, kw, Cin_i, Cout_i] with Cout_i == Cin_{i+1}.
-    Balancing alternates direction per layer (the paper's two fixed
-    permutations); the final layer is left unpermuted.
+
+    ``pattern="unstructured"`` (default) is the legacy path: per-filter
+    magnitude pruning, per-channel greedy balance, channel-major packing.
+    ``pattern="chunk"`` prunes at (bk, bn) tile granularity in the
+    tap-major layout (:mod:`repro.sparsity.structured`) so the packed
+    chunk maps have real dead chunks; balancing then moves whole banks
+    (per-channel balance would scramble tile columns), and layers too
+    narrow for tap chunks (the 3-channel stem) fall back to unstructured
+    pruning in the channel layout — per-layer scalar density stays on
+    target either way.  Balancing alternates direction per layer (the
+    paper's two fixed permutations); the final layer is left unpermuted.
     """
+    if pattern not in ("unstructured", "chunk"):
+        raise ValueError(f"unknown pattern {pattern!r}")
     ws = [np.asarray(w, np.float32) for w in weights]
     for a, b_ in zip(ws, ws[1:]):
         assert a.shape[3] == b_.shape[2], (a.shape, b_.shape)
     out: List[PackedConv] = []
     for i, w in enumerate(ws):
-        if density < 1.0:
-            w = w * prune_by_magnitude(w, density, axis_out=-1)
         last = i == len(ws) - 1
+        layout, bk, bn = ("channel", chunk, chunk)
+        info = None
+        if pattern == "chunk":
+            layout, bk, bn = structured.choose_chunk_layout(w.shape, chunk)
+        if density < 1.0:
+            if pattern == "chunk" and layout == "tap":
+                w, info = structured.prune_chunk_aligned(
+                    w, density, bk=bk, bn=bn, micro_ranges=micro_ranges)
+            else:
+                w = w * prune_by_magnitude(w, density, axis_out=-1)
         if balance_filters and not last:
-            dens = balance.filter_density(w, axis_out=-1)
-            perm = balance.greedy_balance(dens, num_shards, direction=i)
+            if pattern == "chunk":
+                if info is not None:
+                    perm = structured.bank_balance_permutation(
+                        info.keep, bn, w.shape[3], direction=i)
+                    if w.shape[3] % bn == 0:
+                        info = dataclasses.replace(
+                            info, keep=info.keep[:, perm[::bn] // bn],
+                            quota=info.quota[perm[::bn] // bn])
+                else:
+                    perm = np.arange(w.shape[3])
+            else:
+                dens = balance.filter_density(w, axis_out=-1)
+                perm = balance.greedy_balance(dens, num_shards, direction=i)
             w = w[..., perm]
             # repair: the next layer reads its input channels in perm order
             ws[i + 1] = balance.fold_permutation(ws[i + 1], perm, axis_in=2)
         else:
             perm = np.arange(w.shape[3])
-        out.append(PackedConv(w, pack_conv_filters(w, chunk), perm))
+        packed = pack_conv_filters(w, chunk, layout=layout, bk=bk, bn=bn)
+        out.append(PackedConv(w, packed, perm, layout=layout,
+                              pattern=pattern if layout == "tap"
+                              else ("unstructured" if pattern == "chunk"
+                                    else pattern),
+                              prune_info=info))
     return out

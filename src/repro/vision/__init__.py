@@ -5,6 +5,8 @@ simulator's Table-1 benchmarks) and runs them through the implicit-GEMM
 two-sided sparse conv kernel (:mod:`repro.kernels.sparse_conv`);
 ``engine.py`` batches images through them with round-robin slot admission.
 """
+from repro.kernels.autotune import (ConvTileConfig, TuneRecord, autotune_conv,
+                                    autotune_model)
 from repro.vision.engine import ImageRequest, VisionEngine, VisionStats
 from repro.vision.model import (SUPPORTED_ARCHS, VisionModel,
                                 build_vision_model, compile_forward,
@@ -15,4 +17,5 @@ from repro.vision.model import (SUPPORTED_ARCHS, VisionModel,
 __all__ = ["ImageRequest", "VisionEngine", "VisionStats", "SUPPORTED_ARCHS",
            "VisionModel", "build_vision_model", "compile_forward",
            "dense_forward", "forward", "layer_table", "measured_densities",
-           "oracle_check", "schedule_summary"]
+           "oracle_check", "schedule_summary", "ConvTileConfig",
+           "TuneRecord", "autotune_conv", "autotune_model"]

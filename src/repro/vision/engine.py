@@ -72,7 +72,7 @@ class VisionEngine:
                  sub_m: int = 8, two_sided: bool = True,
                  interpret: Optional[bool] = None,
                  schedule: str = "compact", executor: Optional[str] = None,
-                 im2col: str = "auto"):
+                 im2col: str = "auto", use_tuned: bool = False):
         self.model = model
         self.num_slots = num_slots
         self.sub_m = sub_m
@@ -80,12 +80,14 @@ class VisionEngine:
         self.interpret = interpret
         # one jit of the whole net over the telescoped work-list schedule;
         # the engine hands it a fresh batch every step, so the input
-        # buffer is donated (where the backend can use donations)
+        # buffer is donated (where the backend can use donations).
+        # use_tuned bakes each layer's cached autotune config into the jit
+        # (run repro.kernels.autotune.autotune_model before constructing).
         from repro.kernels.ops import on_tpu
         self._fwd = VM.compile_forward(
             model, sub_m=sub_m, two_sided=two_sided, schedule=schedule,
             executor=executor, im2col=im2col, interpret=interpret,
-            donate=on_tpu())
+            donate=on_tpu(), use_tuned=use_tuned)
         self._warm_shapes: set = set()
         self.slot_req = np.full(num_slots, -1, np.int64)
         self._slot_img: List[Optional[np.ndarray]] = [None] * num_slots

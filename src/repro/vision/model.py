@@ -76,12 +76,16 @@ def build_vision_model(name: str = "VGGNet", *,
                        density: Optional[float] = None, seed: int = 0,
                        num_layers: Optional[int] = None,
                        balance_filters: bool = True,
-                       num_shards: int = 16) -> VisionModel:
+                       num_shards: int = 16,
+                       pattern: str = "unstructured") -> VisionModel:
     """Synthetic pruned network for one simulator benchmark.
 
     ``density`` defaults to the paper's Table-1 filter density for the
     benchmark; ``num_layers`` truncates the chain (smoke nets). Weights are
-    He-scaled so activations stay O(1) through deep chains.
+    He-scaled so activations stay O(1) through deep chains. ``pattern``
+    selects the pruner (:func:`repro.sparsity.conv.build_sparse_chain`):
+    ``"chunk"`` prunes at tile granularity in the tap-major layout, so the
+    packed chunk maps carry real dead chunks for the schedule to skip.
     """
     if name not in ARCH_STEM:
         raise ValueError(f"{name} does not linearize into a conv chain; "
@@ -103,7 +107,8 @@ def build_vision_model(name: str = "VGGNet", *,
                         * np.sqrt(2.0 / fan_in)).astype(np.float32))
     chain = build_sparse_chain(weights, density=density,
                                num_shards=num_shards,
-                               balance_filters=balance_filters)
+                               balance_filters=balance_filters,
+                               pattern=pattern)
     stem_size, stem_stride, stem_pad = ARCH_STEM[name]
     layers: List[VisionLayer] = []
     for i, (spec, conv) in enumerate(zip(specs, chain)):
@@ -126,16 +131,27 @@ def max_pool(x: jnp.ndarray, window: int, stride: int) -> jnp.ndarray:
 
 def _forward_layers(model: VisionModel, x: jnp.ndarray, *, sub_m: int,
                     two_sided: bool, schedule: str, executor: Optional[str],
-                    im2col: str, interpret: Optional[bool]) -> jnp.ndarray:
+                    im2col: str, interpret: Optional[bool],
+                    use_tuned: bool = False) -> jnp.ndarray:
     """The pure whole-net graph: every layer (patch extraction included)
-    in one trace, activations handed layer-to-layer in-device."""
+    in one trace, activations handed layer-to-layer in-device.
+
+    ``use_tuned`` applies each layer's cached autotune winner
+    (``conv.tuned``, from :func:`repro.kernels.autotune.autotune_model`) —
+    per-layer ``bm_rows`` / ``sub_m`` / im2col strategy instead of the
+    global knobs; layers without a record keep the globals."""
     for layer in model.layers:
         c = layer.conv
+        cfg = c.tuned.config if (use_tuned and c.tuned is not None) else None
         x, _ = sparse_conv2d_nhwc(
             x, c.packed, c.kh, c.kw, c.cout, stride=layer.stride,
-            padding=layer.padding, sub_m=sub_m, two_sided=two_sided,
+            padding=layer.padding,
+            sub_m=cfg.sub_m if cfg else sub_m,
+            bm_rows=cfg.bm_rows if cfg else DEFAULT_BM,
+            im2col=cfg.im2col if cfg else im2col,
+            two_sided=two_sided,
             fuse_relu=True, interpret=interpret, schedule=schedule,
-            executor=executor, im2col=im2col, wl_cache=c.wl_cache)
+            executor=executor, layout=c.layout, wl_cache=c.wl_cache)
         if layer.pool_after is not None:
             x = max_pool(x, *layer.pool_after)
     return x
@@ -145,25 +161,35 @@ def compile_forward(model: VisionModel, *, sub_m: int = 8,
                     two_sided: bool = True, schedule: str = "compact",
                     executor: Optional[str] = None, im2col: str = "auto",
                     interpret: Optional[bool] = None,
-                    donate: bool = False) -> Callable[[jnp.ndarray],
-                                                      jnp.ndarray]:
+                    donate: bool = False,
+                    use_tuned: bool = False) -> Callable[[jnp.ndarray],
+                                                         jnp.ndarray]:
     """One jit of the full forward (cached on the model per config).
 
     The layer loop is unrolled over the static layer specs inside a single
     ``jax.jit``: im2col patch extraction, the work-list kernels, and the
     pools all fuse into one compiled program — no host boundary between
     layers, and the telescoped work lists are baked in at trace time from
-    the pack-time chunk lists. ``donate=True`` donates the input buffer
-    (serving engines hand a fresh batch every step); leave it off when
-    the caller reuses ``x``. Retracing per input shape is handled by jit.
+    the pack-time chunk lists. ``use_tuned`` bakes each layer's cached
+    autotune config (the per-layer tile shapes and im2col strategy) into
+    the trace; the cache key includes those configs, so re-tuning a layer
+    gets a fresh compile instead of a stale hit. ``donate=True`` donates
+    the input buffer (serving engines hand a fresh batch every step);
+    leave it off when the caller reuses ``x``. Retracing per input shape
+    is handled by jit.
     """
-    key = (sub_m, two_sided, schedule, executor, im2col, interpret, donate)
+    tuned_key = tuple(
+        l.conv.tuned.config.key()
+        if (use_tuned and l.conv.tuned is not None) else None
+        for l in model.layers)
+    key = (sub_m, two_sided, schedule, executor, im2col, interpret, donate,
+           use_tuned, tuned_key)
     fn = model._fwd_cache.get(key)
     if fn is None:
         body = functools.partial(
             _forward_layers, model, sub_m=sub_m, two_sided=two_sided,
             schedule=schedule, executor=executor, im2col=im2col,
-            interpret=interpret)
+            interpret=interpret, use_tuned=use_tuned)
         fn = jax.jit(body, donate_argnums=(0,) if donate else ())
         model._fwd_cache[key] = fn
     return fn
@@ -173,7 +199,7 @@ def forward(model: VisionModel, x: jnp.ndarray, *, sub_m: int = 8,
             two_sided: bool = True, interpret: Optional[bool] = None,
             collect_stats: bool = False, schedule: str = "compact",
             executor: Optional[str] = None, im2col: str = "auto",
-            compiled: Optional[bool] = None
+            compiled: Optional[bool] = None, use_tuned: bool = False
             ) -> Tuple[jnp.ndarray, List[Dict[str, float]]]:
     """Whole network through the sparse conv kernel path.
 
@@ -194,7 +220,8 @@ def forward(model: VisionModel, x: jnp.ndarray, *, sub_m: int = 8,
     if compiled and not collect_stats:
         fn = compile_forward(model, sub_m=sub_m, two_sided=two_sided,
                              schedule=schedule, executor=executor,
-                             im2col=im2col, interpret=interpret)
+                             im2col=im2col, interpret=interpret,
+                             use_tuned=use_tuned)
         return fn(x), []
     stats: List[Dict[str, float]] = []
     for i, layer in enumerate(model.layers):
@@ -207,7 +234,8 @@ def forward(model: VisionModel, x: jnp.ndarray, *, sub_m: int = 8,
             fuse_relu=True, emit_occupancy=collect_stats,
             interpret=interpret, count_macs=collect_stats,
             schedule="dense" if collect_stats else schedule,
-            executor=executor, im2col=im2col, wl_cache=c.wl_cache,
+            executor=executor, im2col=im2col, layout=c.layout,
+            wl_cache=c.wl_cache,
             compact_activations=collect_stats,
             report_schedule=collect_stats)
         if collect_stats:
@@ -240,6 +268,9 @@ def forward(model: VisionModel, x: jnp.ndarray, *, sub_m: int = 8,
                 "map_scalar_density": map_scalar,
                 "filter_scalar_density": c.scalar_density(),
                 "filter_chunk_density": c.chunk_density(),
+                "dead_chunk_fraction": c.dead_chunk_fraction(),
+                "layout": c.layout,
+                "pattern": c.pattern,
                 "paper_map_density": S.BENCHMARKS[model.name].map_density,
                 "paper_filter_density": S.BENCHMARKS[model.name]
                                          .filter_density,

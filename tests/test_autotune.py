@@ -1,0 +1,213 @@
+"""Per-layer tile autotuner (:mod:`repro.kernels.autotune`): the schedule
+counts the cost model scores must be *exactly* what ``build_worklist``
+schedules for every candidate, tuning must be deterministic and cached,
+and a tuned network must stay bitwise-equal to the default-config network
+on both work-list executors."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.autotune import (ConvTileConfig, _occupancy_indices,
+                                    autotune_conv, autotune_model,
+                                    candidate_configs, score_config)
+from repro.kernels.bitmask_spmm import build_worklist
+from repro.kernels.ops import conv_schedule_stats
+from repro.kernels.sparse_conv import conv_out_size, sparse_conv2d_nhwc
+from repro.sparsity.conv import build_sparse_chain
+from repro.vision import build_vision_model, compile_forward, forward
+
+
+def _chunk_chain(rng, density=1 / 3):
+    ws = [rng.normal(size=(3, 3, 3, 64)).astype(np.float32) * 0.1,
+          rng.normal(size=(3, 3, 64, 64)).astype(np.float32) * 0.1]
+    return build_sparse_chain(ws, density=density, pattern="chunk")
+
+
+# ---------------------------------------------------------------------------
+# schedule exactness: model counts == build_worklist counts, every candidate
+# ---------------------------------------------------------------------------
+def test_predicted_counts_match_worklist_for_every_candidate(rng):
+    """The deterministic cost model's step counts must equal the counts of
+    the work list the kernel would actually run, for *every* candidate the
+    tuner scores — the autotuner never trades on a fictional schedule."""
+    for conv in _chunk_chain(rng):
+        m_img = 144                                    # 12x12 SAME geometry
+        for cfg in candidate_configs(conv, m_img):
+            cost, counts = score_config(cfg, conv, m_img)
+            bn = cfg.bn if cfg.bn is not None else conv.packed.bn
+            if bn == conv.packed.bn:
+                indices = conv.packed.host_indices()
+            else:
+                from repro.sparsity.conv import matrixize_filters
+                indices = _occupancy_indices(
+                    matrixize_filters(conv.w_dense, layout=conv.layout,
+                                      bk=conv.packed.bk, bn=bn),
+                    conv.packed.bk, bn)
+            m_pad = m_img + (-m_img) % cfg.bm_rows
+            wl = build_worklist(np.asarray(indices), m_pad // cfg.bm_rows)
+            assert counts["live_chunk_steps"] == wl.mac_steps, cfg
+            assert counts["dead_pairs"] == wl.flush_only_steps, cfg
+            assert counts["scheduled_steps"] == wl.num_steps, cfg
+            assert counts["dense_grid_steps"] == wl.dense_grid_steps, cfg
+
+
+def test_static_stats_mode_equals_patch_mode(rng):
+    """``conv_schedule_stats(None, ..., mb=)`` (the autotuner's static
+    mode) must equal the original patch mode fed an all-live patch
+    matrix — same model, O(mb*kb) instead of O(M*K)."""
+    conv = _chunk_chain(rng)[1]
+    indices = jnp.asarray(conv.packed.host_indices())
+    bk = conv.packed.bk
+    mb, bm_rows = 3, 64
+    patches = jnp.ones((mb * bm_rows, conv.packed.shape[0]), jnp.float32)
+    a = conv_schedule_stats(patches, indices, bk=bk, bm_rows=bm_rows)
+    b = conv_schedule_stats(None, indices, bk=bk, bm_rows=bm_rows, mb=mb)
+    for k in a:
+        assert int(a[k]) == int(b[k]), k
+
+
+def test_occ_mode_matches_patch_mode_on_real_occupancy(rng):
+    """The occ= mode (calibration occupancy) must agree with deriving the
+    occupancy from the patch matrix itself."""
+    conv = _chunk_chain(rng)[1]
+    indices = jnp.asarray(conv.packed.host_indices())
+    bk = conv.packed.bk
+    mb, bm_rows = 4, 32
+    patches = np.zeros((mb * bm_rows, conv.packed.shape[0]), np.float32)
+    patches[: bm_rows] = rng.normal(size=(bm_rows, patches.shape[1]))
+    patches[2 * bm_rows: 3 * bm_rows, :bk] = 1.0
+    kb = patches.shape[1] // bk
+    occ = (patches.reshape(mb, bm_rows, kb, bk) != 0).any(axis=(1, 3))
+    a = conv_schedule_stats(jnp.asarray(patches), indices, bk=bk,
+                            bm_rows=bm_rows)
+    b = conv_schedule_stats(None, indices, bk=bk, bm_rows=bm_rows, occ=occ)
+    for k in a:
+        assert int(a[k]) == int(b[k]), k
+
+
+# ---------------------------------------------------------------------------
+# determinism + caching
+# ---------------------------------------------------------------------------
+def test_tuner_deterministic_and_cached(rng):
+    """Tuning is a pure function of the layer: the cached record on the
+    conv equals a fresh re-tune (config, cost, and counts), twice over."""
+    conv = _chunk_chain(rng)[1]
+    rec1 = autotune_conv(conv, 144)
+    assert conv.tuned is rec1
+    rec2 = autotune_conv(conv, 144)
+    assert rec1.config == rec2.config
+    assert rec1.cost == rec2.cost
+    assert rec1.counts == rec2.counts
+    assert [c for c, _, _ in rec1.table] == [c for c, _, _ in rec2.table]
+    assert [s for _, s, _ in rec1.table] == [s for _, s, _ in rec2.table]
+
+
+def test_tuner_repacks_on_bn_win_and_clears_wl_cache(rng):
+    """When the winning config changes bn the layer is re-packed at the
+    tuned width and stale work lists are dropped; when it doesn't, the
+    pack is untouched."""
+    conv = _chunk_chain(rng)[1]
+    conv.wl_cache[999] = "stale"
+    narrow = ConvTileConfig(bm_rows=128, bn=32, sub_m=8, im2col="taps")
+    rec = autotune_conv(conv, 144, candidates=[narrow])
+    assert rec.config is narrow
+    assert conv.packed.bn == 32
+    assert conv.wl_cache == {}
+    # same-bn win leaves the pack object alone
+    packed = conv.packed
+    autotune_conv(conv, 144,
+                  candidates=[ConvTileConfig(bn=32, im2col="taps")])
+    assert conv.packed is packed
+
+
+def test_autotune_model_walks_geometry_and_invalidates_jit(rng):
+    """autotune_model must tune every layer at that layer's true patch-row
+    count (convs + pools walked statically) and clear the model's
+    compiled-forward cache."""
+    model = build_vision_model("VGGNet", density=1 / 3, num_layers=3,
+                               pattern="chunk", seed=0)
+    fn_before = compile_forward(model)
+    recs = autotune_model(model, 24)
+    assert set(recs) == {0, 1, 2}
+    H = W = 24
+    for i, layer in enumerate(model.layers):
+        oh, ow = conv_out_size(H, W, layer.conv.kh, layer.conv.kw,
+                               layer.stride, layer.padding)
+        assert recs[i].m_img == oh * ow
+        assert layer.conv.tuned is recs[i]
+        H, W = oh, ow
+        if layer.pool_after is not None and min(H, W) >= layer.pool_after[0]:
+            win, st_ = layer.pool_after
+            H, W = (H - win) // st_ + 1, (W - win) // st_ + 1
+    assert model._fwd_cache == {}
+    fn_after = compile_forward(model, use_tuned=True)
+    assert fn_after is not fn_before
+
+
+def test_compile_forward_cache_keys_on_tuned_configs(rng):
+    """Re-tuning a layer must miss the compiled-forward cache — the tuned
+    configs are part of the jit identity, not a stale closure."""
+    model = build_vision_model("VGGNet", density=1 / 3, num_layers=2,
+                               pattern="chunk", seed=0)
+    autotune_model(model, 24)
+    fn1 = compile_forward(model, use_tuned=True)
+    assert compile_forward(model, use_tuned=True) is fn1
+    # force a different winner on layer 1
+    conv = model.layers[1].conv
+    autotune_conv(conv, 576,
+                  candidates=[ConvTileConfig(bm_rows=64, im2col="taps")])
+    fn2 = compile_forward(model, use_tuned=True)
+    assert fn2 is not fn1
+
+
+# ---------------------------------------------------------------------------
+# bitwise safety of tuned configs
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("executor", ["pallas", "xla"])
+def test_tuned_output_bitwise_equals_default(rng, executor):
+    """Whatever the tuner picks (bm_rows, bn, sub_m, strategy) the layer
+    output must be bit-identical to the default config on both work-list
+    executors — tile shape is a schedule choice, never a numerics one."""
+    chain = _chunk_chain(rng)
+    x = np.abs(rng.normal(size=(1, 12, 12, 3))).astype(np.float32)
+    h = jnp.asarray(x)
+    for conv in chain:
+        default, _ = sparse_conv2d_nhwc(
+            h, conv.packed, conv.kh, conv.kw, conv.cout,
+            layout=conv.layout, executor=executor)
+        rec = autotune_conv(conv, h.shape[1] * h.shape[2])
+        cfg = rec.config
+        tuned, _ = sparse_conv2d_nhwc(
+            h, conv.packed, conv.kh, conv.kw, conv.cout,
+            sub_m=cfg.sub_m, bm_rows=cfg.bm_rows, im2col=cfg.im2col,
+            layout=conv.layout, executor=executor)
+        np.testing.assert_array_equal(np.asarray(tuned), np.asarray(default))
+        h = default
+
+
+def test_tuned_whole_net_bitwise_equals_default(rng):
+    """End to end through compile_forward: the tuned whole-net jit equals
+    the default whole-net jit bitwise (and the eager forward)."""
+    model = build_vision_model("VGGNet", density=1 / 3, num_layers=2,
+                               pattern="chunk", seed=0)
+    x = np.abs(rng.normal(size=(1, 24, 24, 3))).astype(np.float32)
+    x[rng.random(x.shape) >= 0.4] = 0.0
+    default = np.asarray(compile_forward(model)(jnp.asarray(x)))
+    autotune_model(model, 24)
+    tuned = np.asarray(compile_forward(model, use_tuned=True)(jnp.asarray(x)))
+    np.testing.assert_array_equal(tuned, default)
+    eager, _ = forward(model, jnp.asarray(x), compiled=False)
+    np.testing.assert_array_equal(np.asarray(eager), default)
+
+
+def test_measured_mode_runs_and_records(rng):
+    """measure=True wall-clocks candidates through the real kernel; the
+    record flags itself as measured and still carries exact counts."""
+    conv = _chunk_chain(rng)[1]
+    x = jnp.asarray(np.abs(rng.normal(size=(1, 12, 12, 64))
+                           ).astype(np.float32))
+    rec = autotune_conv(conv, 144, measure=True, x=x)
+    assert rec.measured and rec.cost > 0
+    assert rec.counts["scheduled_steps"] >= rec.counts["live_chunk_steps"]
+    with pytest.raises(ValueError, match="calibration"):
+        autotune_conv(conv, 144, measure=True)

@@ -1,0 +1,289 @@
+"""Chunk-aligned structured pruning (:mod:`repro.sparsity.structured`):
+density parity with the unstructured pruner, dead chunks by construction,
+bank balance, the prune -> balance -> fold round-trip, and the
+``filter_chunk_density`` artifact regression (satellite)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_stubs import given, settings, st
+
+from repro.core.sparse import prune_by_magnitude
+from repro.sparsity.conv import (build_sparse_chain, matrixize_filters,
+                                 pack_conv_filters)
+from repro.sparsity.structured import (MIN_TAP_CIN, bank_balance_permutation,
+                                       choose_chunk_layout,
+                                       prune_chunk_aligned)
+
+
+def _lax_ref(x, w, relu=True):
+    out = jax.lax.conv_general_dilated(
+        jnp.asarray(x), jnp.asarray(w), (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return jnp.maximum(out, 0.0) if relu else out
+
+
+def _tile_map(w, bk, bn):
+    """Live-tile map of [kh,kw,cin,cout] filters re-cut at (bk, bn) in the
+    tap-major matrixization — the test's own (independent) measurement."""
+    wm = matrixize_filters(w, layout="tap", bk=bk, bn=bn)
+    kb, nb = wm.shape[0] // bk, wm.shape[1] // bn
+    return (wm.reshape(kb, bk, nb, bn) != 0).any(axis=(1, 3))
+
+
+# ---------------------------------------------------------------------------
+# density parity + dead chunks by construction (property)
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 2 ** 31 - 1),
+       st.sampled_from([0.2, 1 / 3, 0.5, 0.75]),
+       st.sampled_from([(3, 3, 64, 64), (3, 3, 64, 128), (1, 1, 128, 64),
+                        (3, 3, 32, 48), (5, 5, 128, 128)]))
+@settings(max_examples=12, deadline=None)
+def test_chunk_prune_density_and_dead_chunks(seed, density, shape):
+    """Properties (satellite): at the same target the chunk pruner's scalar
+    density matches the unstructured pruner's within the tile-grid
+    granularity; every surviving chunk is fully dense at the chunk-map
+    level (kept tiles bitwise-untouched, killed tiles exact zeros); and
+    the dead-chunk fraction is >= 1 - density (up to quota rounding)."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=shape).astype(np.float32)
+    layout, bk, bn = choose_chunk_layout(shape)
+    assert layout == "tap", shape
+    wc, info = prune_chunk_aligned(w, density, bk=bk, bn=bn)
+    wu = w * prune_by_magnitude(w, density, axis_out=-1)
+    kb, nb = info.keep.shape
+    grid_tol = 0.5 / (kb * nb) + 1e-9
+    # scalar density parity at equal target (both within grid granularity)
+    assert abs((wc != 0).mean() - (wu != 0).mean()) <= grid_tol + 1 / (
+        w.size / w.shape[-1])  # unstructured rounds per filter, chunk per grid
+    assert abs(info.live_fraction - density) <= grid_tol
+    # surviving chunks fully dense at chunk-map level; the map is exact
+    np.testing.assert_array_equal(_tile_map(wc, bk, bn), info.keep)
+    tiles = matrixize_filters(w, layout="tap", bk=bk, bn=bn) \
+        .reshape(kb, bk, nb, bn)
+    tiles_c = matrixize_filters(wc, layout="tap", bk=bk, bn=bn) \
+        .reshape(kb, bk, nb, bn)
+    kept = info.keep[:, None, :, None]
+    np.testing.assert_array_equal(np.where(kept, tiles, 0.0), tiles_c)
+    # dead chunks by construction (strictly, whenever the grid is fine
+    # enough that the rounded quota leaves at least one tile out)
+    assert info.dead_chunk_fraction >= 1.0 - density - grid_tol
+    if round(density * kb * nb) < kb * nb:
+        assert info.dead_chunk_fraction > 0.0
+
+
+def test_bank_balanced_quotas_and_per_filter_density(rng):
+    """Per-bank quotas differ by at most one and every filter's scalar
+    density sits within one tile of the target (the balance the
+    unstructured path got from greedy_balance, at tile granularity)."""
+    w = rng.normal(size=(3, 3, 64, 256)).astype(np.float32)
+    _, bk, bn = choose_chunk_layout(w.shape)
+    wc, info = prune_chunk_aligned(w, 0.3, bk=bk, bn=bn)
+    assert info.quota.max() - info.quota.min() <= 1
+    kb = info.keep.shape[0]
+    per_filter = (wc != 0).mean(axis=(0, 1, 2))
+    assert np.all(np.abs(per_filter - 0.3) <= 1.0 / kb)
+
+
+def test_micro_range_clustering_bounds_quota_spread(rng):
+    """Each bank's quota is spread across its contiguous micro-ranges
+    (largest-remainder), so no range is starved while another hoards —
+    MCBBS's fetch-locality constraint."""
+    w = rng.normal(size=(5, 5, 128, 128)).astype(np.float32)  # kb = 25
+    _, bk, bn = choose_chunk_layout(w.shape)
+    wc, info = prune_chunk_aligned(w, 0.4, bk=bk, bn=bn, micro_ranges=5)
+    kb, nb = info.keep.shape
+    bounds = np.linspace(0, kb, info.micro_ranges + 1).astype(int)
+    for n in range(nb):
+        per_range = [info.keep[bounds[g]:bounds[g + 1], n].sum()
+                     for g in range(info.micro_ranges)]
+        assert max(per_range) - min(per_range) <= 1, per_range
+
+
+def test_retention_parity_on_structured_weights(rng):
+    """On weights with genuine tile structure (the regime structured
+    pruning is for), the chunk pruner's per-layer L2 retention tracks the
+    unstructured pruner's — the 'equal accuracy-proxy' contract. (On pure
+    gaussian weights no structured pruner can match unstructured top-k;
+    parity is only meaningful when the energy is tile-concentrated.)"""
+    w = rng.normal(size=(3, 3, 64, 64)).astype(np.float32)
+    _, bk, bn = choose_chunk_layout(w.shape)
+    kb = w.shape[0] * w.shape[1] * w.shape[2] // bk
+    # plant tile structure: one amplified K-chunk row per micro-range (the
+    # clustering constraint deliberately refuses energy that piles into a
+    # single range, so parity is only promised for range-spread structure)
+    bounds = np.linspace(0, kb, 4).astype(int)
+    hot = [int(rng.integers(bounds[g], bounds[g + 1])) for g in range(3)]
+    scale = np.ones((kb, 1, 1, 1), np.float32)
+    scale[hot] = 8.0
+    wm = matrixize_filters(w, layout="tap", bk=bk, bn=bn)
+    wm = (wm.reshape(kb, bk, 1, bn) * scale).reshape(kb * bk, bn)
+    w = wm.reshape(w.shape)
+    energy = np.square(w).sum()
+    wc, _ = prune_chunk_aligned(w, 1 / 3, bk=bk, bn=bn)
+    wu = w * prune_by_magnitude(w, 1 / 3, axis_out=-1)
+    ret_c = np.square(wc).sum() / energy
+    ret_u = np.square(wu).sum() / energy
+    assert ret_c >= 1 / 3           # greedy selection beats proportional
+    assert abs(ret_c - ret_u) <= 0.1, (ret_c, ret_u)
+
+
+def test_stem_fallback_layout():
+    """Layers too narrow for tap chunks (the 3-channel stem) fall back to
+    the channel layout with a K-rounded chunk."""
+    layout, bk, bn = choose_chunk_layout((3, 3, 3, 64))
+    assert layout == "channel"
+    assert bk == min(-(-27 // 8) * 8, 128) and 27 <= bk
+    assert bn == 64
+    assert choose_chunk_layout((3, 3, MIN_TAP_CIN, 64))[0] == "tap"
+
+
+# ---------------------------------------------------------------------------
+# prune -> balance -> fold round-trip
+# ---------------------------------------------------------------------------
+def test_chunk_chain_fold_roundtrip_network(rng):
+    """Folding the bank permutation into the next layer preserves the
+    network function (allclose through the float conv), and the recorded
+    keep maps stay consistent with the folded weights."""
+    ws = [rng.normal(size=(3, 3, 64, 128)).astype(np.float32),
+          rng.normal(size=(3, 3, 128, 64)).astype(np.float32)]
+    x = np.abs(rng.normal(size=(1, 8, 8, 64))).astype(np.float32)
+
+    def run_chain(chain):
+        h = jnp.asarray(x)
+        for c in chain:
+            h = _lax_ref(h, c.w_dense)
+        return np.asarray(h)
+
+    plain = build_sparse_chain(ws, density=0.4, pattern="chunk",
+                               balance_filters=False)
+    balanced = build_sparse_chain(ws, density=0.4, pattern="chunk",
+                                  balance_filters=True)
+    np.testing.assert_allclose(run_chain(plain), run_chain(balanced),
+                               rtol=1e-5, atol=1e-5)
+    for c in balanced:
+        if c.prune_info is not None:
+            np.testing.assert_array_equal(
+                _tile_map(c.w_dense, c.prune_info.bk, c.prune_info.bn),
+                c.prune_info.keep)
+
+
+def test_chunk_fold_identity_case_bitwise(rng):
+    """When the bank quotas come out equal the balance permutation is the
+    identity, and the balanced chain's weights — hence its packed tiles
+    and outputs — are bitwise those of the unbalanced chain."""
+    ws = [rng.normal(size=(3, 3, 64, 128)).astype(np.float32),
+          rng.normal(size=(3, 3, 128, 64)).astype(np.float32)]
+    plain = build_sparse_chain(ws, density=1 / 3, pattern="chunk",
+                               balance_filters=False)
+    balanced = build_sparse_chain(ws, density=1 / 3, pattern="chunk",
+                                  balance_filters=True)
+    for p, b in zip(plain, balanced):
+        q = b.prune_info.quota if b.prune_info is not None else None
+        if q is not None:
+            assert q.max() == q.min()      # the identity precondition
+        np.testing.assert_array_equal(b.perm, np.arange(b.cout))
+        np.testing.assert_array_equal(p.w_dense, b.w_dense)
+        np.testing.assert_array_equal(np.asarray(p.packed.vals),
+                                      np.asarray(b.packed.vals))
+
+
+def test_weight_level_fold_unfold_bitwise(rng):
+    """Weight-level round trip: un-permuting layer i's outputs and
+    un-folding layer i+1's inputs recovers the unbalanced weights
+    bitwise (the fold moves values, never recomputes them)."""
+    ws = [rng.normal(size=(3, 3, 64, 128)).astype(np.float32),
+          rng.normal(size=(3, 3, 128, 64)).astype(np.float32)]
+    plain = build_sparse_chain(ws, density=0.4, pattern="chunk",
+                               balance_filters=False)
+    balanced = build_sparse_chain(ws, density=0.4, pattern="chunk",
+                                  balance_filters=True)
+    perm = balanced[0].perm
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(perm.shape[0])
+    np.testing.assert_array_equal(balanced[0].w_dense[..., inv],
+                                  plain[0].w_dense)
+    np.testing.assert_array_equal(balanced[1].w_dense[:, :, inv, :],
+                                  plain[1].w_dense)
+
+
+def test_bank_permutation_moves_whole_banks(rng):
+    """The chunk pattern's balance permutation only ever moves whole
+    bn-column banks (tile alignment survives the fold), and degenerates
+    to the identity when banks cannot move."""
+    keep = np.zeros((6, 4), bool)
+    keep[:1, 0] = keep[:3, 1] = keep[:2, 2] = keep[:4, 3] = True
+    perm = bank_balance_permutation(keep, 32, 128, direction=0)
+    blocks = perm.reshape(4, 32)
+    # each block is a contiguous bank
+    assert np.all(blocks % 32 == np.arange(32)[None, :])
+    # sorted ascending by live count: banks 0, 2, 1, 3
+    np.testing.assert_array_equal(blocks[:, 0] // 32, [0, 2, 1, 3])
+    rev = bank_balance_permutation(keep, 32, 128, direction=1)
+    np.testing.assert_array_equal(rev.reshape(4, 32)[:, 0] // 32,
+                                  [3, 1, 2, 0])
+    # cout not divisible by bn: identity (a padded bank cannot move)
+    np.testing.assert_array_equal(bank_balance_permutation(keep, 32, 120),
+                                  np.arange(120))
+
+
+# ---------------------------------------------------------------------------
+# filter_chunk_density: artifact vs measurement (satellite)
+# ---------------------------------------------------------------------------
+def test_chunk_density_artifact_not_measurement_bug(rng):
+    """Regression (satellite): the 1.0 ``filter_chunk_density`` readings of
+    the unstructured path are a *pattern* artifact — the map is measured
+    correctly (it equals an independent re-cut of ``w_dense``), the
+    unstructured pruner just leaves a survivor in every tile.  The chunk
+    pruner, same target, produces a genuinely sparse map."""
+    ws = [rng.normal(size=(3, 3, 3, 64)).astype(np.float32),
+          rng.normal(size=(3, 3, 64, 64)).astype(np.float32)]
+
+    def recut_density(c):
+        wm = matrixize_filters(c.w_dense, layout=c.layout,
+                               bk=c.packed.bk, bn=c.packed.bn)
+        kb, nb = wm.shape[0] // c.packed.bk, wm.shape[1] // c.packed.bn
+        live = (wm.reshape(kb, c.packed.bk, nb, c.packed.bn) != 0) \
+            .any(axis=(1, 3))
+        return live.mean()
+
+    unstructured = build_sparse_chain(ws, density=1 / 3)
+    for c in unstructured:
+        # measurement correct: packed map == independent re-cut of w_dense
+        assert c.chunk_density() == pytest.approx(recut_density(c))
+        # the artifact itself, pinned: every tile keeps a survivor
+        assert c.chunk_density() == 1.0
+        assert c.scalar_density() == pytest.approx(1 / 3, abs=0.02)
+
+    chunk = build_sparse_chain(ws, density=1 / 3, pattern="chunk")
+    tap = chunk[1]                      # the stem falls back to unstructured
+    assert tap.layout == "tap"
+    assert tap.chunk_density() == pytest.approx(recut_density(tap))
+    assert tap.chunk_density() == pytest.approx(1 / 3, abs=0.05)
+    assert tap.dead_chunk_fraction() == pytest.approx(2 / 3, abs=0.05)
+    assert tap.scalar_density() == pytest.approx(1 / 3, abs=0.02)
+
+
+def test_chunk_pattern_network_matches_dense_oracle(rng):
+    """End to end: a chunk-pruned chain through the sparse kernel equals
+    the dense conv on the same pruned weights (both layouts in one net —
+    the stem falls back to channel-major)."""
+    from repro.kernels.sparse_conv import sparse_conv2d_nhwc
+    ws = [rng.normal(size=(3, 3, 3, 64)).astype(np.float32) * 0.1,
+          rng.normal(size=(3, 3, 64, 64)).astype(np.float32) * 0.1]
+    chain = build_sparse_chain(ws, density=1 / 3, pattern="chunk")
+    x = np.abs(rng.normal(size=(2, 12, 12, 3))).astype(np.float32)
+    h = jnp.asarray(x)
+    href = jnp.asarray(x)
+    for c in chain:
+        h, _ = sparse_conv2d_nhwc(h, c.packed, c.kh, c.kw, c.cout,
+                                  layout=c.layout, wl_cache=c.wl_cache)
+        href = _lax_ref(href, c.w_dense)
+    rel = float(jnp.abs(h - href).max()) / (float(jnp.abs(href).max()) + 1e-9)
+    assert rel <= 1e-5
+
+
+def test_build_sparse_chain_rejects_unknown_pattern(rng):
+    with pytest.raises(ValueError, match="pattern"):
+        build_sparse_chain([rng.normal(size=(3, 3, 8, 8)).astype(np.float32)],
+                           density=0.5, pattern="blockwise")

@@ -503,3 +503,71 @@ def test_spmm_rejects_ragged_rows(rng):
     with pytest.raises(AssertionError):
         sparse_conv_spmm(jnp.ones((100, 128), jnp.float32), ws.indices,
                          ws.vals)
+
+
+# ---------------------------------------------------------------------------
+# chunk-aligned pattern at the committed bench settings
+# ---------------------------------------------------------------------------
+def _bench_blob(batch=1, size=24, live_frac=0.12, seed=0):
+    """The committed BENCH_vision.json input (see benchmarks/vision_bench):
+    blob images sparse enough that whole activation row blocks go dead."""
+    from repro.launch.vision import blob_images
+    return jnp.asarray(blob_images(np.random.default_rng(seed), batch, size,
+                                   live_frac))
+
+
+def test_chunk_pattern_bench_settings_compaction(rng):
+    """Satellite: the 2-layer VGG head at the committed bench settings
+    under pattern="chunk" must show real schedule compaction — flush-only
+    steps exist, grid_compaction > 0 — while staying on the oracle
+    (rel err <= 1e-5) and on the target scalar density (within 2% of the
+    unstructured pruner at the same target)."""
+    from repro.vision import oracle_check, schedule_summary
+    x = _bench_blob()
+    chunkm = build_vision_model("VGGNet", density=0.334, num_layers=2,
+                                pattern="chunk", seed=0)
+    out, stats, rel = oracle_check(chunkm, x)
+    assert rel <= 1e-5
+    tot = schedule_summary(stats)
+    assert tot["flush_only_steps"] > 0
+    assert tot["grid_compaction"] > 0
+    assert tot["scheduled_steps"] < tot["dense_grid_steps"]
+    # real dead chunks on the tap layer, reported through the stats path
+    assert stats[1]["layout"] == "tap" and stats[1]["pattern"] == "chunk"
+    assert stats[1]["dead_chunk_fraction"] == pytest.approx(2 / 3, abs=0.05)
+    # scalar-density parity with the unstructured pruner at equal target
+    unstr = build_vision_model("VGGNet", density=0.334, num_layers=2,
+                               pattern="unstructured", seed=0)
+    for cc, cu in zip((l.conv for l in chunkm.layers),
+                      (l.conv for l in unstr.layers)):
+        assert abs(cc.scalar_density() - cu.scalar_density()) <= 0.02
+
+
+def test_chunk_pattern_compiled_pipeline_and_engine(rng):
+    """The compiled whole-net jit and the serving engine both run the
+    mixed-layout (channel stem + tap body) chunk network and agree with
+    the eager kernel path bitwise."""
+    model = build_vision_model("VGGNet", density=0.334, num_layers=2,
+                               pattern="chunk", seed=0)
+    x = _bench_blob()
+    eager, _ = forward(model, x, compiled=False)
+    fn = compile_forward(model)
+    np.testing.assert_array_equal(np.asarray(fn(x)), np.asarray(eager))
+    eng = VisionEngine(model, num_slots=2)
+    produced = eng.run([ImageRequest(rid=0, image=np.asarray(x)[0])])
+    np.testing.assert_allclose(produced[0], np.asarray(eager)[0],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_chunk_pattern_engine_with_tuned_schedules(rng):
+    """Engine with use_tuned bakes the autotuned per-layer configs and
+    still matches the untuned engine bitwise."""
+    from repro.vision import autotune_model
+    model = build_vision_model("VGGNet", density=0.334, num_layers=2,
+                               pattern="chunk", seed=0)
+    x = _bench_blob()
+    base = np.asarray(compile_forward(model)(x))
+    autotune_model(model, 24)
+    eng = VisionEngine(model, num_slots=1, use_tuned=True)
+    produced = eng.run([ImageRequest(rid=0, image=np.asarray(x)[0])])
+    np.testing.assert_array_equal(produced[0], base[0])
