@@ -1,0 +1,249 @@
+"""Bench-regression gate for every committed schedule record (CI step).
+
+    PYTHONPATH=src python -m benchmarks.check_sched_regression \
+        BENCH_vision.json BENCH_vision_new.json \
+        BENCH_serve.json BENCH_serve_new.json
+
+Consumes consecutive (committed baseline, freshly generated) file pairs
+and fails (exit 1) when any record regresses structurally. The record
+kind is auto-detected (``"bench": "serve"`` -> serving record; anything
+else uses the vision schema), so one gate covers every ``BENCH_*.json``
+both pipelines persist — they all carry the same unified work-list
+schedule-counters record.
+
+Vision gates (the historical ``check_vision_regression`` rules):
+
+  * ``rel_err_vs_dense`` above 1e-5 — numerics drifted off the oracle,
+  * ``mean_skipped_tile_frac`` dropped — the two-sided skip stopped firing,
+  * the compacted schedule grew, or dead steps crept back in
+    (``scheduled_steps != live_chunk_steps + flush_only_steps``),
+  * ``grid_compaction`` dropped — §3.2 telescoping scheduling dead work,
+  * the compiled pipeline stopped being bitwise-equal to the kernel path.
+  * per-pattern sub-records (``"patterns"``) gate independently.
+
+Serving gates (the decode path through the same work-list core):
+
+  * any corrupted request (``per_slot_corrupted`` / ``sparse_corrupted``),
+  * ``skipped_frac`` dropped — activation-side skips stopped firing,
+  * the live-batch schedule grew / scheduled dead steps, or its
+    ``compaction_factor`` vs the predicated grid dropped,
+  * the decode-batch-2 record (``decode2``) lost bitwise equality with
+    the predicated kernel, grew, or lost compaction.
+
+Wall-clock numbers are *reported* but never gated — CI machines vary; the
+structural counters are what must not regress.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+REL_ERR_CEILING = 1e-5
+SKIP_FRAC_TOL = 1e-6
+COMPACTION_TOL = 1e-6
+VISION_SETTINGS_KEYS = ("bench", "image_size", "batch", "num_layers",
+                        "map_density_target", "pattern", "autotune")
+SERVE_SETTINGS_KEYS = ("bench", "arch", "requests", "slots", "prompt_len",
+                       "max_new", "stagger", "density")
+
+
+def _check_schedule(sched_base, sched_new, tag: str, *,
+                    compaction_key: str) -> list:
+    """Shared gates on one unified schedule-counters record: dead-step
+    identity, schedule growth, compaction drop."""
+    p = f"[{tag}] " if tag else ""
+    failures = []
+    if sched_new is None:
+        if sched_base is not None:
+            failures.append(f"{p}schedule record present in baseline but "
+                            f"missing from new run")
+        return failures
+    live = sched_new["live_chunk_steps"] + sched_new["flush_only_steps"]
+    if sched_new["scheduled_steps"] != live:
+        failures.append(
+            f"{p}dead steps scheduled: {sched_new['scheduled_steps']:.0f} "
+            f"scheduled != {live:.0f} live-chunk + flush-only")
+    if sched_base is not None:
+        if sched_new["scheduled_steps"] > sched_base["scheduled_steps"]:
+            failures.append(
+                f"{p}schedule grew: {sched_base['scheduled_steps']:.0f} "
+                f"-> {sched_new['scheduled_steps']:.0f} steps")
+        if sched_new.get(compaction_key, 0.0) < (
+                sched_base.get(compaction_key, 0.0) - COMPACTION_TOL):
+            failures.append(
+                f"{p}{compaction_key} dropped: "
+                f"{sched_base[compaction_key]:.4f} -> "
+                f"{sched_new[compaction_key]:.4f}")
+    return failures
+
+
+# ---------------------------------------------------------------------------
+# vision records
+# ---------------------------------------------------------------------------
+def check_vision_record(baseline: dict, new: dict, tag: str = "") -> list:
+    """Structural gates for one vision record (headline or one pattern)."""
+    p = f"[{tag}] " if tag else ""
+    failures = []
+    if new["rel_err_vs_dense"] > REL_ERR_CEILING:
+        failures.append(f"{p}rel_err_vs_dense {new['rel_err_vs_dense']:.2e} "
+                        f"exceeds {REL_ERR_CEILING:.0e}")
+    if new["mean_skipped_tile_frac"] < (baseline["mean_skipped_tile_frac"]
+                                        - SKIP_FRAC_TOL):
+        failures.append(
+            f"{p}mean_skipped_tile_frac dropped: "
+            f"{baseline['mean_skipped_tile_frac']:.4f} -> "
+            f"{new['mean_skipped_tile_frac']:.4f}")
+    if not new.get("compiled_pipeline_bitwise_equal", True):
+        failures.append(f"{p}compiled pipeline no longer bitwise-equal to "
+                        f"the kernel path")
+    failures.extend(_check_schedule(baseline.get("schedule"),
+                                    new.get("schedule"), tag,
+                                    compaction_key="grid_compaction"))
+    return failures
+
+
+def check_vision(baseline: dict, new: dict) -> list:
+    if not all(baseline.get(k) == new.get(k) for k in VISION_SETTINGS_KEYS):
+        return [
+            f"settings mismatch: baseline "
+            f"{[baseline.get(k) for k in VISION_SETTINGS_KEYS]} vs new "
+            f"{[new.get(k) for k in VISION_SETTINGS_KEYS]} "
+            f"— regenerate the committed baseline at the CI settings"]
+
+    failures = check_vision_record(baseline, new)
+    base_pats = baseline.get("patterns") or {}
+    new_pats = new.get("patterns") or {}
+    for pattern in sorted(set(base_pats) & set(new_pats)):
+        failures.extend(check_vision_record(base_pats[pattern],
+                                            new_pats[pattern], tag=pattern))
+    for pattern in sorted(set(base_pats) - set(new_pats)):
+        failures.append(f"pattern '{pattern}' present in baseline but "
+                        f"missing from new run")
+    return failures
+
+
+def report_vision(baseline: dict, new: dict) -> None:
+    print(f"{'metric':<34s} {'baseline':>12s} {'new':>12s}")
+    for k in ("sparse_img_per_s", "dense_img_per_s",
+              "sparse_over_dense_speedup", "rel_err_vs_dense",
+              "mean_skipped_tile_frac", "mean_dead_chunk_fraction"):
+        b, n = baseline.get(k), new.get(k)
+        fb = f"{b:.4g}" if isinstance(b, (int, float)) else str(b)
+        fn_ = f"{n:.4g}" if isinstance(n, (int, float)) else str(n)
+        print(f"{k:<34s} {fb:>12s} {fn_:>12s}")
+    for k in ("scheduled_steps", "dense_grid_steps", "grid_compaction"):
+        b = (baseline.get("schedule") or {}).get(k)
+        n = (new.get("schedule") or {}).get(k)
+        print(f"schedule.{k:<25s} "
+              f"{(f'{b:.4g}' if b is not None else '-'):>12s} "
+              f"{(f'{n:.4g}' if n is not None else '-'):>12s}")
+    for pattern, rec in sorted((new.get("patterns") or {}).items()):
+        b = ((baseline.get("patterns") or {}).get(pattern)
+             or {}).get("sparse_over_dense_speedup")
+        print(f"speedup[{pattern}]{'':<{max(0, 25 - len(pattern))}s} "
+              f"{(f'{b:.4g}' if b is not None else '-'):>12s} "
+              f"{rec['sparse_over_dense_speedup']:>12.4g}")
+
+
+# ---------------------------------------------------------------------------
+# serving records
+# ---------------------------------------------------------------------------
+def check_serve(baseline: dict, new: dict) -> list:
+    if not all(baseline.get(k) == new.get(k) for k in SERVE_SETTINGS_KEYS):
+        return [
+            f"settings mismatch: baseline "
+            f"{[baseline.get(k) for k in SERVE_SETTINGS_KEYS]} vs new "
+            f"{[new.get(k) for k in SERVE_SETTINGS_KEYS]} "
+            f"— regenerate the committed baseline at the CI settings"]
+
+    failures = []
+    for k in ("per_slot_corrupted", "sparse_corrupted"):
+        if new.get(k, 0):
+            failures.append(f"{k} = {new[k]} (must be 0)")
+    if new.get("skipped_frac") is not None and \
+            baseline.get("skipped_frac") is not None and \
+            new["skipped_frac"] < baseline["skipped_frac"] - SKIP_FRAC_TOL:
+        failures.append(f"skipped_frac dropped: "
+                        f"{baseline['skipped_frac']:.4f} -> "
+                        f"{new['skipped_frac']:.4f}")
+    failures.extend(_check_schedule(baseline.get("schedule"),
+                                    new.get("schedule"), "decode",
+                                    compaction_key="compaction_factor"))
+    d2_new, d2_base = new.get("decode2"), baseline.get("decode2")
+    if d2_new is not None and not d2_new.get("bitwise_equal", True):
+        failures.append("[decode2] work-list FFN no longer bitwise-equal "
+                        "to the predicated kernel")
+    failures.extend(_check_schedule(d2_base, d2_new, "decode2",
+                                    compaction_key="compaction_factor"))
+    return failures
+
+
+def report_serve(baseline: dict, new: dict) -> None:
+    print(f"{'metric':<34s} {'baseline':>12s} {'new':>12s}")
+    for k in ("per_slot_tok_s", "sparse_tok_s", "per_slot_corrupted",
+              "sparse_corrupted", "skipped_frac", "executed_frac",
+              "decode_compaction"):
+        b, n = baseline.get(k), new.get(k)
+        fb = f"{b:.4g}" if isinstance(b, (int, float)) else str(b)
+        fn_ = f"{n:.4g}" if isinstance(n, (int, float)) else str(n)
+        print(f"{k:<34s} {fb:>12s} {fn_:>12s}")
+    for sub in ("schedule", "decode2"):
+        for k in ("scheduled_steps", "predicated_grid_steps",
+                  "compaction_factor"):
+            b = (baseline.get(sub) or {}).get(k)
+            n = (new.get(sub) or {}).get(k)
+            print(f"{sub}.{k:<{33 - len(sub)}s} "
+                  f"{(f'{b:.4g}' if b is not None else '-'):>12s} "
+                  f"{(f'{n:.4g}' if n is not None else '-'):>12s}")
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+def kind_of(record: dict) -> str:
+    return "serve" if record.get("bench") == "serve" else "vision"
+
+
+def check(baseline: dict, new: dict) -> list:
+    """Gate one (baseline, new) record pair; kind is auto-detected."""
+    kb, kn = kind_of(baseline), kind_of(new)
+    if kb != kn:
+        return [f"record kind mismatch: baseline is {kb}, new is {kn}"]
+    return check_serve(baseline, new) if kb == "serve" \
+        else check_vision(baseline, new)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="+", metavar="BASELINE NEW",
+                    help="consecutive (committed baseline, freshly "
+                         "generated) BENCH_*.json pairs")
+    args = ap.parse_args(argv)
+    if len(args.files) % 2:
+        ap.error("expected an even number of files "
+                 "(baseline/new pairs)")
+
+    failures = []
+    for base_path, new_path in zip(args.files[::2], args.files[1::2]):
+        with open(base_path) as f:
+            baseline = json.load(f)
+        with open(new_path) as f:
+            new = json.load(f)
+        kind = kind_of(baseline)
+        print(f"== {kind}: {base_path} vs {new_path} ==")
+        (report_serve if kind == "serve" else report_vision)(baseline, new)
+        failures.extend(f"{base_path}: {msg}"
+                        for msg in check(baseline, new))
+        print()
+
+    if failures:
+        print("REGRESSION:")
+        for f_ in failures:
+            print(f"  - {f_}")
+        sys.exit(1)
+    print("no structural regressions")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,138 +1,20 @@
-"""Bench-regression gate for the vision pipeline (CI smoke step).
+"""Historical entry point — the gate moved to
+:mod:`benchmarks.check_sched_regression`, which handles vision *and*
+serving records (both carry the unified work-list schedule counters).
 
     PYTHONPATH=src python -m benchmarks.check_vision_regression \
         BENCH_vision.json BENCH_vision_new.json
 
-Compares a freshly generated ``BENCH_vision.json`` against the committed
-baseline and fails (exit 1) when the sparse path regresses structurally:
-
-  * ``rel_err_vs_dense`` above 1e-5 — numerics drifted off the oracle,
-  * ``mean_skipped_tile_frac`` dropped — the two-sided skip stopped firing,
-  * the compacted schedule grew — more grid steps scheduled than the
-    baseline for the same settings, or dead steps crept back in
-    (``scheduled_steps != live_chunk_steps + flush_only_steps``),
-  * ``grid_compaction`` dropped — dead work-list entries the §3.2
-    telescoping used to drop are being scheduled again,
-  * the compiled pipeline stopped being bitwise-equal to the kernel path.
-
-When both records carry per-pattern sub-records (``"patterns"``), every
-pattern present in both is gated independently; the top-level headline
-(chunk + autotune) is always gated.
-
-Wall-clock numbers are *reported* but never gated — CI machines vary; the
-structural counters are what must not regress.
+stays a working alias for one vision pair; the thresholds and record
+checkers are re-exported under their old names.
 """
 from __future__ import annotations
 
-import argparse
-import json
-import sys
-
-REL_ERR_CEILING = 1e-5
-SKIP_FRAC_TOL = 1e-6
-COMPACTION_TOL = 1e-6
-SETTINGS_KEYS = ("bench", "image_size", "batch", "num_layers",
-                 "map_density_target", "pattern", "autotune")
-
-
-def check_record(baseline: dict, new: dict, tag: str = "") -> list:
-    """Structural gates for one record (headline or one pattern)."""
-    p = f"[{tag}] " if tag else ""
-    failures = []
-    if new["rel_err_vs_dense"] > REL_ERR_CEILING:
-        failures.append(f"{p}rel_err_vs_dense {new['rel_err_vs_dense']:.2e} "
-                        f"exceeds {REL_ERR_CEILING:.0e}")
-    if new["mean_skipped_tile_frac"] < (baseline["mean_skipped_tile_frac"]
-                                        - SKIP_FRAC_TOL):
-        failures.append(
-            f"{p}mean_skipped_tile_frac dropped: "
-            f"{baseline['mean_skipped_tile_frac']:.4f} -> "
-            f"{new['mean_skipped_tile_frac']:.4f}")
-    if not new.get("compiled_pipeline_bitwise_equal", True):
-        failures.append(f"{p}compiled pipeline no longer bitwise-equal to "
-                        f"the kernel path")
-
-    sched_new = new.get("schedule")
-    sched_base = baseline.get("schedule")
-    if sched_new is not None:
-        live = sched_new["live_chunk_steps"] + sched_new["flush_only_steps"]
-        if sched_new["scheduled_steps"] != live:
-            failures.append(
-                f"{p}dead steps scheduled: {sched_new['scheduled_steps']:.0f} "
-                f"scheduled != {live:.0f} live-chunk + flush-only")
-        if sched_base is not None:
-            if sched_new["scheduled_steps"] > sched_base["scheduled_steps"]:
-                failures.append(
-                    f"{p}schedule grew: {sched_base['scheduled_steps']:.0f} "
-                    f"-> {sched_new['scheduled_steps']:.0f} steps")
-            if sched_new.get("grid_compaction", 0.0) < (
-                    sched_base.get("grid_compaction", 0.0) - COMPACTION_TOL):
-                failures.append(
-                    f"{p}grid_compaction dropped: "
-                    f"{sched_base['grid_compaction']:.4f} -> "
-                    f"{sched_new['grid_compaction']:.4f}")
-    return failures
-
-
-def check(baseline: dict, new: dict) -> list:
-    if not all(baseline.get(k) == new.get(k) for k in SETTINGS_KEYS):
-        return [
-            f"settings mismatch: baseline "
-            f"{[baseline.get(k) for k in SETTINGS_KEYS]} vs new "
-            f"{[new.get(k) for k in SETTINGS_KEYS]} "
-            f"— regenerate the committed baseline at the CI settings"]
-
-    failures = check_record(baseline, new)
-    base_pats = baseline.get("patterns") or {}
-    new_pats = new.get("patterns") or {}
-    for pattern in sorted(set(base_pats) & set(new_pats)):
-        failures.extend(
-            check_record(base_pats[pattern], new_pats[pattern], tag=pattern))
-    for pattern in sorted(set(base_pats) - set(new_pats)):
-        failures.append(f"pattern '{pattern}' present in baseline but "
-                        f"missing from new run")
-    return failures
-
-
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("baseline", help="committed BENCH_vision.json")
-    ap.add_argument("new", help="freshly generated BENCH_vision.json")
-    args = ap.parse_args()
-    with open(args.baseline) as f:
-        baseline = json.load(f)
-    with open(args.new) as f:
-        new = json.load(f)
-
-    print(f"{'metric':<34s} {'baseline':>12s} {'new':>12s}")
-    for k in ("sparse_img_per_s", "dense_img_per_s",
-              "sparse_over_dense_speedup", "rel_err_vs_dense",
-              "mean_skipped_tile_frac", "mean_dead_chunk_fraction"):
-        b, n = baseline.get(k), new.get(k)
-        fb = f"{b:.4g}" if isinstance(b, (int, float)) else str(b)
-        fn_ = f"{n:.4g}" if isinstance(n, (int, float)) else str(n)
-        print(f"{k:<34s} {fb:>12s} {fn_:>12s}")
-    for k in ("scheduled_steps", "dense_grid_steps", "grid_compaction"):
-        b = (baseline.get("schedule") or {}).get(k)
-        n = (new.get("schedule") or {}).get(k)
-        print(f"schedule.{k:<25s} "
-              f"{(f'{b:.4g}' if b is not None else '-'):>12s} "
-              f"{(f'{n:.4g}' if n is not None else '-'):>12s}")
-    for pattern, rec in sorted((new.get("patterns") or {}).items()):
-        b = ((baseline.get("patterns") or {}).get(pattern)
-             or {}).get("sparse_over_dense_speedup")
-        print(f"speedup[{pattern}]{'':<{max(0, 25 - len(pattern))}s} "
-              f"{(f'{b:.4g}' if b is not None else '-'):>12s} "
-              f"{rec['sparse_over_dense_speedup']:>12.4g}")
-
-    failures = check(baseline, new)
-    if failures:
-        print("\nREGRESSION:")
-        for f_ in failures:
-            print(f"  - {f_}")
-        sys.exit(1)
-    print("\nno structural regressions")
-
+from benchmarks.check_sched_regression import (  # noqa: F401
+    COMPACTION_TOL, REL_ERR_CEILING, SKIP_FRAC_TOL, check, main)
+from benchmarks.check_sched_regression import (  # noqa: F401
+    VISION_SETTINGS_KEYS as SETTINGS_KEYS,
+    check_vision_record as check_record)
 
 if __name__ == "__main__":
     main()

@@ -22,11 +22,19 @@ interpret-mode wall time is NOT TPU performance — the structural numbers
 are what carries), batch-composition invariance against a sparse solo
 reference, and the skipped-tile fraction of the live decode batch (the
 repo-level analogue of the paper's Fig. 7 compute reduction).
+
+The decode-compaction section drives one packed FFN through the unified
+work-list core at decode batch 2 and reports the telescoped
+scheduled-steps vs the predicated dense grid's sub-block steps (bitwise
+equality asserted), next to the whole-model schedule counters from the
+scheduler's ``probe_ffn_stats``. ``--out BENCH_serve.json`` persists the
+structural record that ``benchmarks.check_sched_regression`` gates in CI.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import time
 
 import jax
@@ -34,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import load_smoke
+from repro.kernels import ops
 from repro.models import model as M
 from repro.serve import Request, Scheduler
 from repro.serve.engine import jitted_serve_step
@@ -131,11 +140,51 @@ def sparse_section(cfg, params, reqs, slots, max_len, density):
     out = sch.run([Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new,
                            arrival=r.arrival) for r in reqs],
                   probe_ffn=True)
-    return sch.stats, _mismatches(ref_s, out), sch.ffn_probe
+    return sch.stats, _mismatches(ref_s, out), sch.ffn_probe, params_s
+
+
+def decode_compaction_section(cfg, params_s, seed=0):
+    """One packed FFN through the unified work-list core at decode batch 2.
+
+    The telescoped schedule runs at ``sub_m = 8``-row granularity, so two
+    live decode lanes schedule exactly their own (row-sub-block, k-chunk)
+    pairs; the predicated kernel pads the batch to a 128-row block and
+    iterates ``128 // 8`` sub-block steps per scheduled tile. Asserts the
+    two paths stay bitwise-identical and returns the unified schedule
+    counters record (``compaction_factor`` = predicated / scheduled).
+    """
+    for bp in params_s["blocks"].values():
+        if "ffn_sparse" in bp:
+            sp, act = bp["ffn_sparse"], cfg.act
+            break
+        if "channel_mix_sparse" in bp:
+            sp, act = bp["channel_mix_sparse"], "relu2"
+            break
+    else:
+        return None
+    sp0 = {k: v[0] for k, v in sp.items()}      # period-0 slice
+    D = cfg.d_model
+    k_in = -(-D // 128) * 128
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(2, D)).astype(np.float32))
+    pred = ops.fused_sparse_ffn(
+        x, sp0["in_indices"], sp0["in_vals"], sp0.get("gate_indices"),
+        sp0.get("gate_vals"), act=act, k_total=k_in, bk=128, bn=128, sub_m=8)
+    wl_out, sched = ops.fused_sparse_ffn_wl(
+        x, sp0["in_indices"], sp0["in_vals"], sp0.get("gate_indices"),
+        sp0.get("gate_vals"), act=act, k_total=k_in, bk=128, bn=128, sub_m=8,
+        return_schedule=True)
+    sched = {k: float(v) for k, v in sched.items()}
+    sched["batch"] = 2
+    sched["bitwise_equal"] = bool(
+        (np.asarray(pred) == np.asarray(wl_out)).all())
+    assert sched["bitwise_equal"], \
+        "work-list FFN diverged from the predicated kernel"
+    return sched
 
 
 def run(csv_rows, arch="qwen3_4b", requests=8, slots=4, prompt_len=8,
-        max_new=16, stagger=2, density=0.35):
+        max_new=16, stagger=2, density=0.35, out=None):
     cfg = load_smoke(arch)
     cfg = dataclasses.replace(cfg, sparse_ffn=False)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
@@ -156,8 +205,9 @@ def run(csv_rows, arch="qwen3_4b", requests=8, slots=4, prompt_len=8,
     old_out, old = legacy_maxpos_loop(cfg, params, reqs, slots, max_len)
     old_bad = _mismatches(ref, old_out)
 
-    sp_st, sp_bad, sp_stats = sparse_section(
+    sp_st, sp_bad, sp_stats, params_s = sparse_section(
         cfg, params, reqs, slots, max_len, density)
+    decode2 = decode_compaction_section(cfg, params_s)
 
     print(f"  {'loop':>12s} {'steps':>6s} {'tok/s':>8s} {'util':>6s} "
           f"{'corrupted':>10s}")
@@ -173,6 +223,18 @@ def run(csv_rows, arch="qwen3_4b", requests=8, slots=4, prompt_len=8,
               f"{sp_stats['weight_tile_macs'] / sp_stats['dense_tile_macs']:.2f}, "
               f"activation-side skipped {sp_stats['skipped_frac']:.2f}, "
               f"executed {sp_stats['executed_frac']:.3f} of dense tile MACs")
+        sched = sp_stats.get("schedule")
+        if sched is not None:
+            print(f"  decode schedule (live batch): "
+                  f"{sched['scheduled_steps']:.0f} scheduled vs "
+                  f"{sched['predicated_grid_steps']:.0f} predicated steps "
+                  f"-> {sched['compaction_factor']:.1f}x compaction")
+    if decode2 is not None:
+        print(f"  decode batch 2 (one FFN, work-list core): "
+              f"{decode2['scheduled_steps']:.0f} scheduled vs "
+              f"{decode2['predicated_grid_steps']:.0f} predicated steps "
+              f"-> {decode2['compaction_factor']:.1f}x compaction, "
+              f"bitwise_equal={decode2['bitwise_equal']}")
     csv_rows.append(("serve", "per_slot_tok_s", round(st.tok_per_s, 1), ""))
     csv_rows.append(("serve", "per_slot_util",
                      round(st.slot_utilization, 3), 1.0))
@@ -188,9 +250,35 @@ def run(csv_rows, arch="qwen3_4b", requests=8, slots=4, prompt_len=8,
                          round(sp_stats["skipped_frac"], 3), ""))
         csv_rows.append(("serve", "sparse_executed_frac",
                          round(sp_stats["executed_frac"], 3), ""))
+    if decode2 is not None:
+        csv_rows.append(("serve", "decode2_compaction",
+                         round(decode2["compaction_factor"], 1), ""))
     assert new_bad == 0, "barrier-free engine must match solo decode exactly"
     assert sp_bad == 0, \
         "sparse decode must keep batch-composition invariance"
+    if out:
+        record = {
+            "bench": "serve", "arch": arch, "requests": requests,
+            "slots": slots, "prompt_len": prompt_len, "max_new": max_new,
+            "stagger": stagger, "density": density,
+            # wall-clock: reported, never gated (CI machines vary)
+            "per_slot_tok_s": round(st.tok_per_s, 2),
+            "sparse_tok_s": round(sp_st.tok_per_s, 2),
+            # structural: gated by benchmarks.check_sched_regression
+            "per_slot_corrupted": new_bad,
+            "sparse_corrupted": sp_bad,
+            "skipped_frac": (round(sp_stats["skipped_frac"], 6)
+                             if sp_stats else None),
+            "executed_frac": (round(sp_stats["executed_frac"], 6)
+                              if sp_stats else None),
+            "schedule": (sp_stats or {}).get("schedule"),
+            "decode_compaction": (sp_stats or {}).get("decode_compaction"),
+            "decode2": decode2,
+        }
+        with open(out, "w") as f:
+            json.dump(record, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"  wrote {out}")
     return csv_rows
 
 
@@ -203,10 +291,12 @@ def main() -> None:
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--stagger", type=int, default=2)
     ap.add_argument("--density", type=float, default=0.35)
+    ap.add_argument("--out", default=None,
+                    help="write the structural BENCH_serve.json record here")
     args = ap.parse_args()
     run([], arch=args.arch, requests=args.requests, slots=args.slots,
         prompt_len=args.prompt_len, max_new=args.new_tokens,
-        stagger=args.stagger, density=args.density)
+        stagger=args.stagger, density=args.density, out=args.out)
 
 
 if __name__ == "__main__":

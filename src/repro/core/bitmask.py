@@ -122,6 +122,9 @@ class BlockSparseMatrix:
     shape:   (K, N)
     indices_np: host copy of ``indices`` kept from pack time so schedule
         builders (work-list compaction) never read back from device.
+    wl_cache: static (weight-only) telescoped work lists keyed by
+        row-block count — the work-list frontends reuse pack-time
+        schedules across calls the way ``PackedConv.wl_cache`` does.
     """
 
     indices: jnp.ndarray
@@ -131,6 +134,8 @@ class BlockSparseMatrix:
     bn: int
     indices_np: np.ndarray | None = dataclasses.field(
         default=None, repr=False, compare=False)
+    wl_cache: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     def host_indices(self) -> np.ndarray:
         """Chunk index lists as host numpy (pack-time copy when available)."""

@@ -2,10 +2,51 @@
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
 #
-# bitmask_spmm.py — chunk-granular two-sided sparse matmul (LM FFN path)
-#                   + the telescoped work-list builder (ConvWorkList)
-# fused_ffn.py    — in-proj -> activation -> gate-mul in one launch
-# sparse_conv.py  — implicit-GEMM two-sided sparse conv2d (vision path):
-#                   fused ReLU epilogue, in-kernel occupancy emission,
-#                   image-parity output-buffer coloring, and the
-#                   work-list-scheduled grid (pallas) / XLA executor pair
+# worklist_core.py — the unified sparse runtime every frontend sits on:
+#                    WorkList + build_worklist (§3.2 telescoping, one- or
+#                    two-stream), the generic Pallas walker + bit-identical
+#                    XLA executor, the pure-jnp schedule_stats model, and
+#                    the call-time backend resolvers
+# bitmask_spmm.py  — chunk-granular two-sided sparse matmul (LM FFN path):
+#                    dense predicated grid + work-list variant
+# fused_ffn.py     — in-proj -> activation -> gate-mul in one launch
+#                    (predicated grid + two-stream work-list variant)
+# sparse_conv.py   — implicit-GEMM two-sided sparse conv2d (vision path):
+#                    thin im2col + §3.3-coloring adapter over the core
+#                    walker, plus the instrumented dense-grid kernel and
+#                    the lazy tap-slab executor
+"""Public API of the kernels package.
+
+The unified work-list core and its three frontends. Import from here for
+the stable names; the per-module paths keep working (and the historical
+``bitmask_spmm.build_worklist`` / ``ops.conv_schedule_stats`` spellings
+re-export the same objects).
+"""
+from repro.kernels.worklist_core import (  # noqa: F401
+    ACTS, DEFAULT_BM, GATED_ACTS, LANE, ConvWorkList, WorkList,
+    activation_occupancy, build_worklist, on_tpu, resolve_executor,
+    resolve_interpret, schedule_counters, schedule_stats, worklist_spmm)
+from repro.kernels.bitmask_spmm import (  # noqa: F401
+    bitmask_spmm, bitmask_spmm_wl, subblock_macs)
+from repro.kernels.fused_ffn import (  # noqa: F401
+    fused_ffn_spmm, fused_ffn_spmm_wl)
+from repro.kernels.sparse_conv import (  # noqa: F401
+    conv_out_size, extract_patches, extract_tap_slabs, sparse_conv2d_nhwc,
+    sparse_conv_spmm, sparse_conv_spmm_wl)
+from repro.kernels.ops import (  # noqa: F401
+    fused_sparse_ffn, fused_sparse_ffn_wl, sparse_dense_matmul,
+    sparse_dense_matmul_ref, sparse_matmul_packed, sparse_matmul_packed_wl,
+    sparse_matmul_tile_stats)
+
+__all__ = [
+    "ACTS", "DEFAULT_BM", "GATED_ACTS", "LANE", "ConvWorkList", "WorkList",
+    "activation_occupancy", "build_worklist", "on_tpu", "resolve_executor",
+    "resolve_interpret", "schedule_counters", "schedule_stats",
+    "worklist_spmm", "bitmask_spmm", "bitmask_spmm_wl", "subblock_macs",
+    "fused_ffn_spmm", "fused_ffn_spmm_wl", "conv_out_size",
+    "extract_patches", "extract_tap_slabs", "sparse_conv2d_nhwc",
+    "sparse_conv_spmm", "sparse_conv_spmm_wl", "fused_sparse_ffn",
+    "fused_sparse_ffn_wl", "sparse_dense_matmul", "sparse_dense_matmul_ref",
+    "sparse_matmul_packed", "sparse_matmul_packed_wl",
+    "sparse_matmul_tile_stats",
+]

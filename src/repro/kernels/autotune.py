@@ -10,7 +10,7 @@ layer, so :func:`repro.vision.model.compile_forward` bakes the tuned work
 lists into the whole-net jit.
 
 Scoring is **deterministic and device-free** by default: the step counts
-come from the pure-jnp :func:`repro.kernels.ops.conv_schedule_stats`
+come from the pure-jnp :func:`repro.kernels.worklist_core.schedule_stats`
 model (in its static all-live-activations mode — the same counts
 ``build_worklist`` schedules, which ``tests/test_autotune.py`` pins
 exactly), combined with an element-count cost model of the three places
@@ -45,8 +45,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitmask as bm
-from repro.kernels.bitmask_spmm import DEFAULT_BM, build_worklist
-from repro.kernels.ops import conv_schedule_stats
+from repro.kernels.worklist_core import DEFAULT_BM, build_worklist, \
+    schedule_stats as conv_schedule_stats
 from repro.sparsity.conv import PackedConv, matrixize_filters, \
     pack_conv_filters
 

@@ -38,22 +38,19 @@ order reuses it across input blocks.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-DEFAULT_BM = 128
-LANE = 128
-
-# jax renamed TPUCompilerParams -> CompilerParams; accept either
-_CompilerParams = getattr(pltpu, "CompilerParams", None) \
-    or pltpu.TPUCompilerParams
+# the work-list machinery lives in the unified core; these names stay
+# importable from here for the pre-core call sites (tests, conv, autotune)
+from repro.kernels.worklist_core import (  # noqa: F401  (re-exports)
+    DEFAULT_BM, LANE, _CompilerParams, ConvWorkList, WorkList,
+    activation_occupancy, build_worklist, worklist_spmm)
 
 
 def subblock_macs(valid, k_safe, occ_ref, m_i, x_ref, w, acc_ref, cnt_ref, *,
@@ -114,114 +111,10 @@ def subblock_macs(valid, k_safe, occ_ref, m_i, x_ref, w, acc_ref, cnt_ref, *,
 # ---------------------------------------------------------------------------
 # Telescoped work-list compaction (BARISTA §3.2 applied to the grid)
 # ---------------------------------------------------------------------------
-@dataclasses.dataclass
-class ConvWorkList:
-    """Compacted schedule for a chunk-block-sparse matmul grid.
-
-    The dense grid runs ``nb * mb * max_nz`` steps and *predicates* dead
-    work away inside the lane. This schedule instead enumerates, per
-    ``(n_block, m_block)`` pair, the intersection of the stored filter
-    chunk list with the activation-chunk occupancy, so dead ``k`` steps
-    are never scheduled at all. Two equivalent forms are kept:
-
-    * ``ragged_idx [nb, mb, max_live]`` + ``steps_per_pair [nb, mb]`` —
-      the ragged-padded per-pair slot lists (slot = position in the packed
-      ``vals``; -1 padded),
-    * flat arrays ``n/m/k/j/first/last [num_steps]`` — the same entries
-      serialized pair-major (n outer, m inner, live slots in j order),
-      which is what drives the Pallas grid / XLA executor. A pair with no
-      live work degenerates to a single flush-only step (``k == j == -1``)
-      so its output block is still written (zeros).
-
-    ``mac_steps`` counts real MAC steps (``k >= 0``); ``num_steps`` adds
-    the flush-only steps. The dense grid would have scheduled
-    ``dense_grid_steps``.
-    """
-
-    n: np.ndarray
-    m: np.ndarray
-    k: np.ndarray
-    j: np.ndarray
-    first: np.ndarray
-    last: np.ndarray
-    ragged_idx: np.ndarray
-    steps_per_pair: np.ndarray
-    nb: int
-    mb: int
-    max_nz: int
-
-    @property
-    def num_steps(self) -> int:
-        return int(self.n.shape[0])
-
-    @property
-    def num_pairs(self) -> int:
-        return self.nb * self.mb
-
-    @property
-    def mac_steps(self) -> int:
-        return int((self.k >= 0).sum())
-
-    @property
-    def flush_only_steps(self) -> int:
-        return self.num_steps - self.mac_steps
-
-    @property
-    def dense_grid_steps(self) -> int:
-        return self.nb * self.mb * self.max_nz
-
-    def prefetch_args(self):
-        """The flat schedule as device arrays in kernel argument order."""
-        return tuple(jnp.asarray(a) for a in
-                     (self.n, self.m, self.k, self.j, self.first, self.last))
-
-
-def build_worklist(indices: np.ndarray, mb: int, *,
-                   occ_blk: Optional[np.ndarray] = None) -> ConvWorkList:
-    """Compact a [nb, max_nz] chunk index table into a :class:`ConvWorkList`.
-
-    ``indices`` is the packed weight layout's per-n-block k-chunk list (-1
-    padded) — host numpy, known at pack time. ``occ_blk`` (optional bool
-    [mb, kb]) is the activation occupancy at (row-block x chunk)
-    granularity; when given, the per-pair lists are the *intersection*
-    (two-sided compaction — data-dependent, so eager callers only).
-    """
-    indices = np.asarray(indices)
-    nb, max_nz = indices.shape
-    valid = indices >= 0                                     # [nb, max_nz]
-    if occ_blk is None:
-        live = np.broadcast_to(valid[:, None, :], (nb, mb, max_nz))
-    else:
-        occ_blk = np.asarray(occ_blk, bool)
-        assert occ_blk.shape[0] == mb, (occ_blk.shape, mb)
-        safe = np.where(valid, indices, 0)
-        # live[n, m, j] = stored chunk j of n-block ∧ activation block
-        # (m, chunk) occupied
-        live = valid[:, None, :] & occ_blk[:, safe].transpose(1, 0, 2)
-    steps = live.sum(-1).astype(np.int64)                    # [nb, mb]
-    max_live = max(int(steps.max(initial=0)), 1)
-    # live slots first (stable keeps ascending j order), then -1 padding
-    order = np.argsort(~live, axis=-1, kind="stable")
-    ragged = np.where(np.arange(max_nz)[None, None, :] < steps[..., None],
-                      order, -1)[..., :max_live].astype(np.int32)
-    # flatten pair-major; dead pairs contribute one flush-only step
-    counts = np.maximum(steps, 1).reshape(-1)                # [nb*mb]
-    total = int(counts.sum())
-    pair = np.repeat(np.arange(nb * mb), counts)
-    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
-    pos = np.arange(total) - starts[pair]
-    n_arr = (pair // mb).astype(np.int32)
-    m_arr = (pair % mb).astype(np.int32)
-    j_arr = ragged.reshape(nb * mb, max_live)[
-        pair, np.minimum(pos, max_live - 1)]
-    k_arr = np.where(j_arr >= 0,
-                     indices[n_arr, np.maximum(j_arr, 0)], -1).astype(np.int32)
-    first = (pos == 0).astype(np.int32)
-    last = (pos == counts[pair] - 1).astype(np.int32)
-    return ConvWorkList(n_arr, m_arr, k_arr, j_arr.astype(np.int32), first,
-                        last, ragged, steps.astype(np.int32), nb, mb, max_nz)
-
-
+# build_worklist / ConvWorkList / the walkers now live in
+# repro.kernels.worklist_core (imported above); what stays here is the
+# dense-grid predicated kernel — the instrumented measurement path — and
+# the FFN-shaped work-list variant below.
 def _kernel(idx_ref, occ_ref, x_ref, w_ref, *refs, nsteps: int,
             two_sided: bool, sub_m: int, bm: int, count_macs: bool):
     if count_macs:
@@ -249,14 +142,6 @@ def _kernel(idx_ref, occ_ref, x_ref, w_ref, *refs, nsteps: int,
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
         if cntout_ref is not None:
             cntout_ref[...] = cnt_ref[...]
-
-
-def activation_occupancy(x: jnp.ndarray, sub_m: int, bk: int) -> jnp.ndarray:
-    """int32 [M // sub_m, K // bk] tile-occupancy of ``x`` at ``sub_m``-row
-    granularity (the kernel's activation-side skip predicate)."""
-    M, K = x.shape
-    return (x.reshape(M // sub_m, sub_m, K // bk, bk) != 0).any(
-        axis=(1, 3)).astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("bk", "bn", "bm", "sub_m",
@@ -318,3 +203,24 @@ def bitmask_spmm(x: jnp.ndarray, indices: jnp.ndarray, vals: jnp.ndarray,
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
     )(indices, occ, x, vals)
     return out
+
+
+def bitmask_spmm_wl(x: jnp.ndarray, vals: jnp.ndarray, wl: WorkList, *,
+                    bk: int = LANE, bn: int = LANE,
+                    bm_rows: int = DEFAULT_BM,
+                    interpret: Optional[bool] = None,
+                    executor: Optional[str] = None) -> jnp.ndarray:
+    """Work-list-compacted ``x @ W``: the FFN-shaped frontend of
+    :func:`repro.kernels.worklist_core.worklist_spmm`.
+
+    Where :func:`bitmask_spmm` runs the dense ``(nb, mb, max_nz)`` grid
+    and predicates dead tiles in-lane (``sub_m`` row sub-blocks inside a
+    128-row block), this variant runs exactly ``wl.num_steps`` scheduled
+    steps. Built at ``bm_rows = sub_m`` granularity, a single-live-lane
+    decode batch schedules exactly its live (m-sub-block, k-chunk) pairs
+    instead of predicating the full grid — the §3.2 telescoping applied
+    to the FFN decode path. Bit-identical to :func:`bitmask_spmm` (tests
+    pin it on both executors).
+    """
+    return worklist_spmm(x, vals, wl, bk=bk, bn=bn, bm_rows=bm_rows,
+                         interpret=interpret, executor=executor)[0]

@@ -26,28 +26,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.bitmask_spmm import (DEFAULT_BM, LANE, _CompilerParams,
-                                        activation_occupancy, subblock_macs)
-
-GATED_ACTS = ("swiglu", "geglu")
-ACTS = ("relu", "relu2", "gelu") + GATED_ACTS
-
-
-def _activate(h: jnp.ndarray, g: Optional[jnp.ndarray], act: str) -> jnp.ndarray:
-    """fp32 activation at the accumulator flush (same table as
-    ``models.layers._activate``, restricted to the sparse-eligible acts)."""
-    if act == "relu":
-        return jnp.maximum(h, 0.0)
-    if act == "relu2":
-        r = jnp.maximum(h, 0.0)
-        return r * r
-    if act == "gelu":
-        return jax.nn.gelu(h)
-    if act == "swiglu":
-        return jax.nn.silu(g) * h
-    if act == "geglu":
-        return jax.nn.gelu(g) * h
-    raise ValueError(act)
+from repro.kernels.bitmask_spmm import subblock_macs
+from repro.kernels.worklist_core import (  # noqa: F401  (re-exports)
+    ACTS, DEFAULT_BM, GATED_ACTS, LANE, WorkList, _CompilerParams,
+    activation_occupancy, worklist_spmm)
+from repro.kernels.worklist_core import activate as _activate
 
 
 def _kernel(*args, nsteps: int, act: str, two_sided: bool, sub_m: int,
@@ -177,3 +160,28 @@ def fused_ffn_spmm(x: jnp.ndarray, in_idx: jnp.ndarray, in_vals: jnp.ndarray,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
     )(*scalars, *operands)
+
+
+def fused_ffn_spmm_wl(x: jnp.ndarray, in_vals: jnp.ndarray, wl: WorkList,
+                      gate_vals: Optional[jnp.ndarray] = None, *, act: str,
+                      bk: int = LANE, bn: int = LANE,
+                      bm_rows: int = DEFAULT_BM,
+                      interpret: Optional[bool] = None,
+                      executor: Optional[str] = None) -> jnp.ndarray:
+    """Work-list-compacted fused FFN: ``act(x @ W_in [, x @ W_gate])``.
+
+    ``wl`` is the compacted schedule from
+    :func:`repro.kernels.worklist_core.build_worklist` — for gated acts a
+    *two-stream* list (``gate_indices`` at build time) whose slots are the
+    union of the in- and gate-projection live sets, each stream MACing in
+    its own ascending-j order so the fp32 accumulation order (and hence
+    the bits) matches the predicated :func:`fused_ffn_spmm` exactly.
+    Built at ``bm_rows = sub_m`` granularity the schedule holds exactly
+    the live (m-sub-block, k-chunk) pairs — the decode-path telescoping.
+    """
+    assert act in ACTS, act
+    gated = act in GATED_ACTS
+    assert (gate_vals is not None) == gated, (act, gate_vals is None)
+    return worklist_spmm(x, in_vals, wl, vals2=gate_vals, bk=bk, bn=bn,
+                         bm_rows=bm_rows, act=act, interpret=interpret,
+                         executor=executor)[0]

@@ -19,20 +19,22 @@ from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import bitmask as bm
 from repro.kernels import ref
-from repro.kernels.bitmask_spmm import bitmask_spmm
-from repro.kernels.fused_ffn import fused_ffn_spmm
+from repro.kernels.bitmask_spmm import bitmask_spmm, bitmask_spmm_wl
+from repro.kernels.fused_ffn import GATED_ACTS, fused_ffn_spmm, \
+    fused_ffn_spmm_wl
+from repro.kernels.worklist_core import (DEFAULT_BM, WorkList,
+                                         activation_occupancy,
+                                         build_worklist, on_tpu,
+                                         resolve_interpret,
+                                         schedule_counters, schedule_stats)
 
-
-def on_tpu() -> bool:
-    """Backend check at call time (NOT frozen at import)."""
-    return jax.default_backend() == "tpu"
-
-
-def _resolve_interpret(interpret: Optional[bool]) -> bool:
-    return (not on_tpu()) if interpret is None else interpret
+# the single call-time resolver now lives in the core; this alias keeps
+# the historical private name importable (and identical — tests pin it)
+_resolve_interpret = resolve_interpret
 
 
 def _pad_rows_k(x: jnp.ndarray, k_total: int, bm_rows: int):
@@ -133,53 +135,125 @@ def sparse_matmul_tile_stats(x: jnp.ndarray, indices: jnp.ndarray, *,
             "dense_tile_macs": dense}
 
 
-def conv_schedule_stats(patches: Optional[jnp.ndarray],
-                        indices: jnp.ndarray, *, bk: int, bm_rows: int = 128,
-                        occ: Optional[jnp.ndarray] = None,
-                        mb: Optional[int] = None
-                        ) -> Dict[str, jnp.ndarray]:
-    """Pure-jnp model of the telescoped work-list schedule (no kernel).
+# the pure-jnp schedule model is the core's now; the historical name stays
+# (autotune scoring and the vision stats path both call the shared model)
+conv_schedule_stats = schedule_stats
 
-    Predicts, at (n-block, m-block, k-chunk) grid granularity, the steps
-    the compacted schedule runs: ``live_chunk_steps`` = stored weight
-    chunk ∧ occupied activation block (the §3.2 intersection),
-    ``dead_pairs`` = (n, m) pairs with no live chunk (each degenerates to
-    one flush-only step), ``scheduled_steps`` = live + flush-only, and
-    ``dense_grid_steps`` = what the predicated dense grid schedules.
-    ``tests/test_vision.py`` pins this model to
-    :func:`repro.kernels.bitmask_spmm.build_worklist`'s actual step
-    counts, so benches can report schedule compaction without building
-    work lists in the hot loop.
 
-    Instead of ``patches`` the caller may pass the block-occupancy map
-    directly (``occ`` bool [mb, kb]) or — for the *static* pack-time
-    schedule, where every activation block counts as live — just ``mb``.
-    This is what the autotuner scores candidate tile configs with: the
-    occupancy stays O(mb * kb) per candidate instead of re-materializing
-    an O(M * K) patch matrix per (bm, bn) point.
+def _worklist_for(x2, indices, gate_indices, sub_m, bk, *,
+                  compact_activations, wl_cache):
+    """Schedule for an FFN-shaped work-list launch: ``x2`` already padded
+    to ``sub_m`` row blocks / ``k_total`` columns. Activation-compacted
+    schedules are data (eager only); static (weight-side, pack-time)
+    schedules are cached per row-block count like ``PackedConv.wl_cache``.
     """
-    if patches is not None:
-        M, K = patches.shape
-        mb, kb = M // bm_rows, K // bk
-        occ = (patches.reshape(mb, bm_rows, kb, bk) != 0).any(axis=(1, 3))
-    elif occ is not None:
-        occ = jnp.asarray(occ, bool)
-        mb, kb = occ.shape
-    else:
-        if mb is None:
-            raise ValueError("need patches, occ, or mb")
-        kb = int(jnp.max(indices) + 1) if indices.size else 1
-        occ = jnp.ones((mb, max(kb, 1)), bool)
-    nb, max_nz = indices.shape
-    valid = indices >= 0
-    safe = jnp.where(valid, indices, 0)
-    live = valid[:, None, :] & occ[:, safe].transpose(1, 0, 2)  # [nb,mb,nz]
-    live_steps = live.sum()
-    dead_pairs = (live.sum(-1) == 0).sum()
-    return {"live_chunk_steps": live_steps,
-            "dead_pairs": dead_pairs,
-            "scheduled_steps": live_steps + dead_pairs,
-            "dense_grid_steps": jnp.int32(nb * mb * max_nz)}
+    if isinstance(x2, jax.core.Tracer) or isinstance(indices, jax.core.Tracer):
+        raise ValueError(
+            "work-list FFN schedules are built on the host from concrete "
+            "indices (and, when compact_activations, concrete activations) "
+            "— eager calls only; under jit use the predicated kernels")
+    mb = x2.shape[0] // sub_m
+    gate_np = None if gate_indices is None else np.asarray(gate_indices)
+    if compact_activations:
+        occ_blk = np.asarray(activation_occupancy(x2, sub_m, bk)).astype(bool)
+        return build_worklist(np.asarray(indices), mb, occ_blk=occ_blk,
+                              gate_indices=gate_np)
+    wl = wl_cache.get(mb) if wl_cache is not None else None
+    if wl is None:
+        wl = build_worklist(np.asarray(indices), mb, gate_indices=gate_np)
+        if wl_cache is not None:
+            wl_cache[mb] = wl
+    return wl
+
+
+def _predicated_steps(M, nb, max_nz, sub_m, bm_rows=DEFAULT_BM) -> int:
+    """Sub-block predication steps the dense-grid kernel iterates for the
+    same launch: rows padded to ``bm_rows`` blocks, ``bm_rows // sub_m``
+    in-lane sub-block steps per (n, m-block, j) grid cell — the honest
+    denominator for the decode compaction factor."""
+    mb128 = -(-M // bm_rows)
+    return nb * mb128 * (bm_rows // sub_m) * max_nz
+
+
+def sparse_matmul_packed_wl(x: jnp.ndarray, indices: jnp.ndarray,
+                            vals: jnp.ndarray, *, k_total: int, bk: int,
+                            bn: int, sub_m: int = 8,
+                            compact_activations: bool = True,
+                            interpret: Optional[bool] = None,
+                            executor: Optional[str] = None,
+                            wl_cache: Optional[dict] = None,
+                            return_schedule: bool = False):
+    """Work-list-compacted ``x @ W`` from raw packed arrays.
+
+    The telescoped decode path: the schedule is built at ``sub_m``-row
+    granularity, so a decode microbatch with one live lane schedules
+    exactly its live (m-sub-block, k-chunk) pairs — where
+    :func:`sparse_matmul_packed` pads the batch to a 128-row block and
+    predicates ``128 // sub_m`` sub-block steps per scheduled tile.
+    Bit-identical to the predicated kernel (tests pin it on both
+    executors). Eager calls only (the schedule is host data); with
+    ``return_schedule`` also returns the unified schedule-counters record
+    including the compaction factor vs the predicated grid.
+    """
+    x2, lead, M = _pad_rows_k(x, k_total, sub_m)
+    wl = _worklist_for(x2, indices, None, sub_m, bk,
+                       compact_activations=compact_activations,
+                       wl_cache=wl_cache)
+    out = bitmask_spmm_wl(x2, vals, wl, bk=bk, bn=bn, bm_rows=sub_m,
+                          interpret=interpret, executor=executor)
+    out = out[:M].reshape(*lead, indices.shape[0] * bn)
+    if return_schedule:
+        pred = _predicated_steps(M, *indices.shape, sub_m)
+        return out, schedule_counters(wl, predicated_steps=pred)
+    return out
+
+
+def fused_sparse_ffn_wl(x: jnp.ndarray, in_idx: jnp.ndarray,
+                        in_vals: jnp.ndarray,
+                        gate_idx: Optional[jnp.ndarray] = None,
+                        gate_vals: Optional[jnp.ndarray] = None, *, act: str,
+                        k_total: int, bk: int, bn: int, sub_m: int = 8,
+                        compact_activations: bool = True,
+                        interpret: Optional[bool] = None,
+                        executor: Optional[str] = None,
+                        wl_cache: Optional[dict] = None,
+                        return_schedule: bool = False):
+    """Work-list-compacted fused FFN (``act(x @ W_in [, x @ W_gate])``).
+
+    The gated acts build a two-stream schedule over the *union* of the
+    in- and gate-projection live sets (chunk lists aligned on one slot
+    axis first, as in :func:`fused_sparse_ffn`). Same eager-only /
+    caching / compaction semantics as :func:`sparse_matmul_packed_wl`;
+    bit-identical to the predicated fused kernel on both executors.
+    """
+    gated = act in GATED_ACTS
+    assert (gate_idx is not None) == gated, (act, gate_idx is None)
+    if gated and in_idx.shape[1] != gate_idx.shape[1]:
+        # align the two chunk lists on one slot axis (-1 / zero-tile pad)
+        mnz = max(in_idx.shape[1], gate_idx.shape[1])
+
+        def pad_idx(i):
+            return jnp.pad(i, ((0, 0), (0, mnz - i.shape[1])),
+                           constant_values=-1)
+
+        def pad_vals(v):
+            return jnp.pad(v, ((0, 0), (0, mnz - v.shape[1]), (0, 0),
+                               (0, 0)))
+
+        in_idx, gate_idx = pad_idx(in_idx), pad_idx(gate_idx)
+        in_vals, gate_vals = pad_vals(in_vals), pad_vals(gate_vals)
+    x2, lead, M = _pad_rows_k(x, k_total, sub_m)
+    wl = _worklist_for(x2, in_idx, gate_idx if gated else None, sub_m, bk,
+                       compact_activations=compact_activations,
+                       wl_cache=wl_cache)
+    h = fused_ffn_spmm_wl(x2, in_vals, wl, gate_vals if gated else None,
+                          act=act, bk=bk, bn=bn, bm_rows=sub_m,
+                          interpret=interpret, executor=executor)
+    h = h[:M].reshape(*lead, in_idx.shape[0] * bn)
+    if return_schedule:
+        pred = _predicated_steps(M, *in_idx.shape, sub_m)
+        return h, schedule_counters(wl, predicated_steps=pred)
+    return h
 
 
 def sparse_dense_matmul_ref(x: jnp.ndarray, w: bm.BlockSparseMatrix) -> jnp.ndarray:

@@ -64,9 +64,11 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import bitmask as bm
 from repro.core.sparse import Padding, Stride, normalize_padding, \
     normalize_stride
-from repro.kernels.bitmask_spmm import (DEFAULT_BM, LANE, _CompilerParams,
-                                        ConvWorkList, activation_occupancy,
-                                        build_worklist, subblock_macs)
+from repro.kernels.bitmask_spmm import subblock_macs
+from repro.kernels.worklist_core import (  # noqa: F401  (re-exports)
+    DEFAULT_BM, LANE, _CompilerParams, ConvWorkList, activation_occupancy,
+    build_worklist, on_tpu, resolve_executor, resolve_interpret,
+    schedule_counters, segment_spmm, worklist_spmm)
 
 
 def _conv_kernel(idx_ref, occ_ref, x_ref, w_ref, *refs, nsteps: int,
@@ -136,16 +138,15 @@ def sparse_conv_spmm(patches: jnp.ndarray, indices: jnp.ndarray,
     :class:`repro.core.bitmask.BlockSparseMatrix`.
 
     ``interpret=None`` resolves from the backend at call time
-    (:func:`repro.kernels.ops._resolve_interpret`) like every other
-    kernel — compiled on TPU, interpreter elsewhere.
+    (:func:`repro.kernels.worklist_core.resolve_interpret`) like every
+    other kernel — compiled on TPU, interpreter elsewhere.
 
     Returns ``out [M, N]`` (x.dtype, fp32 accumulation, ReLU fused when
     ``fuse_relu``), plus an int32 ``[M // sub_m, n_blocks]`` occupancy map
     when ``emit_occupancy`` and an int32 ``[n_blocks, M // bm_rows]``
     executed-MAC map when ``count_macs`` (in that order).
     """
-    from repro.kernels.ops import _resolve_interpret
-    interpret = _resolve_interpret(interpret)
+    interpret = resolve_interpret(interpret)
     M, K = patches.shape
     nb, max_nz = indices.shape
     N = nb * bn
@@ -205,126 +206,6 @@ def sparse_conv_spmm(patches: jnp.ndarray, indices: jnp.ndarray,
 # ---------------------------------------------------------------------------
 # Telescoped work-list schedule (grid = the compacted list itself)
 # ---------------------------------------------------------------------------
-def _conv_wl_kernel(n_ref, m_ref, k_ref, j_ref, first_ref, last_ref, x_ref,
-                    w_ref, *refs, mb_per_img: int, sub_m: int, bm_rows: int,
-                    fuse_relu: bool, emit_occupancy: bool):
-    refs = list(refs)
-    o_ref = refs.pop(0)
-    occ_out_ref = refs.pop(0) if emit_occupancy else None
-    acc_ref = refs.pop(0)                       # (2, bm, bn): §3.3 colors
-    t = pl.program_id(0)
-    parity = (m_ref[t] // mb_per_img) % 2
-
-    @pl.when(first_ref[t] == 1)
-    def _init():
-        pl.store(acc_ref, (pl.dslice(parity, 1), slice(None), slice(None)),
-                 jnp.zeros((1,) + acc_ref.shape[1:], acc_ref.dtype))
-
-    @pl.when(k_ref[t] >= 0)
-    def _mac():
-        # a scheduled step is a live chunk by construction: one dense MXU
-        # tile MAC, nothing left to predicate in-lane
-        acc = pl.load(acc_ref, (pl.dslice(parity, 1), slice(None),
-                                slice(None)))[0]
-        acc = acc + jnp.dot(x_ref[...].astype(jnp.float32),
-                            w_ref[0, 0].astype(jnp.float32),
-                            preferred_element_type=jnp.float32)
-        pl.store(acc_ref, (pl.dslice(parity, 1), slice(None), slice(None)),
-                 acc[None])
-
-    @pl.when(last_ref[t] == 1)
-    def _flush():
-        y = pl.load(acc_ref, (pl.dslice(parity, 1), slice(None),
-                              slice(None)))[0]
-        if fuse_relu:
-            y = jnp.maximum(y, 0.0)
-        o_ref[...] = y.astype(o_ref.dtype)
-        if occ_out_ref is not None:
-            nsub = bm_rows // sub_m
-            occ_out_ref[...] = (y.reshape(nsub, sub_m, -1) != 0).any(
-                axis=(1, 2)).astype(jnp.int32).reshape(nsub, 1)
-
-
-@functools.partial(jax.jit, static_argnames=("bk", "bn", "bm_rows", "sub_m",
-                                             "mb_per_img", "nb", "fuse_relu",
-                                             "emit_occupancy", "interpret"))
-def _worklist_spmm_pallas(patches, vals, wl_n, wl_m, wl_k, wl_j, wl_first,
-                          wl_last, *, bk, bn, bm_rows, sub_m, mb_per_img, nb,
-                          fuse_relu, emit_occupancy, interpret):
-    M, K = patches.shape
-    T = wl_n.shape[0]
-    kernel = functools.partial(
-        _conv_wl_kernel, mb_per_img=mb_per_img, sub_m=sub_m, bm_rows=bm_rows,
-        fuse_relu=fuse_relu, emit_occupancy=emit_occupancy)
-    out_shape = [jax.ShapeDtypeStruct((M, nb * bn), patches.dtype)]
-    out_specs = [pl.BlockSpec((bm_rows, bn),
-                              lambda t, n, m, k, j, f, l: (m[t], n[t]))]
-    if emit_occupancy:
-        nsub = bm_rows // sub_m
-        out_shape.append(jax.ShapeDtypeStruct((M // sub_m, nb), jnp.int32))
-        out_specs.append(pl.BlockSpec(
-            (nsub, 1), lambda t, n, m, k, j, f, l: (m[t], n[t])))
-    out = pl.pallas_call(
-        kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=6,  # the flat work list
-            grid=(T,),
-            in_specs=[
-                pl.BlockSpec((bm_rows, bk),
-                             lambda t, n, m, k, j, f, l:
-                             (m[t], jnp.maximum(k[t], 0))),
-                pl.BlockSpec((1, 1, bk, bn),
-                             lambda t, n, m, k, j, f, l:
-                             (n[t], jnp.maximum(j[t], 0), 0, 0)),
-            ],
-            out_specs=out_specs,
-            scratch_shapes=[pltpu.VMEM((2, bm_rows, bn), jnp.float32)],
-        ),
-        out_shape=out_shape,
-        interpret=interpret,
-        compiler_params=_CompilerParams(
-            dimension_semantics=("arbitrary",)),
-    )(wl_n, wl_m, wl_k, wl_j, wl_first, wl_last, patches, vals)
-    return tuple(out)
-
-
-@functools.partial(jax.jit, static_argnames=("bk", "bn", "bm_rows", "sub_m",
-                                             "nb", "mb", "fuse_relu",
-                                             "emit_occupancy"))
-def _worklist_spmm_xla(patches, vals, wl_n, wl_m, wl_k, wl_j, *, bk, bn,
-                       bm_rows, sub_m, nb, mb, fuse_relu, emit_occupancy):
-    """XLA executor of the same compacted work list (non-TPU backends).
-
-    Gathers exactly the scheduled (x block, W chunk) tile pairs, runs one
-    batched GEMM over them, and segment-sums per (n, m) pair in schedule
-    order — the same fp32 accumulation order as the Pallas kernel, so the
-    outputs are bit-identical (``tests/test_vision.py`` pins this). The
-    caller passes only the *live* entries: ``segment_sum`` already yields
-    zeros for pairs with no scheduled MACs, so flush-only steps (a Pallas
-    grid necessity — its output blocks must be written) cost nothing here.
-    """
-    M, K = patches.shape
-    kb = K // bk
-    x4 = patches.reshape(mb, bm_rows, kb, bk)
-    xg = x4[wl_m, :, wl_k, :]                     # [T, bm, bk]
-    wg = vals[wl_n, wl_j]                         # [T, bk, bn]
-    prod = jax.lax.dot_general(
-        xg.astype(jnp.float32), wg.astype(jnp.float32),
-        (((2,), (1,)), ((0,), (0,))),
-        preferred_element_type=jnp.float32)       # [T, bm, bn]
-    pair = wl_n * mb + wl_m
-    acc = jax.ops.segment_sum(prod, pair, num_segments=nb * mb)
-    if fuse_relu:
-        acc = jnp.maximum(acc, 0.0)
-    out = acc.reshape(nb, mb, bm_rows, bn).transpose(1, 2, 0, 3) \
-             .reshape(M, nb * bn).astype(patches.dtype)
-    res = [out]
-    if emit_occupancy:
-        res.append((out.reshape(M // sub_m, sub_m, nb, bn) != 0)
-                   .any(axis=(1, 3)).astype(jnp.int32))
-    return tuple(res)
-
-
 @functools.partial(jax.jit, static_argnames=("bn", "bm_rows", "sub_m", "nb",
                                              "mb", "fuse_relu",
                                              "emit_occupancy"))
@@ -335,12 +216,13 @@ def _worklist_spmm_xla_slabs(slabs, vals, wl_slot, wl_m, wl_n, wl_j, *, bn,
 
     ``slabs [L, M, bk]`` holds only the K-chunks some scheduled step
     touches (:func:`extract_tap_slabs`); ``wl_slot`` maps each live step's
-    ``wl.k`` to its slab row.  From the gather on, this is op-for-op
-    :func:`_worklist_spmm_xla` — same batched GEMM, same segment-sum in
-    schedule order — so outputs stay bit-identical to the full-patch
-    executors while the dead 1 - density of the im2col blow-up is never
-    materialized (the lazy analogue of §3.2: dead *bytes*, like dead
-    steps, simply never get scheduled).
+    ``wl.k`` to its slab row.  From the gather on, this is op-for-op the
+    core XLA executor — same batched GEMM, same
+    :func:`~repro.kernels.worklist_core.segment_spmm` tail — so outputs
+    stay bit-identical to the full-patch executors while the dead
+    1 - density of the im2col blow-up is never materialized (the lazy
+    analogue of §3.2: dead *bytes*, like dead steps, simply never get
+    scheduled).
     """
     L, M, bk = slabs.shape
     x4 = slabs.reshape(L, mb, bm_rows, bk)
@@ -350,30 +232,10 @@ def _worklist_spmm_xla_slabs(slabs, vals, wl_slot, wl_m, wl_n, wl_j, *, bn,
         xg.astype(jnp.float32), wg.astype(jnp.float32),
         (((2,), (1,)), ((0,), (0,))),
         preferred_element_type=jnp.float32)       # [T, bm, bn]
-    pair = wl_n * mb + wl_m
-    acc = jax.ops.segment_sum(prod, pair, num_segments=nb * mb)
-    if fuse_relu:
-        acc = jnp.maximum(acc, 0.0)
-    out = acc.reshape(nb, mb, bm_rows, bn).transpose(1, 2, 0, 3) \
-             .reshape(M, nb * bn).astype(slabs.dtype)
-    res = [out]
-    if emit_occupancy:
-        res.append((out.reshape(M // sub_m, sub_m, nb, bn) != 0)
-                   .any(axis=(1, 3)).astype(jnp.int32))
-    return tuple(res)
-
-
-def resolve_executor(executor: Optional[str]) -> str:
-    """Work-list walker for this backend: pallas on TPU, xla on CPU (its
-    scatter-add runs in schedule order — bit-identical to the grid), the
-    pallas interpreter anywhere else (GPU scatter-adds are atomic and
-    would only promise rtol agreement, not bits)."""
-    if executor is not None:
-        return executor
-    from repro.kernels.ops import on_tpu
-    if on_tpu():
-        return "pallas"
-    return "xla" if jax.default_backend() == "cpu" else "pallas"
+    return segment_spmm(prod, wl_n * mb + wl_m, nb=nb, mb=mb,
+                        bm_rows=bm_rows, bn=bn, M=M, out_dtype=slabs.dtype,
+                        act="relu" if fuse_relu else None, sub_m=sub_m,
+                        emit_occupancy=emit_occupancy)
 
 
 def sparse_conv_spmm_wl(patches: jnp.ndarray, vals: jnp.ndarray,
@@ -386,38 +248,25 @@ def sparse_conv_spmm_wl(patches: jnp.ndarray, vals: jnp.ndarray,
                         executor: Optional[str] = None):
     """Work-list-scheduled implicit-GEMM core (the wall-clock path).
 
-    ``wl`` is the compacted schedule from
-    :func:`repro.kernels.bitmask_spmm.build_worklist`; exactly
+    A thin conv-flavored adapter over
+    :func:`repro.kernels.worklist_core.worklist_spmm`: the §3.3
+    image-parity output coloring (``ncolors=2``, keyed by ``mb_per_img``)
+    and the fused-ReLU epilogue are the only things added on top of the
+    shared walker. ``wl`` is the compacted schedule from
+    :func:`repro.kernels.worklist_core.build_worklist`; exactly
     ``wl.num_steps`` grid steps run — ``wl.mac_steps`` live-chunk MACs
     plus one flush-only step per dead (n, m) pair. ``executor`` picks the
-    backend that walks the list: ``"pallas"`` (the grid — compiled on TPU,
-    interpreter elsewhere) or ``"xla"`` (gather + batched GEMM +
-    segment-sum); ``None`` resolves per backend: pallas on TPU, xla on
-    CPU (where the scatter-add of ``segment_sum`` runs in schedule order,
-    so outputs are bit-identical across executors and vs the dense-grid
-    kernel — the property tests pin this), and the pallas interpreter on
-    any other backend, because a GPU scatter-add is atomic and would only
-    promise rtol-level agreement, not bits.
+    backend that walks the list (pallas grid or XLA gather + batched GEMM
+    + segment-sum; ``None`` resolves per backend via
+    :func:`~repro.kernels.worklist_core.resolve_executor`), with outputs
+    bit-identical across executors and vs the dense-grid kernel — the
+    property tests pin this.
     """
-    from repro.kernels.ops import _resolve_interpret
-    executor = resolve_executor(executor)
-    sub_m = bm_rows if sub_m is None else sub_m
-    M = patches.shape[0]
-    mb = M // bm_rows
-    mb_per_img = mb if mb_per_img is None else mb_per_img
-    assert wl.mb == mb, (wl.mb, mb)
-    if executor == "xla":
-        live = wl.k >= 0                  # flush-only steps are free in XLA
-        return _worklist_spmm_xla(
-            patches, vals,
-            *(jnp.asarray(a[live]) for a in (wl.n, wl.m, wl.k, wl.j)),
-            bk=bk, bn=bn, bm_rows=bm_rows, sub_m=sub_m, nb=wl.nb, mb=mb,
-            fuse_relu=fuse_relu, emit_occupancy=emit_occupancy)
-    return _worklist_spmm_pallas(
-        patches, vals, *wl.prefetch_args(), bk=bk, bn=bn, bm_rows=bm_rows,
-        sub_m=sub_m, mb_per_img=mb_per_img, nb=wl.nb, fuse_relu=fuse_relu,
-        emit_occupancy=emit_occupancy,
-        interpret=_resolve_interpret(interpret))
+    return worklist_spmm(
+        patches, vals, wl, bk=bk, bn=bn, bm_rows=bm_rows, sub_m=sub_m,
+        mb_per_img=mb_per_img, ncolors=2, act="relu" if fuse_relu else None,
+        emit_occupancy=emit_occupancy, interpret=interpret,
+        executor=executor)
 
 
 def _padded_input(x: jnp.ndarray, kh: int, kw: int, stride: Stride,
@@ -476,7 +325,6 @@ def extract_patches(x: jnp.ndarray, kh: int, kw: int, stride: Stride,
       time, like the interpret/executor knobs).
     """
     if strategy == "auto":
-        from repro.kernels.ops import on_tpu
         strategy = "patches" if on_tpu() else "slices"
     if strategy == "patches":
         sh, sw = normalize_stride(stride)
@@ -579,8 +427,7 @@ def sparse_conv2d_nhwc(x: jnp.ndarray, w: bm.BlockSparseMatrix, kh: int,
     path reuses, and — for compact schedules or ``report_schedule`` — a
     ``schedule`` dict with scheduled vs dense-grid step counts.
     """
-    from repro.kernels.ops import _resolve_interpret
-    interpret = _resolve_interpret(interpret)
+    interpret = resolve_interpret(interpret)
     if count_macs and schedule == "compact":
         # the executed-MAC counters live in the dense-grid kernel; keep
         # the promised aux["schedule"] by reporting the compact schedule
@@ -635,13 +482,9 @@ def sparse_conv2d_nhwc(x: jnp.ndarray, w: bm.BlockSparseMatrix, kh: int,
             wl = build_worklist(w.host_indices(), mb, occ_blk=occ_blk)
             if occ_blk is None and wl_cache is not None:
                 wl_cache[mb] = wl
-        aux["schedule"] = {
-            "scheduled_steps": wl.num_steps,
-            "mac_steps": wl.mac_steps,
-            "flush_only_steps": wl.flush_only_steps,
-            "dense_grid_steps": wl.dense_grid_steps,
-            "activation_compacted": occ_blk is not None,
-        }
+        aux["schedule"] = dict(
+            schedule_counters(wl),        # the unified counters record
+            activation_compacted=occ_blk is not None)
         if report_schedule:
             from repro.core.telescope import combine_schedule_requests
             # a fetch stays outstanding for ~one pair's sweep (the

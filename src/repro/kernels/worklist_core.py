@@ -1,0 +1,610 @@
+"""Unified work-list sparse GEMM core (BARISTA §3.2 telescoped scheduling).
+
+This module is the single sparse runtime under the repo's three frontends:
+
+* ``kernels.sparse_conv``   — the vision path (im2col + §3.3 coloring),
+* ``kernels.bitmask_spmm`` / ``kernels.fused_ffn`` — the LM FFN path
+  (plain and fused in-proj/activation/gate matmuls),
+* ``serve`` / ``vision`` engines — which read one unified
+  schedule-counters record instead of three per-frontend formats.
+
+The paper's central scheduling idea is that sparsity should be exploited
+by *not scheduling* dead work, not by predicating it away in-lane. The
+core owns the four pieces every frontend shares:
+
+1. :func:`build_worklist` + :class:`WorkList` — compact a packed weight
+   chunk table (optionally ∩ the activation-chunk occupancy, and
+   optionally unioned with a second *gate* weight stream for the gated
+   FFN) into the ragged-padded per-pair schedule and its flat pair-major
+   serialization.
+2. The **Pallas walker** (:func:`worklist_spmm`, ``executor="pallas"``) —
+   grid = the flat work list, one dense MXU tile MAC per scheduled step,
+   dead (n, m) pairs degenerating to flush-only steps. Parameterized by
+   stream count (1, or 2 for gated FFN), output-buffer color count
+   (2 for the conv §3.3 image-parity coloring, 1 otherwise), a fused
+   activation epilogue (``act``), and in-kernel occupancy emission.
+3. The **XLA executor** (``executor="xla"``) — gather exactly the
+   scheduled tile pairs, one batched GEMM, segment-sum per (n, m) pair
+   in schedule order: the same fp32 accumulation order as the walker, so
+   outputs are bit-identical (the property tests pin this per frontend).
+4. :func:`schedule_stats` — the pure-jnp cost model predicting exactly
+   the step counts :func:`build_worklist` schedules (pinned by tests),
+   usable under jit (serving probes) and by the autotuner's device-free
+   candidate scoring.
+
+It also owns the call-time backend resolvers (:func:`on_tpu`,
+:func:`resolve_interpret`, :func:`resolve_executor`) — previously
+duplicated between ``kernels.ops`` and ``kernels.sparse_conv`` — and the
+:func:`schedule_counters` record schema both engines report.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM = 128
+LANE = 128
+
+# jax renamed TPUCompilerParams -> CompilerParams; accept either
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
+GATED_ACTS = ("swiglu", "geglu")
+ACTS = ("relu", "relu2", "gelu") + GATED_ACTS
+
+
+# ---------------------------------------------------------------------------
+# call-time backend resolution (single source — everything imports these)
+# ---------------------------------------------------------------------------
+def on_tpu() -> bool:
+    """Backend check at call time (NOT frozen at import — the backend may
+    be initialized after this module imports, e.g. by dist mesh setup)."""
+    return jax.default_backend() == "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Pallas interpret default: compiled on TPU, interpreter elsewhere.
+    Resolved from ``jax.default_backend()`` *now*, never from an
+    import-time snapshot."""
+    return (not on_tpu()) if interpret is None else interpret
+
+
+def resolve_executor(executor: Optional[str]) -> str:
+    """Work-list walker for this backend: pallas on TPU, xla on CPU (its
+    scatter-add runs in schedule order — bit-identical to the grid), the
+    pallas interpreter anywhere else (GPU scatter-adds are atomic and
+    would only promise rtol agreement, not bits)."""
+    if executor is not None:
+        return executor
+    if on_tpu():
+        return "pallas"
+    return "xla" if jax.default_backend() == "cpu" else "pallas"
+
+
+# ---------------------------------------------------------------------------
+# activation epilogue (shared by the fused FFN kernel and both walkers)
+# ---------------------------------------------------------------------------
+def activate(h: jnp.ndarray, g: Optional[jnp.ndarray],
+             act: Optional[str]) -> jnp.ndarray:
+    """fp32 activation at the accumulator flush (same table as
+    ``models.layers._activate``, restricted to the sparse-eligible acts;
+    ``None`` is the identity epilogue)."""
+    if act is None:
+        return h
+    if act == "relu":
+        return jnp.maximum(h, 0.0)
+    if act == "relu2":
+        r = jnp.maximum(h, 0.0)
+        return r * r
+    if act == "gelu":
+        return jax.nn.gelu(h)
+    if act == "swiglu":
+        return jax.nn.silu(g) * h
+    if act == "geglu":
+        return jax.nn.gelu(g) * h
+    raise ValueError(act)
+
+
+def activation_occupancy(x: jnp.ndarray, sub_m: int, bk: int) -> jnp.ndarray:
+    """int32 [M // sub_m, K // bk] tile-occupancy of ``x`` at ``sub_m``-row
+    granularity (the activation-side skip predicate every frontend uses)."""
+    M, K = x.shape
+    return (x.reshape(M // sub_m, sub_m, K // bk, bk) != 0).any(
+        axis=(1, 3)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Telescoped work-list compaction (BARISTA §3.2 applied to the grid)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class WorkList:
+    """Compacted schedule for a chunk-block-sparse matmul grid.
+
+    The dense grid runs ``nb * mb * max_nz`` steps and *predicates* dead
+    work away inside the lane. This schedule instead enumerates, per
+    ``(n_block, m_block)`` pair, the intersection of the stored filter
+    chunk list with the activation-chunk occupancy, so dead ``k`` steps
+    are never scheduled at all. Two equivalent forms are kept:
+
+    * ``ragged_idx [nb, mb, max_live]`` + ``steps_per_pair [nb, mb]`` —
+      the ragged-padded per-pair slot lists (slot = position in the packed
+      ``vals``; -1 padded),
+    * flat arrays ``n/m/k/j/first/last [num_steps]`` — the same entries
+      serialized pair-major (n outer, m inner, live slots in j order),
+      which is what drives the Pallas grid / XLA executor. A pair with no
+      live work degenerates to a single flush-only step (``k == j == -1``)
+      so its output block is still written (zeros).
+
+    For a two-stream (gated FFN) schedule, ``k2`` carries the second
+    weight stream's chunk id per step (-1 where that stream is dead at
+    the slot); the flat slots are the *union* of the two streams' live
+    sets, so each stream MACs in its own ascending-``j`` order — the same
+    per-element fp32 accumulation order as the predicated kernel.
+
+    ``mac_steps`` counts steps with any live MAC; ``num_steps`` adds the
+    flush-only steps. The dense grid would have scheduled
+    ``dense_grid_steps`` (at this schedule's own row-block granularity).
+    """
+
+    n: np.ndarray
+    m: np.ndarray
+    k: np.ndarray
+    j: np.ndarray
+    first: np.ndarray
+    last: np.ndarray
+    ragged_idx: np.ndarray
+    steps_per_pair: np.ndarray
+    nb: int
+    mb: int
+    max_nz: int
+    k2: Optional[np.ndarray] = None
+
+    @property
+    def num_steps(self) -> int:
+        return int(self.n.shape[0])
+
+    @property
+    def num_pairs(self) -> int:
+        return self.nb * self.mb
+
+    @property
+    def live_mask(self) -> np.ndarray:
+        live = self.k >= 0
+        if self.k2 is not None:
+            live = live | (self.k2 >= 0)
+        return live
+
+    @property
+    def mac_steps(self) -> int:
+        return int(self.live_mask.sum())
+
+    @property
+    def flush_only_steps(self) -> int:
+        return self.num_steps - self.mac_steps
+
+    @property
+    def dense_grid_steps(self) -> int:
+        return self.nb * self.mb * self.max_nz
+
+    def prefetch_args(self):
+        """The flat schedule as device arrays in kernel argument order."""
+        arrs = (self.n, self.m, self.k, self.j, self.first, self.last)
+        if self.k2 is not None:
+            arrs = arrs + (self.k2,)
+        return tuple(jnp.asarray(a) for a in arrs)
+
+
+# imported under this name by the conv frontend since PR 5
+ConvWorkList = WorkList
+
+
+def _live_map(indices: np.ndarray, mb: int,
+              occ_blk: Optional[np.ndarray]) -> np.ndarray:
+    """live[n, m, j] = stored chunk j of n-block ∧ activation block
+    (m, chunk) occupied (all blocks count as occupied when ``occ_blk`` is
+    None — the static pack-time schedule)."""
+    nb, max_nz = indices.shape
+    valid = indices >= 0
+    if occ_blk is None:
+        return np.broadcast_to(valid[:, None, :], (nb, mb, max_nz))
+    occ_blk = np.asarray(occ_blk, bool)
+    assert occ_blk.shape[0] == mb, (occ_blk.shape, mb)
+    safe = np.where(valid, indices, 0)
+    return valid[:, None, :] & occ_blk[:, safe].transpose(1, 0, 2)
+
+
+def build_worklist(indices: np.ndarray, mb: int, *,
+                   occ_blk: Optional[np.ndarray] = None,
+                   gate_indices: Optional[np.ndarray] = None) -> WorkList:
+    """Compact a [nb, max_nz] chunk index table into a :class:`WorkList`.
+
+    ``indices`` is the packed weight layout's per-n-block k-chunk list (-1
+    padded) — host numpy, known at pack time. ``occ_blk`` (optional bool
+    [mb, kb]) is the activation occupancy at (row-block x chunk)
+    granularity; when given, the per-pair lists are the *intersection*
+    (two-sided compaction — data-dependent, so eager callers only).
+    ``gate_indices`` (optional, same shape) adds a second weight stream
+    sharing the slot axis (the gated FFN's aligned in/gate chunk lists):
+    the schedule is the *union* of the two streams' live sets and the
+    flat ``k``/``k2`` arrays carry each stream's chunk per step (-1 where
+    that stream is dead at the slot).
+    """
+    indices = np.asarray(indices)
+    nb, max_nz = indices.shape
+    live1 = _live_map(indices, mb, occ_blk)
+    if gate_indices is None:
+        live = live1
+    else:
+        gate_indices = np.asarray(gate_indices)
+        assert gate_indices.shape == indices.shape, \
+            (gate_indices.shape, indices.shape)
+        live2 = _live_map(gate_indices, mb, occ_blk)
+        live = live1 | live2
+    steps = live.sum(-1).astype(np.int64)                    # [nb, mb]
+    max_live = max(int(steps.max(initial=0)), 1)
+    # live slots first (stable keeps ascending j order), then -1 padding
+    order = np.argsort(~live, axis=-1, kind="stable")
+    ragged = np.where(np.arange(max_nz)[None, None, :] < steps[..., None],
+                      order, -1)[..., :max_live].astype(np.int32)
+    # flatten pair-major; dead pairs contribute one flush-only step
+    counts = np.maximum(steps, 1).reshape(-1)                # [nb*mb]
+    total = int(counts.sum())
+    pair = np.repeat(np.arange(nb * mb), counts)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    pos = np.arange(total) - starts[pair]
+    n_arr = (pair // mb).astype(np.int32)
+    m_arr = (pair % mb).astype(np.int32)
+    j_arr = ragged.reshape(nb * mb, max_live)[
+        pair, np.minimum(pos, max_live - 1)]
+    j_clip = np.maximum(j_arr, 0)
+
+    def stream_k(idx, lv):
+        hit = (j_arr >= 0) & lv[n_arr, m_arr, j_clip]
+        return np.where(hit, idx[n_arr, j_clip], -1).astype(np.int32)
+
+    k_arr = stream_k(indices, live1)
+    k2_arr = stream_k(gate_indices, live2) if gate_indices is not None \
+        else None
+    first = (pos == 0).astype(np.int32)
+    last = (pos == counts[pair] - 1).astype(np.int32)
+    return WorkList(n_arr, m_arr, k_arr, j_arr.astype(np.int32), first,
+                    last, ragged, steps.astype(np.int32), nb, mb, max_nz,
+                    k2=k2_arr)
+
+
+# ---------------------------------------------------------------------------
+# pure-jnp schedule model (no kernel launch, jit-safe — the serving probes
+# and the autotuner score with this; tests pin it to build_worklist exactly)
+# ---------------------------------------------------------------------------
+def schedule_stats(patches: Optional[jnp.ndarray], indices: jnp.ndarray, *,
+                   bk: int, bm_rows: int = DEFAULT_BM,
+                   occ: Optional[jnp.ndarray] = None,
+                   mb: Optional[int] = None,
+                   gate_indices: Optional[jnp.ndarray] = None
+                   ) -> Dict[str, jnp.ndarray]:
+    """Pure-jnp model of the telescoped work-list schedule (no kernel).
+
+    Predicts, at (n-block, m-block, k-chunk) grid granularity, the steps
+    the compacted schedule runs: ``live_chunk_steps`` = stored weight
+    chunk ∧ occupied activation block (the §3.2 intersection; the union
+    over both streams when ``gate_indices`` is given), ``dead_pairs`` =
+    (n, m) pairs with no live chunk (each degenerates to one flush-only
+    step), ``scheduled_steps`` = live + flush-only, and
+    ``dense_grid_steps`` = what the predicated dense grid schedules.
+    Pinned to :func:`build_worklist`'s actual step counts by tests, so
+    benches and serving probes report schedule compaction without
+    building work lists in the hot loop.
+
+    Instead of ``patches`` the caller may pass the block-occupancy map
+    directly (``occ`` bool [mb, kb]) or — for the *static* pack-time
+    schedule, where every activation block counts as live — just ``mb``.
+    This is what the autotuner scores candidate tile configs with: the
+    occupancy stays O(mb * kb) per candidate instead of re-materializing
+    an O(M * K) patch matrix per (bm, bn) point.
+    """
+    if patches is not None:
+        M, K = patches.shape
+        mb, kb = M // bm_rows, K // bk
+        occ = (patches.reshape(mb, bm_rows, kb, bk) != 0).any(axis=(1, 3))
+    elif occ is not None:
+        occ = jnp.asarray(occ, bool)
+        mb, kb = occ.shape
+    else:
+        if mb is None:
+            raise ValueError("need patches, occ, or mb")
+        kb = int(jnp.max(indices) + 1) if indices.size else 1
+        occ = jnp.ones((mb, max(kb, 1)), bool)
+
+    def live_of(idx):
+        valid = idx >= 0
+        safe = jnp.where(valid, idx, 0)
+        return valid[:, None, :] & occ[:, safe].transpose(1, 0, 2)
+
+    live = live_of(indices)                                  # [nb, mb, nz]
+    if gate_indices is not None:
+        live = live | live_of(gate_indices)
+    nb, max_nz = indices.shape
+    live_steps = live.sum()
+    dead_pairs = (live.sum(-1) == 0).sum()
+    return {"live_chunk_steps": live_steps,
+            "dead_pairs": dead_pairs,
+            "scheduled_steps": live_steps + dead_pairs,
+            "dense_grid_steps": jnp.int32(nb * mb * max_nz)}
+
+
+def schedule_counters(wl: WorkList, *,
+                      predicated_steps: Optional[int] = None
+                      ) -> Dict[str, float]:
+    """The unified schedule-counters record both serving layers report.
+
+    ``predicated_steps`` (optional) is the step count of the in-lane
+    predicated kernel this schedule replaces — for the FFN decode path
+    that is the dense grid at ``sub_m`` sub-block granularity over the
+    128-row-padded batch, which is what makes the decode compaction
+    factor honest about what the old kernel actually iterated.
+    """
+    rec = {"scheduled_steps": wl.num_steps,
+           "live_chunk_steps": wl.mac_steps,
+           "flush_only_steps": wl.flush_only_steps,
+           "dense_grid_steps": wl.dense_grid_steps}
+    if predicated_steps is not None:
+        rec["predicated_grid_steps"] = int(predicated_steps)
+        rec["compaction_factor"] = predicated_steps / max(wl.num_steps, 1)
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# the Pallas walker (grid = the flat work list)
+# ---------------------------------------------------------------------------
+def _walk_kernel(*args, streams: int, ncolors: int, mb_per_img: int,
+                 sub_m: int, bm_rows: int, act: Optional[str],
+                 emit_occupancy: bool):
+    args = list(args)
+    n_ref = args.pop(0)
+    m_ref = args.pop(0)
+    k_ref = args.pop(0)
+    j_ref = args.pop(0)
+    first_ref = args.pop(0)
+    last_ref = args.pop(0)
+    k2_ref = args.pop(0) if streams == 2 else None
+    x_ref, w_ref = args.pop(0), args.pop(0)
+    if streams == 2:
+        x2_ref, w2_ref = args.pop(0), args.pop(0)
+    o_ref = args.pop(0)
+    occ_out_ref = args.pop(0) if emit_occupancy else None
+    acc_ref = args.pop(0)                 # (ncolors, bm, bn): §3.3 colors
+    acc2_ref = args.pop(0) if streams == 2 else None
+    t = pl.program_id(0)
+    parity = (m_ref[t] // mb_per_img) % ncolors
+
+    def _load(ref):
+        return pl.load(ref, (pl.dslice(parity, 1), slice(None),
+                             slice(None)))[0]
+
+    def _store(ref, v):
+        pl.store(ref, (pl.dslice(parity, 1), slice(None), slice(None)),
+                 v[None])
+
+    @pl.when(first_ref[t] == 1)
+    def _init():
+        _store(acc_ref, jnp.zeros(acc_ref.shape[1:], acc_ref.dtype))
+        if acc2_ref is not None:
+            _store(acc2_ref, jnp.zeros(acc2_ref.shape[1:], acc2_ref.dtype))
+
+    @pl.when(k_ref[t] >= 0)
+    def _mac():
+        # a scheduled step is a live chunk by construction: one dense MXU
+        # tile MAC, nothing left to predicate in-lane
+        _store(acc_ref, _load(acc_ref) + jnp.dot(
+            x_ref[...].astype(jnp.float32), w_ref[0, 0].astype(jnp.float32),
+            preferred_element_type=jnp.float32))
+
+    if streams == 2:
+        @pl.when(k2_ref[t] >= 0)
+        def _mac2():
+            _store(acc2_ref, _load(acc2_ref) + jnp.dot(
+                x2_ref[...].astype(jnp.float32),
+                w2_ref[0, 0].astype(jnp.float32),
+                preferred_element_type=jnp.float32))
+
+    @pl.when(last_ref[t] == 1)
+    def _flush():
+        g = _load(acc2_ref) if acc2_ref is not None else None
+        y = activate(_load(acc_ref), g, act)
+        o_ref[...] = y.astype(o_ref.dtype)
+        if occ_out_ref is not None:
+            # next layer's activation tile bitmask: sub_m-row occupancy of
+            # the post-epilogue output tile, one column per n block
+            nsub = bm_rows // sub_m
+            occ_out_ref[...] = (y.reshape(nsub, sub_m, -1) != 0).any(
+                axis=(1, 2)).astype(jnp.int32).reshape(nsub, 1)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "streams", "bk", "bn", "bm_rows", "sub_m", "mb_per_img", "ncolors",
+    "nb", "act", "emit_occupancy", "interpret"))
+def _worklist_spmm_pallas(patches, vals, vals2, *wl_args, streams, bk, bn,
+                          bm_rows, sub_m, mb_per_img, ncolors, nb, act,
+                          emit_occupancy, interpret):
+    M, K = patches.shape
+    T = wl_args[0].shape[0]
+    S = 6 + (streams - 1)                 # prefetched schedule arrays
+    kernel = functools.partial(
+        _walk_kernel, streams=streams, ncolors=ncolors,
+        mb_per_img=mb_per_img, sub_m=sub_m, bm_rows=bm_rows, act=act,
+        emit_occupancy=emit_occupancy)
+
+    def x_spec(which):
+        return pl.BlockSpec(
+            (bm_rows, bk),
+            lambda t, n, m, k, j, f, l, *rest, _w=which:
+            (m[t], jnp.maximum((k, *rest)[_w][t], 0)))
+
+    w_spec = pl.BlockSpec((1, 1, bk, bn),
+                          lambda t, n, m, k, j, f, l, *rest:
+                          (n[t], jnp.maximum(j[t], 0), 0, 0))
+    in_specs = [x_spec(0), w_spec]
+    operands = (patches, vals)
+    scratch = [pltpu.VMEM((ncolors, bm_rows, bn), jnp.float32)]
+    if streams == 2:
+        in_specs += [x_spec(1), w_spec]
+        operands = operands + (patches, vals2)
+        scratch.append(pltpu.VMEM((ncolors, bm_rows, bn), jnp.float32))
+    out_shape = [jax.ShapeDtypeStruct((M, nb * bn), patches.dtype)]
+    out_specs = [pl.BlockSpec((bm_rows, bn),
+                              lambda t, n, m, k, j, f, l, *rest:
+                              (m[t], n[t]))]
+    if emit_occupancy:
+        nsub = bm_rows // sub_m
+        out_shape.append(jax.ShapeDtypeStruct((M // sub_m, nb), jnp.int32))
+        out_specs.append(pl.BlockSpec(
+            (nsub, 1), lambda t, n, m, k, j, f, l, *rest: (m[t], n[t])))
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=S,        # the flat work list
+            grid=(T,),
+            in_specs=in_specs,
+            out_specs=out_specs,
+            scratch_shapes=scratch,
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    )(*wl_args, *operands)
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# the XLA executor (gather scheduled pairs -> batched GEMM -> segment-sum)
+# ---------------------------------------------------------------------------
+def segment_spmm(prods, pair, *, nb, mb, bm_rows, bn, M, out_dtype,
+                 act: Optional[str], sub_m: int, emit_occupancy: bool):
+    """Shared tail of every XLA work-list executor: segment-sum the
+    per-step tile products per (n, m) pair *in schedule order* (the same
+    fp32 accumulation order as the Pallas walker — bit-identical), apply
+    the activation epilogue, and lay the pair grid back out as [M, N].
+
+    ``prods`` is one [T, bm, bn] product stream or a (stream, stream2)
+    tuple (the gated FFN's two accumulators), with ``pair`` the matching
+    segment ids (a tuple too in the two-stream case).
+    """
+    if isinstance(prods, tuple):
+        (p1, p2), (pair1, pair2) = prods, pair
+        acc = jax.ops.segment_sum(p1, pair1, num_segments=nb * mb)
+        acc2 = jax.ops.segment_sum(p2, pair2, num_segments=nb * mb)
+        acc = activate(acc, acc2, act)
+    else:
+        acc = jax.ops.segment_sum(prods, pair, num_segments=nb * mb)
+        acc = activate(acc, None, act)
+    out = acc.reshape(nb, mb, bm_rows, bn).transpose(1, 2, 0, 3) \
+             .reshape(M, nb * bn).astype(out_dtype)
+    res = [out]
+    if emit_occupancy:
+        res.append((out.reshape(M // sub_m, sub_m, nb, bn) != 0)
+                   .any(axis=(1, 3)).astype(jnp.int32))
+    return tuple(res)
+
+
+def _gather_dot(patches, vals, wl_m, wl_k, wl_n, wl_j, *, bk, bm_rows, mb):
+    """Gather exactly the scheduled (x block, W chunk) tile pairs and run
+    one batched GEMM over them — the live half of the XLA executor."""
+    M, K = patches.shape
+    kb = K // bk
+    x4 = patches.reshape(mb, bm_rows, kb, bk)
+    xg = x4[wl_m, :, wl_k, :]                     # [T, bm, bk]
+    wg = vals[wl_n, wl_j]                         # [T, bk, bn]
+    return jax.lax.dot_general(
+        xg.astype(jnp.float32), wg.astype(jnp.float32),
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)       # [T, bm, bn]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "streams", "bk", "bn", "bm_rows", "sub_m", "nb", "mb", "act",
+    "emit_occupancy"))
+def _worklist_spmm_xla(patches, vals, vals2, s1_n, s1_m, s1_k, s1_j, s2_n,
+                       s2_m, s2_k, s2_j, *, streams, bk, bn, bm_rows, sub_m,
+                       nb, mb, act, emit_occupancy):
+    """XLA executor of the compacted work list (non-TPU backends).
+
+    The caller passes only the *live* entries per stream:
+    ``segment_sum`` already yields zeros for pairs with no scheduled
+    MACs, so flush-only steps (a Pallas grid necessity — its output
+    blocks must be written) cost nothing here.
+    """
+    M, K = patches.shape
+    prod = _gather_dot(patches, vals, s1_m, s1_k, s1_n, s1_j, bk=bk,
+                       bm_rows=bm_rows, mb=mb)
+    pair = s1_n * mb + s1_m
+    if streams == 2:
+        prod2 = _gather_dot(patches, vals2, s2_m, s2_k, s2_n, s2_j, bk=bk,
+                            bm_rows=bm_rows, mb=mb)
+        pair2 = s2_n * mb + s2_m
+        return segment_spmm((prod, prod2), (pair, pair2), nb=nb,
+                            mb=mb, bm_rows=bm_rows, bn=bn, M=M,
+                            out_dtype=patches.dtype, act=act, sub_m=sub_m,
+                            emit_occupancy=emit_occupancy)
+    return segment_spmm(prod, pair, nb=nb, mb=mb, bm_rows=bm_rows, bn=bn,
+                        M=M, out_dtype=patches.dtype, act=act, sub_m=sub_m,
+                        emit_occupancy=emit_occupancy)
+
+
+def worklist_spmm(patches: jnp.ndarray, vals: jnp.ndarray, wl: WorkList, *,
+                  vals2: Optional[jnp.ndarray] = None, bk: int = LANE,
+                  bn: int = LANE, bm_rows: int = DEFAULT_BM,
+                  sub_m: Optional[int] = None,
+                  mb_per_img: Optional[int] = None, ncolors: int = 1,
+                  act: Optional[str] = None, emit_occupancy: bool = False,
+                  interpret: Optional[bool] = None,
+                  executor: Optional[str] = None):
+    """Run a compacted :class:`WorkList` schedule — the shared walker every
+    frontend dispatches to.
+
+    ``patches [M, K] @ vals`` (+ ``vals2`` for the gated second stream),
+    exactly ``wl.num_steps`` scheduled steps — ``wl.mac_steps`` live-chunk
+    MACs plus one flush-only step per dead (n, m) pair. ``executor``
+    picks the backend that walks the list (``"pallas"`` or ``"xla"``,
+    ``None`` resolves per backend via :func:`resolve_executor`); outputs
+    are bit-identical across executors (pinned per frontend).  ``ncolors``
+    > 1 enables the §3.3 output-buffer coloring keyed by image parity
+    (``mb_per_img`` row blocks per image); ``act`` is the fused
+    activation epilogue; ``emit_occupancy`` adds the in-kernel activation
+    bitmask output. Returns a tuple: ``(out [M, nb*bn][, occupancy])``.
+    """
+    executor = resolve_executor(executor)
+    streams = 2 if vals2 is not None else 1
+    assert (wl.k2 is not None) == (streams == 2), \
+        "gated executor needs a two-stream work list (gate_indices)"
+    sub_m = bm_rows if sub_m is None else sub_m
+    M = patches.shape[0]
+    mb = M // bm_rows
+    mb_per_img = mb if mb_per_img is None else mb_per_img
+    assert wl.mb == mb, (wl.mb, mb)
+    if executor == "xla":
+        def stream_args(ks):
+            live = ks >= 0                # flush-only steps are free in XLA
+            return tuple(jnp.asarray(a[live])
+                         for a in (wl.n, wl.m, ks, wl.j))
+        s1 = stream_args(wl.k)
+        s2 = stream_args(wl.k2) if streams == 2 else \
+            (jnp.zeros((0,), jnp.int32),) * 4
+        return _worklist_spmm_xla(
+            patches, vals, vals2 if vals2 is not None else vals,
+            s1[0], s1[1], s1[2], s1[3], s2[0], s2[1], s2[2], s2[3],
+            streams=streams, bk=bk, bn=bn, bm_rows=bm_rows, sub_m=sub_m,
+            nb=wl.nb, mb=mb, act=act, emit_occupancy=emit_occupancy)
+    return _worklist_spmm_pallas(
+        patches, vals, vals2 if vals2 is not None else vals,
+        *wl.prefetch_args(), streams=streams, bk=bk, bn=bn, bm_rows=bm_rows,
+        sub_m=sub_m, mb_per_img=mb_per_img, ncolors=ncolors, nb=wl.nb,
+        act=act, emit_occupancy=emit_occupancy,
+        interpret=resolve_interpret(interpret))

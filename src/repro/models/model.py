@@ -400,10 +400,13 @@ def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
     post-reset, a successor's) state while idling in the batch.
 
     ``return_ffn_stats`` (forces the unrolled period loop) additionally
-    returns the summed sparse-FFN tile-MAC stats across all blocks —
-    ``{executed, weight_tile_macs, dense_tile_macs}`` fp32 scalars, zeros
-    when the params carry no sparse leaves. Serving benches use this to
-    report the skipped-tile fraction of the live decode batch.
+    returns the summed sparse-FFN stats across all blocks — the tile-MAC
+    counts (``executed``, ``weight_tile_macs``, ``dense_tile_macs``) plus
+    the unified work-list schedule counters (``scheduled_steps``,
+    ``live_chunk_steps``, ``flush_only_steps``, ``dense_grid_steps``,
+    ``predicated_grid_steps``) — fp32 scalars, zeros when the params carry
+    no sparse leaves. Serving benches use this to report the skipped-tile
+    fraction and the decode schedule compaction of the live batch.
     """
     dtype = _dtype(cfg)
     B = token.shape[0]
@@ -444,11 +447,16 @@ def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
     head = params["lm_head"] if not cfg.tie_embeddings else params["embed"].T
     logits = (x @ head.astype(dtype)).astype(jnp.float32)
     if return_ffn_stats:
-        keys = ("executed", "weight_tile_macs", "dense_tile_macs")
         if stats_acc:
-            totals = {k: sum(s[k] for s in stats_acc) for k in keys}
+            # derive the key set from the per-block records (tile-MAC
+            # counts plus the unified work-list schedule counters) so new
+            # counters flow through without touching the aggregation
+            totals = {k: sum(s[k] for s in stats_acc)
+                      for k in stats_acc[0]}
         else:
-            totals = {k: jnp.float32(0) for k in keys}
+            totals = {k: jnp.float32(0)
+                      for k in ("executed", "weight_tile_macs",
+                                "dense_tile_macs")}
         return logits, new_cache, totals
     return logits, new_cache
 

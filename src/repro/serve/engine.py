@@ -122,8 +122,10 @@ def make_ffn_stats_fn(cfg: ModelConfig):
 
     The step's logits/cache are discarded — this probes how many
     (weight-nz chunk x activation row-sub-block) MACs the two-sided kernel
-    executes vs skips for the *current* live batch, without perturbing the
-    serving state. All-zero stats mean the params carry no sparse leaves.
+    executes vs skips for the *current* live batch, and what the
+    telescoped work-list schedule runs vs the predicated dense grid (the
+    unified schedule counters), without perturbing the serving state.
+    All-zero stats mean the params carry no sparse leaves.
     """
     def stats_step(params, cache, token, pos, active=None):
         _, _, stats = M.decode_step(params, cfg, token, cache, pos,

@@ -176,6 +176,14 @@ class Scheduler:
         — ``executed`` (two-sided), ``weight_tile_macs`` (one-sided),
         ``dense_tile_macs`` — plus the derived ``skipped_frac`` (activation
         -side skips among weight-nz MACs) and ``executed_frac`` (vs dense).
+
+        When the params carry sparse leaves the record also nests
+        ``schedule``: the unified work-list schedule-counters record (the
+        same shape :func:`repro.kernels.worklist_core.schedule_counters`
+        emits and the vision path reports), summed over every FFN launch
+        of the probed decode step, with ``compaction_factor`` — the
+        predicated-grid steps over the telescoped scheduled steps — also
+        surfaced flat as ``decode_compaction``.
         ``None`` when no slot is live or the params carry no sparse leaves.
         """
         active = self.slot_req >= 0
@@ -190,6 +198,16 @@ class Scheduler:
         stats["skipped_frac"] = 1.0 - stats["executed"] / max(
             stats["weight_tile_macs"], 1.0)
         stats["executed_frac"] = stats["executed"] / stats["dense_tile_macs"]
+        sched_keys = ("scheduled_steps", "live_chunk_steps",
+                      "flush_only_steps", "dense_grid_steps",
+                      "predicated_grid_steps")
+        if all(k in stats for k in sched_keys):
+            sched = {k: stats.pop(k) for k in sched_keys}
+            sched["compaction_factor"] = (
+                sched["predicated_grid_steps"]
+                / max(sched["scheduled_steps"], 1.0))
+            stats["schedule"] = sched
+            stats["decode_compaction"] = sched["compaction_factor"]
         return stats
 
     # -- engine ------------------------------------------------------------

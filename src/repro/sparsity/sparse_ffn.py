@@ -59,8 +59,35 @@ class SparseFFN:
     perm: np.ndarray
 
     def __call__(self, x: jnp.ndarray, *, interpret: Optional[bool] = None,
-                 sub_m: Optional[int] = None) -> jnp.ndarray:
+                 sub_m: Optional[int] = None, schedule: str = "dense",
+                 executor: Optional[str] = None,
+                 compact_activations: bool = True) -> jnp.ndarray:
+        """``schedule="dense"`` (default, jit-safe) runs the predicated
+        kernels; ``"compact"`` drives both launches from telescoped work
+        lists (eager only — the schedule is host data), bit-identical to
+        the dense grid. With ``compact_activations`` the schedules also
+        intersect the live activation sub-blocks (per-call data); without
+        it the static pack-time schedules cache on the packed matrices'
+        ``wl_cache``."""
         gate = self.w_gate
+        if schedule == "compact":
+            sub = SUB_M if sub_m is None else sub_m
+            h = ops.fused_sparse_ffn_wl(
+                x, self.w_in.indices, self.w_in.vals,
+                gate.indices if gate is not None else None,
+                gate.vals if gate is not None else None, act=self.act,
+                k_total=self.w_in.shape[0], bk=self.w_in.bk,
+                bn=self.w_in.bn, sub_m=sub, interpret=interpret,
+                executor=executor,
+                compact_activations=compact_activations,
+                wl_cache=self.w_in.wl_cache)
+            return ops.sparse_matmul_packed_wl(
+                h, self.w_out.indices, self.w_out.vals,
+                k_total=self.w_out.shape[0], bk=self.w_out.bk,
+                bn=self.w_out.bn, sub_m=sub, interpret=interpret,
+                executor=executor,
+                compact_activations=compact_activations,
+                wl_cache=self.w_out.wl_cache)
         h = ops.fused_sparse_ffn(
             x, self.w_in.indices, self.w_in.vals,
             gate.indices if gate is not None else None,
@@ -253,16 +280,41 @@ def sparsify_model(params: Dict[str, Any], cfg, *, density: float = 0.35,
 def sparse_ffn_apply(sp: Dict[str, jnp.ndarray], x: jnp.ndarray, act: str, *,
                      sub_m: Optional[int] = SUB_M,
                      interpret: Optional[bool] = None,
-                     chunk: int = bm.CHUNK) -> jnp.ndarray:
+                     chunk: int = bm.CHUNK, schedule: str = "dense",
+                     executor: Optional[str] = None,
+                     compact_activations: bool = True,
+                     wl_cache: Optional[Dict[str, dict]] = None
+                     ) -> jnp.ndarray:
     """Run one packed sparse FFN (a period slice of ``sparsify_model``
     leaves) on ``x [..., D]`` -> [..., D].
 
     Two kernel launches: the fused in-proj/activation/gate kernel, then the
     two-sided output projection fed by the activation zeros. Output columns
     are sliced back to D (the pack pads D and F to the chunk).
+
+    ``schedule="compact"`` drives both launches from telescoped work lists
+    (eager only; bit-identical to the predicated grid). The packed leaves
+    are plain jnp arrays inside jitted pytrees, so static schedules cache
+    in a caller-owned ``wl_cache`` ({"in": {...}, "out": {...}}) instead
+    of riding on the leaves.
     """
     D = x.shape[-1]
     k_in = -(-D // chunk) * chunk
+    if schedule == "compact":
+        sub = SUB_M if sub_m is None else sub_m
+        wl_cache = wl_cache if wl_cache is not None else {}
+        h = ops.fused_sparse_ffn_wl(
+            x, sp["in_indices"], sp["in_vals"], sp.get("gate_indices"),
+            sp.get("gate_vals"), act=act, k_total=k_in, bk=chunk, bn=chunk,
+            sub_m=sub, interpret=interpret, executor=executor,
+            compact_activations=compact_activations,
+            wl_cache=wl_cache.setdefault("in", {}))
+        out = ops.sparse_matmul_packed_wl(
+            h, sp["out_indices"], sp["out_vals"], k_total=h.shape[-1],
+            bk=chunk, bn=chunk, sub_m=sub, interpret=interpret,
+            executor=executor, compact_activations=compact_activations,
+            wl_cache=wl_cache.setdefault("out", {}))
+        return out[..., :D]
     h = ops.fused_sparse_ffn(
         x, sp["in_indices"], sp["in_vals"], sp.get("gate_indices"),
         sp.get("gate_vals"), act=act, k_total=k_in, bk=chunk, bn=chunk,
@@ -281,6 +333,14 @@ def sparse_ffn_tile_stats(sp: Dict[str, jnp.ndarray], x: jnp.ndarray,
     ``tests/test_kernels.py``). Sums the in-, gate- and out-projections;
     the hidden tensor is reconstructed via the dense oracle so the
     out-projection stats see the true activation zeros.
+
+    Also carries the unified work-list schedule counters for the same two
+    launches (the core's :func:`~repro.kernels.worklist_core.schedule_stats`
+    model at ``sub_m``-row granularity, jit-safe): ``scheduled_steps`` /
+    ``live_chunk_steps`` / ``flush_only_steps`` / ``dense_grid_steps``
+    plus ``predicated_grid_steps`` — the in-lane sub-block steps the
+    predicated kernels iterate for the same batch, the denominator of the
+    serving probe's decode compaction factor.
     """
     D = x.shape[-1]
     k_in = -(-D // chunk) * chunk
@@ -314,4 +374,30 @@ def sparse_ffn_tile_stats(sp: Dict[str, jnp.ndarray], x: jnp.ndarray,
     s = ops.sparse_matmul_tile_stats(h, sp["out_indices"],
                                      k_total=h.shape[-1], bk=chunk,
                                      sub_m=sub_m)
-    return {k: totals[k] + s[k] for k in totals}
+    totals = {k: totals[k] + s[k] for k in totals}
+
+    # unified work-list schedule counters for the same two launches (the
+    # fused in/gate launch shares one slot axis -> one schedule)
+    sub = SUB_M if sub_m is None else sub_m
+
+    def occ_of(t):
+        flat = t.reshape(-1, t.shape[-1])
+        pad = (-flat.shape[0]) % sub
+        flat = jnp.pad(flat, ((0, pad), (0, 0)))
+        return ops.activation_occupancy(flat, sub, chunk).astype(bool)
+
+    s_in = ops.schedule_stats(None, sp["in_indices"], bk=chunk,
+                              occ=occ_of(xp),
+                              gate_indices=sp.get("gate_indices"))
+    s_out = ops.schedule_stats(None, sp["out_indices"], bk=chunk,
+                               occ=occ_of(h))
+    M = int(np.prod(x.shape[:-1]))
+    pred = (ops._predicated_steps(M, *sp["in_indices"].shape, sub)
+            + ops._predicated_steps(M, *sp["out_indices"].shape, sub))
+    for key, src in (("scheduled_steps", "scheduled_steps"),
+                     ("live_chunk_steps", "live_chunk_steps"),
+                     ("flush_only_steps", "dead_pairs"),
+                     ("dense_grid_steps", "dense_grid_steps")):
+        totals[key] = (s_in[src] + s_out[src]).astype(jnp.float32)
+    totals["predicated_grid_steps"] = jnp.float32(pred)
+    return totals

@@ -99,6 +99,29 @@ class VisionEngine:
         self.done_at: Dict[int, int] = {}
         self.stats = VisionStats()
 
+    def schedule_counters(self) -> Optional[Dict[str, float]]:
+        """The unified schedule-counters record for the compiled pipeline.
+
+        Sums each layer's static (pack-time) telescoped work list — cached
+        on ``PackedConv.wl_cache`` when the whole-net jit traced — into the
+        same record shape the LM scheduler's ``probe_ffn_stats`` nests
+        under ``"schedule"`` (:func:`repro.kernels.worklist_core.
+        schedule_counters`): ``scheduled_steps`` / ``live_chunk_steps`` /
+        ``flush_only_steps`` / ``dense_grid_steps`` plus the derived
+        ``grid_compaction``. ``None`` before the first compile (no work
+        lists built yet).
+        """
+        from repro.kernels.worklist_core import schedule_counters
+        records = [schedule_counters(wl)
+                   for layer in self.model.layers
+                   for wl in layer.conv.wl_cache.values()]
+        if not records:
+            return None
+        tot = {k: float(sum(r[k] for r in records)) for k in records[0]}
+        tot["grid_compaction"] = 1.0 - (tot["scheduled_steps"]
+                                        / max(tot["dense_grid_steps"], 1.0))
+        return tot
+
     # -- queue -------------------------------------------------------------
     def submit(self, req: ImageRequest) -> None:
         img = np.asarray(req.image, np.float32)

@@ -254,7 +254,7 @@ def forward(model: VisionModel, x: jnp.ndarray, *, sub_m: int = 8,
             sched = aux["schedule"]
             stats.append({
                 "scheduled_steps": sched["scheduled_steps"],
-                "live_chunk_steps": sched["mac_steps"],
+                "live_chunk_steps": sched["live_chunk_steps"],
                 "flush_only_steps": sched["flush_only_steps"],
                 "dense_grid_steps": sched["dense_grid_steps"],
                 "static_scheduled_steps": sched["static_scheduled_steps"],

@@ -189,22 +189,27 @@ def test_sparse_conv_spmm_interpret_default_routes_through_resolver(
     """Satellite regression: ``sparse_conv_spmm`` used to hardcode
     ``interpret=True``, silently pinning direct spmm callers (and the
     bench's kernel-level path) to interpret mode even on TPU. Its default
-    must be None and resolve through ``ops._resolve_interpret`` like
-    every other kernel."""
+    must be None and resolve through the core's single call-time
+    resolver (``worklist_core.resolve_interpret``) like every other
+    kernel."""
     import inspect
 
-    from repro.kernels import sparse_conv
+    from repro.kernels import sparse_conv, worklist_core
+
+    # the dedupe satellite: one resolver object, shared everywhere
+    assert sparse_conv.resolve_interpret is worklist_core.resolve_interpret
+    assert ops._resolve_interpret is worklist_core.resolve_interpret
 
     sig = inspect.signature(sparse_conv.sparse_conv_spmm.__wrapped__)
     assert sig.parameters["interpret"].default is None
     seen = []
-    real = ops._resolve_interpret
+    real = worklist_core.resolve_interpret
 
     def spy(v):
         seen.append(v)
         return real(v)
 
-    monkeypatch.setattr(ops, "_resolve_interpret", spy)
+    monkeypatch.setattr(sparse_conv, "resolve_interpret", spy)
     w = _sparse(rng, (128, 128), 0.5)
     ws = bm.block_sparsify(w)
     x = jnp.asarray(_sparse(rng, (128 + 128, 128), 0.5))  # fresh jit shape

@@ -1,0 +1,207 @@
+"""The unified work-list GEMM core: schedule exactness, bitwise identity
+of the compacted FFN paths with the predicated kernels on both executors,
+the pure-jnp schedule model pinned to the real builder, and the call-time
+backend resolvers shared by every frontend."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_stubs import given, settings, st
+
+from repro.core import bitmask as bm
+from repro.kernels import ops
+from repro.kernels import worklist_core as wc
+
+
+def _sparse(rng, shape, density, dtype=np.float32):
+    x = rng.normal(size=shape).astype(dtype)
+    x[rng.random(shape) >= density] = 0
+    return x
+
+
+# ---------------------------------------------------------------------------
+# schedule exactness: one live decode lane schedules its pairs, nothing else
+# ---------------------------------------------------------------------------
+def test_single_live_lane_schedules_exactly_live_pairs(rng):
+    """A decode batch with ONE live 8-row lane must schedule exactly the
+    live (m-sub-block, k-chunk) pairs — not the dense grid. This is the
+    tentpole invariant: the work list telescopes dead work out of the
+    schedule instead of predicating it inside the lane."""
+    K, F, sub_m = 256, 256, 8
+    ws = bm.block_sparsify(_sparse(rng, (K, F), 0.5))
+    x = np.zeros((32, K), np.float32)
+    x[:sub_m] = rng.normal(size=(sub_m, K)).astype(np.float32)  # 1 live lane
+
+    occ = np.asarray(wc.activation_occupancy(
+        jnp.asarray(x), sub_m, ws.bk)).astype(bool)
+    wl = wc.build_worklist(ws.host_indices(), x.shape[0] // sub_m,
+                           occ_blk=occ)
+    idx = ws.host_indices()
+    live_pairs = int(sum(occ[m, idx[n, j]]
+                         for n in range(idx.shape[0])
+                         for m in range(occ.shape[0])
+                         for j in range(idx.shape[1]) if idx[n, j] >= 0))
+    dead_pairs = wl.num_pairs - int(
+        (np.asarray(wl.steps_per_pair) > 0).sum())
+    assert wl.mac_steps == live_pairs
+    assert wl.num_steps == live_pairs + dead_pairs
+    assert wl.num_steps < wl.dense_grid_steps
+    # one live lane out of 4 row blocks: at most 1/4 of the dense grid
+    # carries MACs
+    assert wl.mac_steps * 4 <= wl.dense_grid_steps
+
+
+def test_dead_pair_degenerates_to_single_flush_step(rng):
+    """A (n, m) pair with no live chunk still flushes its (zero) output
+    block exactly once — k == j == -1, first == last == 1."""
+    ws = bm.block_sparsify(_sparse(rng, (256, 128), 0.6))
+    occ = np.zeros((2, 2), bool)          # every activation block dead
+    wl = wc.build_worklist(ws.host_indices(), 2, occ_blk=occ)
+    assert wl.num_steps == wl.num_pairs
+    assert (np.asarray(wl.k) == -1).all()
+    assert (np.asarray(wl.first) == 1).all()
+    assert (np.asarray(wl.last) == 1).all()
+
+
+# ---------------------------------------------------------------------------
+# bitwise identity with the predicated kernels, both executors
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("executor", ["pallas", "xla"])
+@pytest.mark.parametrize("act", ["relu2", "swiglu"])
+def test_ffn_wl_bitwise_equals_predicated(rng, act, executor):
+    K, F = 256, 256
+    gated = act in wc.GATED_ACTS
+    x = _sparse(rng, (12, K), 0.5)
+    x[4:8] = 0.0                           # a dead sub-block lane
+    w_in = bm.block_sparsify(_sparse(rng, (K, F), 0.4))
+    g_idx = g_vals = None
+    if gated:
+        w_g = bm.block_sparsify(_sparse(rng, (K, F), 0.4))
+        g_idx, g_vals = w_g.indices, w_g.vals
+    pred = ops.fused_sparse_ffn(jnp.asarray(x), w_in.indices, w_in.vals,
+                                g_idx, g_vals, act=act, k_total=K, bk=128,
+                                bn=128, sub_m=8)
+    got = ops.fused_sparse_ffn_wl(jnp.asarray(x), w_in.indices, w_in.vals,
+                                  g_idx, g_vals, act=act, k_total=K, bk=128,
+                                  bn=128, sub_m=8, executor=executor)
+    assert (np.asarray(pred) == np.asarray(got)).all()
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.05, 1.0),
+       st.floats(0.05, 1.0))
+@settings(max_examples=12, deadline=None)
+def test_ffn_wl_bitwise_property(seed, w_density, x_density):
+    """Property: over random weight/activation densities the work-list
+    FFN is bitwise-equal to the predicated kernel on both executors."""
+    rng = np.random.default_rng(seed)
+    K, F = 128, 256
+    x = _sparse(rng, (16, K), x_density)
+    ws = bm.block_sparsify(_sparse(rng, (K, F), w_density))
+    pred = ops.fused_sparse_ffn(jnp.asarray(x), ws.indices, ws.vals,
+                                act="relu2", k_total=K, bk=128, bn=128,
+                                sub_m=8)
+    for executor in ("pallas", "xla"):
+        got = ops.fused_sparse_ffn_wl(jnp.asarray(x), ws.indices, ws.vals,
+                                      act="relu2", k_total=K, bk=128,
+                                      bn=128, sub_m=8, executor=executor)
+        assert (np.asarray(pred) == np.asarray(got)).all(), executor
+
+
+def test_wl_requires_eager(rng):
+    """The schedule is host data: building it from tracers must raise."""
+    import jax
+    ws = bm.block_sparsify(_sparse(rng, (128, 128), 0.5))
+
+    @jax.jit
+    def f(x):
+        return ops.sparse_matmul_packed_wl(x, ws.indices, ws.vals,
+                                           k_total=128, bk=128, bn=128)
+
+    with pytest.raises(ValueError, match="eager"):
+        f(jnp.zeros((8, 128), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# the pure-jnp schedule model is pinned to the real builder
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("gated", [False, True])
+@pytest.mark.parametrize("x_density", [0.0, 0.3, 1.0])
+def test_schedule_stats_pinned_to_build_worklist(rng, gated, x_density):
+    """``schedule_stats`` (what serving probes and the autotuner score
+    with, no kernel launch) must predict exactly what ``build_worklist``
+    schedules — FFN shapes, one- and two-stream."""
+    K, F, sub_m = 256, 384, 8
+    x = _sparse(rng, (24, K), x_density)
+    ws = bm.block_sparsify(_sparse(rng, (K, F), 0.35))
+    gs = bm.block_sparsify(_sparse(rng, (K, F), 0.35),
+                           pad_to=ws.max_nz) if gated else None
+    if gated and ws.max_nz < gs.max_nz:
+        ws = bm.block_sparsify(np.asarray(bm.block_densify(ws)),
+                               pad_to=gs.max_nz)
+    occ = np.asarray(wc.activation_occupancy(
+        jnp.asarray(x), sub_m, ws.bk)).astype(bool)
+    wl = wc.build_worklist(ws.host_indices(), occ.shape[0], occ_blk=occ,
+                           gate_indices=gs.host_indices() if gated
+                           else None)
+    stats = wc.schedule_stats(jnp.asarray(x), ws.indices, bk=ws.bk,
+                              bm_rows=sub_m,
+                              gate_indices=gs.indices if gated else None)
+    assert int(stats["live_chunk_steps"]) == wl.mac_steps
+    assert int(stats["scheduled_steps"]) == wl.num_steps
+    assert int(stats["dead_pairs"]) == wl.flush_only_steps
+    assert int(stats["dense_grid_steps"]) == wl.dense_grid_steps
+
+
+def test_schedule_counters_record_shape(rng):
+    """One record shape for every serving layer: the keys the vision aux
+    carries, the LM probe nests, and the bench gate checks."""
+    ws = bm.block_sparsify(_sparse(rng, (256, 128), 0.5))
+    wl = wc.build_worklist(ws.host_indices(), 4)
+    rec = wc.schedule_counters(wl, predicated_steps=64)
+    assert set(rec) == {"scheduled_steps", "live_chunk_steps",
+                        "flush_only_steps", "dense_grid_steps",
+                        "predicated_grid_steps", "compaction_factor"}
+    assert rec["scheduled_steps"] == (rec["live_chunk_steps"]
+                                      + rec["flush_only_steps"])
+    assert rec["compaction_factor"] == 64 / wl.num_steps
+
+
+# ---------------------------------------------------------------------------
+# one resolver, resolved at call time, everywhere
+# ---------------------------------------------------------------------------
+def test_resolvers_single_source():
+    """The dedupe satellite: every frontend binds the core's resolver
+    objects — no module keeps a private copy that could drift."""
+    import importlib
+
+    from repro.kernels import sparse_conv as sc
+
+    # the package re-exports the kernel *function* under this name, so go
+    # through the module registry for the module object itself
+    bms = importlib.import_module("repro.kernels.bitmask_spmm")
+
+    assert ops._resolve_interpret is wc.resolve_interpret
+    assert ops.on_tpu is wc.on_tpu
+    assert sc.resolve_interpret is wc.resolve_interpret
+    assert sc.resolve_executor is wc.resolve_executor
+    assert sc.on_tpu is wc.on_tpu
+    assert bms.build_worklist is wc.build_worklist
+    assert bms.ConvWorkList is wc.WorkList
+
+
+def test_resolvers_track_backend_after_import(monkeypatch):
+    """Backend/flag changes after import must take effect: the resolvers
+    read ``jax.default_backend()`` per call, never an import-time
+    snapshot."""
+    import jax
+
+    assert wc.resolve_interpret(None) is True        # CPU host
+    assert wc.resolve_executor(None) == "xla"
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert wc.on_tpu()
+    assert wc.resolve_interpret(None) is False       # compiled on TPU
+    assert wc.resolve_executor(None) == "pallas"
+    monkeypatch.setattr(jax, "default_backend", lambda: "gpu")
+    assert wc.resolve_interpret(None) is True        # interpreter on GPU
+    assert wc.resolve_executor(None) == "pallas"     # bitwise-safe walker
+    assert wc.resolve_interpret(False) is False      # explicit wins
+    assert wc.resolve_executor("xla") == "xla"
