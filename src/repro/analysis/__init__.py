@@ -1,0 +1,41 @@
+"""Static-analysis subsystem: artifact verifier + JAX/Pallas AST lint.
+
+Two device-free halves, one diagnostics vocabulary:
+
+* :mod:`repro.analysis.verify` — a pure-numpy checker over the engine's
+  packed artifacts (:class:`~repro.kernels.worklist_core.WorkList`,
+  :class:`~repro.core.bitmask.BlockSparseMatrix`,
+  :class:`~repro.sparsity.conv.PackedConv`, the ``sparsify_model`` FFN
+  leaves) proving the §3.2–§4 structural invariants the kernels assume —
+  no dead steps scheduled, pair-major flat schedules, true permutation
+  folds, bitmask ↔ value consistency, fresh work-list caches, VMEM-legal
+  tuned configs — and returning structured diagnostics instead of
+  asserting.
+* :mod:`repro.analysis.astlint` (+ :mod:`repro.analysis.rules`) — a
+  custom ``ast`` pass over the source tree catching the repo's known
+  JAX/Pallas failure modes (``pallas_call`` without call-time interpret
+  resolution, ``interpret=True`` literals, host ``np.`` on traced values,
+  unguarded eager-only schedule builders, cache mutation outside the
+  invalidating setters, non-hashable jit static args).
+
+Both run from ``python -m repro.analysis.lint`` (the CI gate), and the
+verifier is additionally wired into pack time
+(``build_sparse_chain``/``sparsify_model`` ``strict=``) and admission
+(:class:`~repro.vision.engine.VisionEngine`,
+:class:`~repro.serve.scheduler.Scheduler`).
+"""
+from repro.analysis.diagnostics import (AnalysisError, Diagnostic, Severity,
+                                        has_errors, raise_on_errors,
+                                        render_github, render_text)
+from repro.analysis.verify import (verify_artifact, verify_block_sparse,
+                                   verify_chain, verify_ffn_leaves,
+                                   verify_model, verify_packed_conv,
+                                   verify_sparse_ffn, verify_worklist)
+
+__all__ = [
+    "AnalysisError", "Diagnostic", "Severity", "has_errors",
+    "raise_on_errors", "render_github", "render_text",
+    "verify_artifact", "verify_block_sparse", "verify_chain",
+    "verify_ffn_leaves", "verify_model", "verify_packed_conv",
+    "verify_sparse_ffn", "verify_worklist",
+]

@@ -1,0 +1,11 @@
+"""AST lint rules.
+
+Each rule is a function ``(module: ast.Module, ctx: FileContext) ->
+List[Diagnostic]`` registered in :data:`ALL_RULES`.  Rules encode the
+repo's *known* JAX/Pallas failure modes — each one is a bug class that
+has a concrete mechanism here (frozen interpret decisions, host math on
+tracers, stale jit caches), not a style preference.
+"""
+from repro.analysis.rules.jax_rules import ALL_RULES, FileContext
+
+__all__ = ["ALL_RULES", "FileContext"]

@@ -1,0 +1,361 @@
+"""The JAX/Pallas failure-mode rules.
+
+Every rule here maps to a bug class this codebase has a concrete
+mechanism for:
+
+* **Frozen backend decisions.**  ``resolve_interpret``/``resolve_executor``
+  exist so the interpret-vs-TPU choice is made per *call*, never baked in
+  at import or def time.  A literal ``interpret=True`` (or a ``True``
+  default on an ``interpret`` parameter) silently pins the interpreter on
+  TPU — or un-runnable compiled mode on CPU — for every caller that takes
+  the default.
+* **Host math on traced values.**  ``np.asarray``/``.tolist()``/``int()``
+  on a traced array raises ``TracerArrayConversionError`` at trace time —
+  but only on the first call with a new shape, so it ships latent.
+* **Eager-only schedule builders.**  ``build_worklist`` is host-side by
+  design (§3.2 telescoping needs concrete occupancy); anything calling it
+  on data that may be traced must carry the explicit Tracer guard so the
+  failure is a clear error, not a leaked tracer.
+* **Stale jit caches.**  ``PackedConv.tuned``/``packed`` and the
+  ``wl_cache``/``_fwd_cache`` dicts feed jit static args; mutating them
+  outside the invalidating setters (``autotune_conv``/``autotune_model``)
+  leaves compiled functions executing against the old packing.
+* **Unhashable jit statics.**  A mutable default on a static argname
+  raises at call time, in whichever caller first takes the default.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Set
+
+from repro.analysis.diagnostics import Diagnostic, Severity, diag, register
+
+E, W = Severity.ERROR, Severity.WARNING
+
+register("PL-INTERP-LITERAL", E, "interpret= passed as a bool literal "
+         "instead of flowing through resolve_interpret", "ci")
+register("PL-INTERP-DEFAULT", E, "interpret parameter defaults to a bool "
+         "literal instead of None (call-time resolution)", "ci")
+register("PL-NO-INTERPRET", E, "pallas_call without an interpret= kwarg "
+         "(backend choice frozen at trace time)", "ci")
+register("HOST-TRACED-NP", E, "host-side np.asarray/.tolist()/int() on a "
+         "parameter of a jit-compiled function", "ci")
+register("EAGER-GUARD", E, "eager-only schedule builder reachable without "
+         "an explicit Tracer guard", "ci")
+register("CACHE-MUTATE", E, "jit-feeding cache (tuned/packed/wl_cache/"
+         "_fwd_cache/indices_np) mutated outside the invalidating "
+         "setters", "ci")
+register("JIT-STATIC-NONHASH", E, "jit static argname with an unhashable "
+         "(mutable) default", "ci")
+register("LINT-SUPPRESS", W, "suppression comment without a justifying "
+         "reason", "ci")
+
+#: Modules allowed to write the jit-feeding caches: the invalidating
+#: setters themselves.  Matched as path suffixes.
+CACHE_WRITER_ALLOWLIST = (
+    "kernels/autotune.py",    # autotune_conv/autotune_model invalidate
+    "core/bitmask.py",        # host_indices() materializes its own copy
+    "vision/model.py",        # compile_forward owns _fwd_cache
+)
+
+#: Attributes whose assignment re-keys or must invalidate a jit cache.
+CACHE_ATTRS = ("tuned", "packed", "indices_np")
+#: Dict-valued caches: subscript-assign / .clear() / .pop() are writes.
+CACHE_DICTS = ("wl_cache", "_fwd_cache")
+
+#: Host-side schedule builders (eager-only by design).
+EAGER_BUILDERS = ("build_worklist",)
+
+
+@dataclasses.dataclass
+class FileContext:
+    """Per-file lint state: path, source, and suppression table."""
+    path: str                 # repo-relative, for diagnostics
+    source: str
+    suppressions: Dict[int, Set[str]] = dataclasses.field(
+        default_factory=dict)  # line -> rule ids ("*" = all)
+    bad_suppressions: List[int] = dataclasses.field(default_factory=list)
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        for ln in (line, line - 1):
+            ids = self.suppressions.get(ln)
+            if ids and (rule in ids or "*" in ids):
+                return True
+        return False
+
+
+def _fdiag(rule: str, ctx: FileContext, node: ast.AST, message: str, *,
+           hint: str) -> Optional[Diagnostic]:
+    line = getattr(node, "lineno", 1)
+    if ctx.suppressed(rule, line):
+        return None
+    return diag(rule, f"{ctx.path}:{line}", message, hint=hint)
+
+
+def _is_bool_literal(node: Optional[ast.AST]) -> bool:
+    return isinstance(node, ast.Constant) and isinstance(node.value, bool)
+
+
+def _dotted(node: ast.AST) -> str:
+    """Best-effort dotted name: jax.core.Tracer -> 'jax.core.Tracer'."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _walk_functions(tree: ast.Module):
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def _jit_static_argnames(fn: ast.FunctionDef) -> Optional[Set[str]]:
+    """If ``fn`` is jit-decorated, the static argnames (best effort);
+    None when not jit-decorated."""
+    for dec in fn.decorator_list:
+        d = dec
+        if isinstance(d, ast.Call):
+            name = _dotted(d.func)
+            if name.endswith("jit"):
+                return _extract_statics(d)
+            if name in ("functools.partial", "partial") and d.args and \
+                    _dotted(d.args[0]).endswith("jit"):
+                return _extract_statics(d)
+        elif _dotted(d).endswith("jit"):
+            return set()
+    return None
+
+
+def _extract_statics(call: ast.Call) -> Set[str]:
+    out: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames" and \
+                isinstance(kw.value, (ast.Tuple, ast.List)):
+            for el in kw.value.elts:
+                if isinstance(el, ast.Constant) and isinstance(el.value,
+                                                               str):
+                    out.add(el.value)
+        elif kw.arg == "static_argnames" and \
+                isinstance(kw.value, ast.Constant) and \
+                isinstance(kw.value.value, str):
+            out.add(kw.value.value)
+    return out
+
+
+def _params(fn: ast.FunctionDef) -> List[ast.arg]:
+    a = fn.args
+    return [*a.posonlyargs, *a.args, *a.kwonlyargs]
+
+
+def _param_defaults(fn: ast.FunctionDef):
+    """Yield (arg, default) pairs, positional then keyword-only."""
+    a = fn.args
+    pos = [*a.posonlyargs, *a.args]
+    for arg, default in zip(pos[len(pos) - len(a.defaults):], a.defaults):
+        yield arg, default
+    for arg, default in zip(a.kwonlyargs, a.kw_defaults):
+        if default is not None:
+            yield arg, default
+
+
+# ---------------------------------------------------------------------------
+# rules
+# ---------------------------------------------------------------------------
+def rule_interpret_literal(tree: ast.Module, ctx: FileContext
+                           ) -> List[Diagnostic]:
+    """PL-INTERP-LITERAL + PL-NO-INTERPRET on every call site."""
+    out: List[Diagnostic] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = _dotted(node.func)
+        kwargs = {kw.arg: kw.value for kw in node.keywords if kw.arg}
+        if "interpret" in kwargs and _is_bool_literal(kwargs["interpret"]):
+            d = _fdiag(
+                "PL-INTERP-LITERAL", ctx, node,
+                f"{callee or 'call'}(interpret="
+                f"{kwargs['interpret'].value}) pins the backend at the "
+                f"call site",
+                hint="thread an Optional[bool] through and resolve with "
+                     "resolve_interpret(interpret) at call time")
+            if d:
+                out.append(d)
+        if callee.endswith("pallas_call") and "interpret" not in kwargs:
+            d = _fdiag(
+                "PL-NO-INTERPRET", ctx, node,
+                "pallas_call without interpret= always compiles for the "
+                "accelerator",
+                hint="pass interpret=resolve_interpret(interpret) so CPU "
+                     "CI runs the interpreter")
+            if d:
+                out.append(d)
+    return out
+
+
+def rule_interpret_default(tree: ast.Module, ctx: FileContext
+                           ) -> List[Diagnostic]:
+    """PL-INTERP-DEFAULT on every def with interpret=<bool literal>."""
+    out: List[Diagnostic] = []
+    for fn in _walk_functions(tree):
+        for arg, default in _param_defaults(fn):
+            if arg.arg == "interpret" and _is_bool_literal(default):
+                d = _fdiag(
+                    "PL-INTERP-DEFAULT", ctx, fn,
+                    f"{fn.name}() defaults interpret={default.value} — "
+                    f"the backend choice is frozen at def time",
+                    hint="default to None and call "
+                         "resolve_interpret(interpret) in the body "
+                         "(resolves per call: interpreter off-TPU, "
+                         "compiled on TPU)")
+                if d:
+                    out.append(d)
+    return out
+
+
+_NP_HOST_FNS = ("np.asarray", "np.array", "numpy.asarray", "numpy.array")
+
+
+def rule_host_traced_np(tree: ast.Module, ctx: FileContext
+                        ) -> List[Diagnostic]:
+    """HOST-TRACED-NP: host conversions applied to non-static parameters
+    inside jit-compiled functions."""
+    out: List[Diagnostic] = []
+    for fn in _walk_functions(tree):
+        statics = _jit_static_argnames(fn)
+        if statics is None:
+            continue
+        traced = {a.arg for a in _params(fn)} - statics - {"self"}
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = _dotted(node.func)
+            bad = None
+            if callee in _NP_HOST_FNS + ("int", "float", "bool") and \
+                    node.args and isinstance(node.args[0], ast.Name) and \
+                    node.args[0].id in traced:
+                bad = f"{callee}({node.args[0].id})"
+            elif isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in ("tolist", "item") and \
+                    isinstance(node.func.value, ast.Name) and \
+                    node.func.value.id in traced:
+                bad = f"{node.func.value.id}.{node.func.attr}()"
+            if bad:
+                d = _fdiag(
+                    "HOST-TRACED-NP", ctx, node,
+                    f"{bad} inside jit-compiled {fn.name}() — raises "
+                    f"TracerArrayConversionError at trace time",
+                    hint="keep the value on device (jnp), or hoist the "
+                         "host math out of the jitted function")
+                if d:
+                    out.append(d)
+    return out
+
+
+def rule_eager_guard(tree: ast.Module, ctx: FileContext
+                     ) -> List[Diagnostic]:
+    """EAGER-GUARD: a function that invokes a host-side schedule builder
+    on data flowing from its own parameters must carry an explicit
+    ``Tracer`` guard (so jitted callers fail with a clear error)."""
+    out: List[Diagnostic] = []
+    for fn in _walk_functions(tree):
+        if not _params(fn):
+            continue
+        builder_call = None
+        has_guard = False
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) and \
+                    _dotted(node.func).split(".")[-1] in EAGER_BUILDERS:
+                builder_call = node
+            if isinstance(node, (ast.Name, ast.Attribute)) and \
+                    _dotted(node).endswith("Tracer"):
+                has_guard = True
+        # the builder's own definition doesn't need a guard
+        if builder_call is None or fn.name in EAGER_BUILDERS or has_guard:
+            continue
+        d = _fdiag(
+            "EAGER-GUARD", ctx, builder_call,
+            f"{fn.name}() builds a host-side work list with no Tracer "
+            f"guard — under jit this leaks a tracer into numpy",
+            hint="raise ValueError on isinstance(x, jax.core.Tracer) "
+                 "first (see ops._worklist_for), or move the build to "
+                 "pack time")
+        if d:
+            out.append(d)
+    return out
+
+
+def rule_cache_mutate(tree: ast.Module, ctx: FileContext
+                      ) -> List[Diagnostic]:
+    """CACHE-MUTATE: writes to the jit-feeding caches outside the
+    allowlisted invalidating setters."""
+    if any(ctx.path.endswith(sfx) for sfx in CACHE_WRITER_ALLOWLIST):
+        return []
+    out: List[Diagnostic] = []
+
+    def flag(node, what):
+        d = _fdiag(
+            "CACHE-MUTATE", ctx, node,
+            f"{what} outside the invalidating setters",
+            hint="route through autotune_conv/autotune_model (they clear "
+                 "the dependent caches) or repack the artifact")
+        if d:
+            out.append(d)
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                if isinstance(t, ast.Attribute) and t.attr in CACHE_ATTRS:
+                    flag(node, f"assignment to .{t.attr}")
+                if isinstance(t, ast.Subscript) and \
+                        isinstance(t.value, ast.Attribute) and \
+                        t.value.attr in CACHE_DICTS:
+                    flag(node, f"write into .{t.value.attr}[...]")
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr in ("clear", "pop", "setdefault", "update"):
+            owner = node.func.value
+            if isinstance(owner, ast.Attribute) and \
+                    owner.attr in CACHE_DICTS:
+                flag(node, f".{owner.attr}.{node.func.attr}()")
+    return out
+
+
+def rule_jit_static_nonhash(tree: ast.Module, ctx: FileContext
+                            ) -> List[Diagnostic]:
+    """JIT-STATIC-NONHASH: mutable defaults on jit static argnames."""
+    out: List[Diagnostic] = []
+    for fn in _walk_functions(tree):
+        statics = _jit_static_argnames(fn)
+        if not statics:
+            continue
+        for arg, default in _param_defaults(fn):
+            if arg.arg in statics and isinstance(
+                    default, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                              ast.DictComp, ast.SetComp)):
+                d = _fdiag(
+                    "JIT-STATIC-NONHASH", ctx, fn,
+                    f"static argname {arg.arg!r} of {fn.name}() defaults "
+                    f"to an unhashable {type(default).__name__}",
+                    hint="static args key the jit cache — use a tuple / "
+                         "frozen value or None")
+                if d:
+                    out.append(d)
+    return out
+
+
+ALL_RULES: Sequence[Callable[[ast.Module, FileContext], List[Diagnostic]]] \
+    = (
+        rule_interpret_literal,
+        rule_interpret_default,
+        rule_host_traced_np,
+        rule_eager_guard,
+        rule_cache_mutate,
+        rule_jit_static_nonhash,
+    )

@@ -50,7 +50,7 @@ from jax.experimental.pallas import tpu as pltpu
 # importable from here for the pre-core call sites (tests, conv, autotune)
 from repro.kernels.worklist_core import (  # noqa: F401  (re-exports)
     DEFAULT_BM, LANE, _CompilerParams, ConvWorkList, WorkList,
-    activation_occupancy, build_worklist, worklist_spmm)
+    activation_occupancy, build_worklist, resolve_interpret, worklist_spmm)
 
 
 def subblock_macs(valid, k_safe, occ_ref, m_i, x_ref, w, acc_ref, cnt_ref, *,
@@ -150,7 +150,8 @@ def _kernel(idx_ref, occ_ref, x_ref, w_ref, *refs, nsteps: int,
 def bitmask_spmm(x: jnp.ndarray, indices: jnp.ndarray, vals: jnp.ndarray,
                  *, bk: int = LANE, bn: int = LANE, bm: int = DEFAULT_BM,
                  sub_m: Optional[int] = None, two_sided: bool = False,
-                 interpret: bool = True, count_macs: bool = False):
+                 interpret: Optional[bool] = None,
+                 count_macs: bool = False):
     """``x [M, K] @ W [K, N]`` with W in chunk-block-sparse layout.
 
     indices: int32 [n_blocks, max_nz] (k-chunk ids, -1 padded)
@@ -160,6 +161,7 @@ def bitmask_spmm(x: jnp.ndarray, indices: jnp.ndarray, vals: jnp.ndarray,
     map of executed sub-block MACs per grid cell.
     Returns [M, N] in x.dtype (fp32 accumulation).
     """
+    interpret = resolve_interpret(interpret)
     M, K = x.shape
     nb, max_nz = indices.shape
     N = nb * bn

@@ -29,7 +29,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.bitmask_spmm import subblock_macs
 from repro.kernels.worklist_core import (  # noqa: F401  (re-exports)
     ACTS, DEFAULT_BM, GATED_ACTS, LANE, WorkList, _CompilerParams,
-    activation_occupancy, worklist_spmm)
+    activation_occupancy, resolve_interpret, worklist_spmm)
 from repro.kernels.worklist_core import activate as _activate
 
 
@@ -75,7 +75,7 @@ def fused_ffn_spmm(x: jnp.ndarray, in_idx: jnp.ndarray, in_vals: jnp.ndarray,
                    gate_vals: Optional[jnp.ndarray] = None, *, act: str,
                    bk: int = LANE, bn: int = LANE, bm: int = DEFAULT_BM,
                    sub_m: Optional[int] = None, two_sided: bool = True,
-                   interpret: bool = True) -> jnp.ndarray:
+                   interpret: Optional[bool] = None) -> jnp.ndarray:
     """``act(x @ W_in [, x @ W_gate])`` with both weights chunk-block-sparse.
 
     x [M, K]; in_idx/gate_idx int32 [nb, max_nz]; in_vals/gate_vals
@@ -84,6 +84,7 @@ def fused_ffn_spmm(x: jnp.ndarray, in_idx: jnp.ndarray, in_vals: jnp.ndarray,
     hidden [M, nb*bn] in x.dtype (both projections accumulate in fp32 and
     the activation is applied to the fp32 accumulators).
     """
+    interpret = resolve_interpret(interpret)
     assert act in ACTS, act
     gated = act in GATED_ACTS
     assert (gate_idx is not None) == gated, (act, gate_idx is None)

@@ -82,9 +82,23 @@ class Scheduler:
     """
 
     def __init__(self, cfg: ModelConfig, params, *, num_slots: int = 4,
-                 max_len: int = 256, greedy: bool = True):
+                 max_len: int = 256, greedy: bool = True,
+                 verify_artifacts: bool = True):
         assert cfg.encoder_layers == 0, \
             "Scheduler serves decoder-only models (enc-dec goes via generate)"
+        # admission gate: when the checkpoint carries packed sparse-FFN
+        # leaves, prove them well-formed (device-free) before the first jit
+        # ever indexes them; verify_artifacts=False opts out.
+        if verify_artifacts and getattr(cfg, "sparse_ffn", False):
+            from repro.analysis import raise_on_errors, verify_ffn_leaves
+            diags = []
+            for stack_key in ("blocks", "enc_blocks"):
+                for pk, bp in params.get(stack_key, {}).items():
+                    for leaf in ("ffn_sparse", "channel_mix_sparse"):
+                        if leaf in bp:
+                            diags.extend(verify_ffn_leaves(
+                                bp[leaf], f"{stack_key}/{pk}/{leaf}"))
+            raise_on_errors(diags, "Scheduler admission")
         self.cfg = cfg
         self.params = params
         self.num_slots = num_slots

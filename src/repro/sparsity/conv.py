@@ -142,11 +142,17 @@ def build_sparse_chain(weights: Sequence[np.ndarray], *, density: float = 1.0,
                        num_shards: int = 16, chunk: int = bm.CHUNK,
                        balance_filters: bool = True,
                        pattern: str = "unstructured",
-                       micro_ranges: int = 3) -> List[PackedConv]:
+                       micro_ranges: int = 3,
+                       strict: bool = False) -> List[PackedConv]:
     """Offline pipeline for a sequential conv chain: prune -> balance ->
     fold into the next layer -> matrixize -> pack.
 
     ``weights[i]`` is [kh, kw, Cin_i, Cout_i] with Cout_i == Cin_{i+1}.
+
+    ``strict=True`` runs the :mod:`repro.analysis` artifact verifier over
+    the finished chain and raises
+    :class:`~repro.analysis.diagnostics.AnalysisError` on any invariant
+    violation — the pack-time gate for untrusted checkpoints.
 
     ``pattern="unstructured"`` (default) is the legacy path: per-filter
     magnitude pruning, per-channel greedy balance, channel-major packing.
@@ -202,4 +208,8 @@ def build_sparse_chain(weights: Sequence[np.ndarray], *, density: float = 1.0,
                               else ("unstructured" if pattern == "chunk"
                                     else pattern),
                               prune_info=info))
+    if strict:
+        # local import: repro.analysis imports this module
+        from repro.analysis import raise_on_errors, verify_chain
+        raise_on_errors(verify_chain(out), "build_sparse_chain")
     return out

@@ -239,8 +239,8 @@ def _pack_stacked_ffn(ffn_params: Dict[str, Any], *, density: float,
 
 
 def sparsify_model(params: Dict[str, Any], cfg, *, density: float = 0.35,
-                   num_shards: int = 16, chunk: int = bm.CHUNK
-                   ) -> Dict[str, Any]:
+                   num_shards: int = 16, chunk: int = bm.CHUNK,
+                   strict: bool = False) -> Dict[str, Any]:
     """Offline whole-model pass: prune -> balance -> fold -> pack every
     eligible FFN into two-sided block-sparse form.
 
@@ -255,6 +255,9 @@ def sparsify_model(params: Dict[str, Any], cfg, *, density: float = 0.35,
     can serve both paths (A/B benches, invariance tests). With
     ``density=1.0`` the pass is numerically a no-op (pack + balance fold
     only), which is how the serving-invariance tests pin sparse == dense.
+
+    ``strict=True`` runs the :mod:`repro.analysis` verifier over every
+    packed leaf and raises on invariant violations (pack-time gate).
     """
     new = dict(params)
     for stack_key in ("blocks", "enc_blocks"):
@@ -274,6 +277,17 @@ def sparsify_model(params: Dict[str, Any], cfg, *, density: float = 0.35,
                     cm, density=density, num_shards=num_shards, chunk=chunk)
             stack[pk] = bp
         new[stack_key] = stack
+    if strict:
+        # local import: repro.analysis imports this module
+        from repro.analysis import raise_on_errors, verify_ffn_leaves
+        diags = []
+        for stack_key in ("blocks", "enc_blocks"):
+            for pk, bp in new.get(stack_key, {}).items():
+                for leaf in ("ffn_sparse", "channel_mix_sparse"):
+                    if leaf in bp:
+                        diags.extend(verify_ffn_leaves(
+                            bp[leaf], f"{stack_key}/{pk}/{leaf}"))
+        raise_on_errors(diags, "sparsify_model")
     return new
 
 

@@ -72,7 +72,17 @@ class VisionEngine:
                  sub_m: int = 8, two_sided: bool = True,
                  interpret: Optional[bool] = None,
                  schedule: str = "compact", executor: Optional[str] = None,
-                 im2col: str = "auto", use_tuned: bool = False):
+                 im2col: str = "auto", use_tuned: bool = False,
+                 verify_artifacts: bool = True):
+        # admission gate: an engine admits arbitrary checkpoints, so the
+        # packed chain is verified (device-free) before anything compiles;
+        # verify_artifacts=False opts hot construction paths out.
+        if verify_artifacts:
+            from repro.analysis import raise_on_errors, verify_model
+            raise_on_errors(
+                verify_model(model, f"engine/{model.name}",
+                             check_values=False),
+                "VisionEngine admission")
         self.model = model
         self.num_slots = num_slots
         self.sub_m = sub_m

@@ -1,0 +1,429 @@
+"""Static-analysis subsystem tests: seeded-defect mutations + zero false
+positives + AST lint rules + the pack/admission wiring.
+
+The mutation tests are the verifier's discrimination proof: each test
+corrupts one artifact in one specific way and asserts the *specific*
+diagnostic fires — a verifier that flagged everything (or nothing) fails
+them.  The zoo sweep is the complementary soundness proof: every artifact
+the real pack pipeline produces, across architectures, patterns, and
+tuned/default configs, must verify clean.
+"""
+import dataclasses
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis import (AnalysisError, Severity, has_errors,
+                            verify_block_sparse, verify_chain,
+                            verify_ffn_leaves, verify_model,
+                            verify_packed_conv, verify_worklist)
+from repro.analysis.astlint import lint_source, lint_tree
+from repro.analysis.diagnostics import REGISTRY, render_github, render_text
+from repro.core.bitmask import block_sparsify
+from repro.kernels.autotune import ConvTileConfig, TuneRecord, autotune_model
+from repro.kernels.worklist_core import build_worklist
+from repro.sparsity.conv import build_sparse_chain
+from repro.vision.model import build_vision_model
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _rules(diags):
+    return {d.rule for d in diags if d.severity >= Severity.ERROR}
+
+
+def _mat(seed=0, shape=(256, 384), density=0.25, dead=((0, 1),)):
+    """Element-sparse matrix with explicitly dead (k-chunk, n-block)
+    tiles — element-level sparsity alone never kills a whole 128x128
+    tile, and the interesting schedules need padding slots."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=shape) * (rng.random(shape) < density)
+    for kc, nblk in dead:
+        w[kc * 128:(kc + 1) * 128, nblk * 128:(nblk + 1) * 128] = 0
+    return block_sparsify(np.asarray(w, np.float32), bk=128, bn=128)
+
+
+def _flat_replace(wl, **arrays):
+    return dataclasses.replace(wl, **{k: np.asarray(v)
+                                      for k, v in arrays.items()})
+
+
+@pytest.fixture(scope="module")
+def packed():
+    m = _mat()
+    return m, m.host_indices(), build_worklist(m.host_indices(), 4)
+
+
+@pytest.fixture(scope="module")
+def conv_chain():
+    rng = np.random.default_rng(1)
+    ws = [np.asarray(rng.normal(size=s), np.float32)
+          for s in [(3, 3, 16, 128), (3, 3, 128, 256)]]
+    return build_sparse_chain(ws, density=0.4)
+
+
+# ---------------------------------------------------------------------------
+# seeded defects: each corruption -> its specific diagnostic
+# ---------------------------------------------------------------------------
+def test_defect_wl_out_of_range_index(packed):
+    m, idx, wl = packed
+    j = np.asarray(wl.j).copy()
+    j[0] = 99                                  # beyond max_nz
+    bad = _flat_replace(wl, j=j)
+    assert "WL-RANGE" in _rules(verify_worklist(bad, indices=idx))
+
+
+def test_defect_wl_non_pair_major(packed):
+    m, idx, wl = packed
+    perm = np.arange(np.asarray(wl.n).shape[0])[::-1]
+    bad = _flat_replace(wl, **{f: np.asarray(getattr(wl, f))[perm]
+                               for f in ("n", "m", "k", "j",
+                                         "first", "last")})
+    assert "WL-PAIR-MAJOR" in _rules(verify_worklist(bad, indices=idx))
+
+
+def test_defect_wl_dead_live_entry(packed):
+    """A scheduled slot whose chunk is dead — the §3.2 property the
+    telescoped schedule exists to prevent."""
+    m, idx, wl = packed
+    k = np.asarray(wl.k).copy()
+    k[np.nonzero(k >= 0)[0][0]] = -1
+    got = _rules(verify_worklist(_flat_replace(wl, k=k), indices=idx))
+    assert "WL-DEAD-STEP" in got
+
+
+def test_defect_wl_dropped_flush_only():
+    """Dead pairs must still flush (coloring: the output tile belongs to
+    the pair, not to the live work) — dropping one breaks the count."""
+    m = _mat(seed=3, dead=((0, 0), (1, 0)))    # n-block 0 fully dead
+    idx = m.host_indices()
+    wl = build_worklist(idx, 4)
+    assert wl.flush_only_steps > 0, "fixture must contain a dead pair"
+    flush = np.nonzero(np.asarray(wl.j) < 0)[0]
+    keep = np.ones(np.asarray(wl.n).shape[0], bool)
+    keep[flush[0]] = False
+    bad = _flat_replace(wl, **{f: np.asarray(getattr(wl, f))[keep]
+                               for f in ("n", "m", "k", "j",
+                                         "first", "last")})
+    assert "WL-COUNTS" in _rules(verify_worklist(bad, indices=idx))
+
+
+def test_defect_wl_wrong_first_last(packed):
+    m, idx, wl = packed
+    last = np.asarray(wl.last).copy()
+    last[np.nonzero(last)[0][0]] = 0
+    got = _rules(verify_worklist(_flat_replace(wl, last=last), indices=idx))
+    assert "WL-FIRST-LAST" in got
+
+
+def test_defect_bs_zeroed_live_tile(packed):
+    """Bitmask says live, values say dead — popcount/density mismatch."""
+    m, idx, wl = packed
+    v = np.asarray(m.vals).copy()
+    v[0, 0] = 0
+    assert "BS-MASK-VALS" in _rules(
+        verify_block_sparse(dataclasses.replace(m, vals=v)))
+
+
+def test_defect_bs_nonzero_padding(packed):
+    m, idx, wl = packed
+    assert (idx < 0).any(), "fixture must have padding slots"
+    v = np.asarray(m.vals).copy()
+    nblk, slot = np.argwhere(idx < 0)[0]
+    v[nblk, slot, 0, 0] = 1.0
+    assert "BS-PAD-VALS" in _rules(
+        verify_block_sparse(dataclasses.replace(m, vals=v)))
+
+
+def test_defect_bs_duplicate_chunk(packed):
+    m, idx, wl = packed
+    nblk = int(np.argmax((idx >= 0).sum(1)))
+    assert (idx[nblk] >= 0).sum() >= 2
+    i2 = idx.copy()
+    i2[nblk, 1] = i2[nblk, 0]                   # duplicate -> not ascending
+    bad = dataclasses.replace(m, indices=i2, indices_np=i2)
+    assert "BS-ORDER" in _rules(verify_block_sparse(bad,
+                                                    check_values=False))
+
+
+def test_defect_bs_host_desync(packed):
+    """Device indices re-packed but the host copy (the schedule source)
+    kept — the split-brain the host_indices() contract forbids."""
+    m, idx, wl = packed
+    stale = idx.copy()
+    stale[0, 0] = -1                            # host says dead, device live
+    bad = dataclasses.replace(m, indices_np=stale)
+    assert "BS-HOST-SYNC" in _rules(verify_block_sparse(bad,
+                                                        check_values=False))
+
+
+def test_defect_stale_wl_cache():
+    """The re-pack defect: autotune repacks at a new bn but a schedule
+    built against the old packing survives in wl_cache."""
+    m = _mat(seed=4, dead=())                   # fully live packing
+    wl = build_worklist(m.host_indices(), 4)
+    m2 = _mat(seed=4)                           # re-packed: a tile pruned
+    m2.wl_cache[4] = wl                         # stale schedule survives
+    got = _rules(verify_block_sparse(m2, check_values=False))
+    assert "WL-STALE-CACHE" in got
+
+
+def test_defect_pc_non_permutation_fold(conv_chain):
+    pc = conv_chain[0]
+    p = np.asarray(pc.perm).copy()
+    p[0] = p[1]                                  # duplicates a channel
+    assert "PC-PERM" in _rules(
+        verify_packed_conv(dataclasses.replace(pc, perm=p)))
+
+
+def test_defect_pc_dense_packed_mismatch(conv_chain):
+    """Dense filters edited after packing (bitmask/density mismatch at the
+    pack-chain level)."""
+    pc = conv_chain[0]
+    w = np.asarray(pc.w_dense).copy()
+    w[0, 0, 0, :] += 1.0
+    assert "PC-REPACK" in _rules(
+        verify_packed_conv(dataclasses.replace(pc, w_dense=w), deep=True))
+
+
+def test_defect_pc_vmem_config(conv_chain):
+    pc = conv_chain[0]
+    rec = TuneRecord(config=ConvTileConfig(bm_rows=65536, sub_m=8),
+                     cost=1.0, counts={}, table=[], m_img=1, batch=1,
+                     measured=False)
+    assert "PC-VMEM" in _rules(
+        verify_packed_conv(dataclasses.replace(pc, tuned=rec)))
+
+
+def test_defect_pc_illegal_strategy(conv_chain):
+    pc = conv_chain[0]
+    assert pc.layout == "channel"
+    rec = TuneRecord(config=ConvTileConfig(bm_rows=128, sub_m=8,
+                                           im2col="taps"),
+                     cost=1.0, counts={}, table=[], m_img=1, batch=1,
+                     measured=False)
+    assert "PC-TUNED" in _rules(
+        verify_packed_conv(dataclasses.replace(pc, tuned=rec)))
+
+
+def test_defect_chain_geometry(conv_chain):
+    """cout_i != cin_{i+1}: the fold across ReLU/pool is illegal."""
+    bad = [conv_chain[1], conv_chain[1]]         # 128->256 feeding 128->256
+    got = _rules(verify_chain(bad, check_values=False))
+    assert "CH-GEOM" in got
+
+
+def test_defect_chain_last_layer_permuted(conv_chain):
+    pc = conv_chain[-1]
+    p = np.roll(np.asarray(pc.perm), 1)          # valid perm, wrong place
+    bad = [conv_chain[0], dataclasses.replace(pc, perm=p)]
+    got = _rules(verify_chain(bad, check_values=False))
+    assert "CH-LAST-PERM" in got
+
+
+def test_defect_ffn_leaves_padding():
+    idx = np.full((1, 2, 3), -1, np.int32)
+    idx[:, :, 0] = 0
+    vals = np.zeros((1, 2, 3, 128, 128), np.float32)
+    vals[0, 0, 0] = 1.0
+    vals[0, 1, 2] = 1.0                          # non-zero at padding
+    got = _rules(verify_ffn_leaves({"in_indices": idx, "in_vals": vals}))
+    assert "BS-PAD-VALS" in got
+
+
+# ---------------------------------------------------------------------------
+# soundness: zero false positives across the pruned zoo
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("pattern", ["unstructured", "chunk"])
+@pytest.mark.parametrize("name", ["AlexNet", "VGGNet", "ResNet18",
+                                  "ResNet50"])
+def test_zoo_zero_false_positives(name, pattern):
+    """Every artifact the real pipeline produces verifies clean — default
+    pack and cost-model-tuned (which exercises repack + cache
+    invalidation).  Depth-bounded here for suite time; the CI lint job and
+    ``--layers 0`` run the full-depth sweep."""
+    vm = build_vision_model(name, density=0.3, seed=0, num_layers=3,
+                            pattern=pattern)
+    diags = verify_model(vm, f"zoo/{name}/{pattern}", deep=True)
+    assert not diags, render_text(diags)
+    autotune_model(vm, batch=1, measure=False)
+    diags = verify_model(vm, f"zoo/{name}/{pattern}/tuned", deep=True)
+    assert not diags, render_text(diags)
+
+
+def test_verifier_is_pure(packed):
+    """Device-free and side-effect-free: no wl_cache fills, no indices_np
+    materialization, artifact bit-identical after verification."""
+    m = _mat(seed=7)
+    m.indices_np = None
+    before = np.asarray(m.indices).copy()
+    diags = verify_block_sparse(m)
+    assert not has_errors(diags)
+    assert m.indices_np is None                  # not materialized
+    assert not m.wl_cache                        # no schedules built
+    np.testing.assert_array_equal(np.asarray(m.indices), before)
+
+
+# ---------------------------------------------------------------------------
+# AST lint rules
+# ---------------------------------------------------------------------------
+def _lint(snippet):
+    return lint_source(textwrap.dedent(snippet), "snippet.py")
+
+
+def test_lint_interpret_default_literal():
+    got = _lint("""
+        def spmm(x, *, interpret: bool = True):
+            return x
+    """)
+    assert {d.rule for d in got} == {"PL-INTERP-DEFAULT"}
+
+
+def test_lint_interpret_literal_and_missing():
+    got = _lint("""
+        import jax.experimental.pallas as pl
+        def f(x, kernel, interpret=None):
+            a = pl.pallas_call(kernel, interpret=True)(x)
+            b = pl.pallas_call(kernel)(x)
+            c = pl.pallas_call(kernel, interpret=interpret)(x)
+            return a, b, c
+    """)
+    assert {d.rule for d in got} == {"PL-INTERP-LITERAL", "PL-NO-INTERPRET"}
+
+
+def test_lint_host_np_on_traced():
+    got = _lint("""
+        import functools, jax
+        import numpy as np
+        @functools.partial(jax.jit, static_argnames=("bk",))
+        def f(x, *, bk):
+            return np.asarray(x) + bk      # x is traced
+
+        @functools.partial(jax.jit, static_argnames=("bk",))
+        def ok(x, *, bk):
+            return np.asarray(bk) * x      # bk is static
+    """)
+    assert [d.rule for d in got] == ["HOST-TRACED-NP"]
+    assert "f()" in got[0].message
+
+
+def test_lint_eager_guard():
+    got = _lint("""
+        def builds_unguarded(x, indices):
+            return build_worklist(np.asarray(indices), 4)
+
+        def builds_guarded(x, indices):
+            if isinstance(x, jax.core.Tracer):
+                raise ValueError("eager only")
+            return build_worklist(np.asarray(indices), 4)
+    """)
+    assert [d.rule for d in got] == ["EAGER-GUARD"]
+    assert "builds_unguarded" in got[0].message
+
+
+def test_lint_cache_mutate():
+    got = _lint("""
+        def sneaky(conv, cfg):
+            conv.tuned = cfg                    # skips invalidation
+            conv.wl_cache[4] = None
+            conv.wl_cache.clear()
+    """)
+    assert [d.rule for d in got] == ["CACHE-MUTATE"] * 3
+
+
+def test_lint_cache_mutate_allowlisted():
+    src = textwrap.dedent("""
+        def autotune_conv(conv, rec):
+            conv.tuned = rec
+            conv.wl_cache.clear()
+    """)
+    assert lint_source(src, "src/repro/kernels/autotune.py") == []
+
+
+def test_lint_jit_static_nonhash():
+    got = _lint("""
+        import functools, jax
+        @functools.partial(jax.jit, static_argnames=("opts",))
+        def f(x, *, opts=[1, 2]):
+            return x
+    """)
+    assert [d.rule for d in got] == ["JIT-STATIC-NONHASH"]
+
+
+def test_lint_suppression():
+    ok = _lint("""
+        def f(x, *, interpret: bool = True):  # lint: ignore[PL-INTERP-DEFAULT] bench pins interpreter
+            return x
+    """)
+    assert ok == []
+    bare = _lint("""
+        def f(x, *, interpret: bool = True):  # lint: ignore[PL-INTERP-DEFAULT]
+            return x
+    """)
+    assert {d.rule for d in bare} == {"PL-INTERP-DEFAULT", "LINT-SUPPRESS"}
+
+
+def test_repo_tree_is_lint_clean():
+    """Satellite: the whole src/ tree passes the AST lint with zero
+    findings (suppressions included only with justifying reasons)."""
+    diags = lint_tree(str(REPO / "src"), str(REPO))
+    assert diags == [], render_text(diags)
+
+
+def test_rule_registry_renders():
+    assert "WL-LIVE-MAP" in REGISTRY and "PL-INTERP-DEFAULT" in REGISTRY
+    table = render_github([])
+    assert "No findings" in table
+
+
+# ---------------------------------------------------------------------------
+# wiring: strict pack + admission gates
+# ---------------------------------------------------------------------------
+def test_strict_build_chain_passes():
+    rng = np.random.default_rng(2)
+    ws = [np.asarray(rng.normal(size=(3, 3, 16, 64)), np.float32)]
+    chain = build_sparse_chain(ws, density=0.5, strict=True)
+    assert len(chain) == 1
+
+
+def test_engine_admission_rejects_corrupt_model():
+    from repro.vision.engine import VisionEngine
+    vm = build_vision_model("AlexNet", density=0.3, seed=0, num_layers=2)
+    pc = vm.layers[0].conv
+    p = np.asarray(pc.perm).copy()
+    p[0] = p[1]
+    vm.layers[0].conv = dataclasses.replace(pc, perm=p)
+    with pytest.raises(AnalysisError, match="PC-PERM"):
+        VisionEngine(vm, num_slots=2, interpret=True)
+
+
+def test_scheduler_admission_rejects_corrupt_leaves():
+    from repro.configs.base import load_smoke
+    from repro.models import model as M
+    from repro.serve import Scheduler
+    from repro.sparsity.sparse_ffn import sparsify_model
+
+    cfg = load_smoke("nemotron_4_340b")
+    cfg_s = dataclasses.replace(cfg, sparse_ffn=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    params_s = sparsify_model(params, cfg, density=0.5, num_shards=4,
+                              strict=True)        # strict pack passes
+    Scheduler(cfg_s, params_s, num_slots=1, max_len=8)  # admits clean
+
+    blocks = dict(params_s["blocks"])
+    pk = next(iter(blocks))
+    bp = dict(blocks[pk])
+    sp = dict(bp["ffn_sparse"])
+    idx = np.asarray(sp["in_indices"]).copy()
+    idx[0, 0, 0] = -2                            # below the -1 padding value
+    sp["in_indices"] = idx
+    bp["ffn_sparse"] = sp
+    blocks[pk] = bp
+    bad = dict(params_s)
+    bad["blocks"] = blocks
+    with pytest.raises(AnalysisError, match="BS-RANGE"):
+        Scheduler(cfg_s, bad, num_slots=1, max_len=8)
