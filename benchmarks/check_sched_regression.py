@@ -6,10 +6,11 @@
 
 Consumes consecutive (committed baseline, freshly generated) file pairs
 and fails (exit 1) when any record regresses structurally. The record
-kind is auto-detected (``"bench": "serve"`` -> serving record; anything
-else uses the vision schema), so one gate covers every ``BENCH_*.json``
-both pipelines persist — they all carry the same unified work-list
-schedule-counters record.
+kind is auto-detected from ``"bench"`` (``"serve"`` -> LM serving,
+``"serve_vision"`` -> vision serving; anything else uses the vision
+schema), so one gate covers every ``BENCH_*.json`` the pipelines
+persist — they all carry the same unified work-list schedule-counters
+record.
 
 Vision gates (the historical ``check_vision_regression`` rules):
 
@@ -30,6 +31,17 @@ Serving gates (the decode path through the same work-list core):
   * the decode-batch-2 record (``decode2``) lost bitwise equality with
     the predicated kernel, grew, or lost compaction.
 
+Vision-serving gates (``benchmarks.serve_vision_bench``):
+
+  * any ``bitwise_corrupted`` request — batched serving must stay
+    bitwise-equal to per-request sequential execution,
+  * SLA misses (or engine steps) grew on the deterministic virtual-clock
+    replay of the committed Poisson trace,
+  * the cross-request combine factor dropped, headline or at any batch
+    size in ``combine_sweep`` — the §3.2 dedup across images regressed,
+  * the warmed buckets' unified schedule record regressed
+    (shared ``_check_schedule`` gates).
+
 Wall-clock numbers are *reported* but never gated — CI machines vary; the
 structural counters are what must not regress.
 """
@@ -46,6 +58,9 @@ VISION_SETTINGS_KEYS = ("bench", "image_size", "batch", "num_layers",
                         "map_density_target", "pattern", "autotune")
 SERVE_SETTINGS_KEYS = ("bench", "arch", "requests", "slots", "prompt_len",
                        "max_new", "stagger", "density")
+SERVE_VISION_SETTINGS_KEYS = ("bench", "arch", "num_layers", "pattern",
+                              "density", "buckets", "slots", "requests",
+                              "mean_gap_s", "sla_s", "seed")
 
 
 def _check_schedule(sched_base, sched_new, tag: str, *,
@@ -199,10 +214,88 @@ def report_serve(baseline: dict, new: dict) -> None:
 
 
 # ---------------------------------------------------------------------------
+# vision serving records (SLA admission + cross-request telescoping)
+# ---------------------------------------------------------------------------
+def check_serve_vision(baseline: dict, new: dict) -> list:
+    if not all(baseline.get(k) == new.get(k)
+               for k in SERVE_VISION_SETTINGS_KEYS):
+        return [
+            f"settings mismatch: baseline "
+            f"{[baseline.get(k) for k in SERVE_VISION_SETTINGS_KEYS]} vs "
+            f"new {[new.get(k) for k in SERVE_VISION_SETTINGS_KEYS]} "
+            f"— regenerate the committed baseline at the CI settings"]
+
+    failures = []
+    if new.get("bitwise_corrupted", 0):
+        failures.append(f"bitwise_corrupted = {new['bitwise_corrupted']} "
+                        f"(batched serving must match per-request "
+                        f"sequential bitwise)")
+    v_base, v_new = baseline.get("virtual") or {}, new.get("virtual") or {}
+    if v_new.get("sla_misses", 0) > v_base.get("sla_misses", 0):
+        failures.append(
+            f"[virtual] SLA misses grew on the deterministic trace: "
+            f"{v_base.get('sla_misses')} -> {v_new.get('sla_misses')}")
+    if v_new.get("engine_steps", 0) > v_base.get("engine_steps", 0):
+        failures.append(
+            f"[virtual] engine steps grew for the same load: "
+            f"{v_base.get('engine_steps')} -> {v_new.get('engine_steps')}")
+    cf_base = baseline.get("cross_request_combine_factor")
+    cf_new = new.get("cross_request_combine_factor")
+    if cf_base is not None and cf_new is not None and \
+            cf_new < cf_base - COMPACTION_TOL:
+        failures.append(f"cross_request_combine_factor dropped: "
+                        f"{cf_base:.4f} -> {cf_new:.4f}")
+    sweep_base = baseline.get("combine_sweep") or {}
+    sweep_new = new.get("combine_sweep") or {}
+    for b in sorted(set(sweep_base) & set(sweep_new), key=int):
+        if sweep_new[b] < sweep_base[b] - COMPACTION_TOL:
+            failures.append(f"combine_sweep[batch={b}] dropped: "
+                            f"{sweep_base[b]:.4f} -> {sweep_new[b]:.4f}")
+    for b in sorted(set(sweep_base) - set(sweep_new), key=int):
+        failures.append(f"combine_sweep[batch={b}] present in baseline "
+                        f"but missing from new run")
+    failures.extend(_check_schedule(baseline.get("schedule"),
+                                    new.get("schedule"), "serve_vision",
+                                    compaction_key="grid_compaction"))
+    return failures
+
+
+def report_serve_vision(baseline: dict, new: dict) -> None:
+    print(f"{'metric':<34s} {'baseline':>12s} {'new':>12s}")
+    rows = [("bitwise_corrupted", baseline.get("bitwise_corrupted"),
+             new.get("bitwise_corrupted")),
+            ("cross_request_combine_factor",
+             baseline.get("cross_request_combine_factor"),
+             new.get("cross_request_combine_factor"))]
+    for sub, keys in (("virtual", ("images", "engine_steps", "sla_misses",
+                                   "sla_miss_rate", "slot_utilization")),
+                      ("wall", ("p50_ms", "p95_ms", "p99_ms", "img_per_s"))):
+        rows += [(f"{sub}.{k}", (baseline.get(sub) or {}).get(k),
+                  (new.get(sub) or {}).get(k)) for k in keys]
+    rows += [(f"combine_sweep[{b}]", (baseline.get("combine_sweep")
+                                      or {}).get(b), f)
+             for b, f in sorted((new.get("combine_sweep") or {}).items(),
+                                key=lambda kv: int(kv[0]))]
+    for name, b, n in rows:
+        fb = f"{b:.4g}" if isinstance(b, (int, float)) else str(b)
+        fn_ = f"{n:.4g}" if isinstance(n, (int, float)) else str(n)
+        print(f"{name:<34s} {fb:>12s} {fn_:>12s}")
+
+
+# ---------------------------------------------------------------------------
 # dispatch
 # ---------------------------------------------------------------------------
 def kind_of(record: dict) -> str:
-    return "serve" if record.get("bench") == "serve" else "vision"
+    bench = record.get("bench")
+    if bench in ("serve", "serve_vision"):
+        return bench
+    return "vision"
+
+
+CHECKERS = {"serve": check_serve, "serve_vision": check_serve_vision,
+            "vision": check_vision}
+REPORTERS = {"serve": report_serve, "serve_vision": report_serve_vision,
+             "vision": report_vision}
 
 
 def check(baseline: dict, new: dict) -> list:
@@ -210,8 +303,7 @@ def check(baseline: dict, new: dict) -> list:
     kb, kn = kind_of(baseline), kind_of(new)
     if kb != kn:
         return [f"record kind mismatch: baseline is {kb}, new is {kn}"]
-    return check_serve(baseline, new) if kb == "serve" \
-        else check_vision(baseline, new)
+    return CHECKERS[kb](baseline, new)
 
 
 def main(argv=None) -> None:
@@ -232,7 +324,7 @@ def main(argv=None) -> None:
             new = json.load(f)
         kind = kind_of(baseline)
         print(f"== {kind}: {base_path} vs {new_path} ==")
-        (report_serve if kind == "serve" else report_vision)(baseline, new)
+        REPORTERS[kind](baseline, new)
         failures.extend(f"{base_path}: {msg}"
                         for msg in check(baseline, new))
         print()

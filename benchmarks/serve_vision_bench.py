@@ -1,0 +1,213 @@
+"""Vision serving bench: SLA-aware admission + cross-request telescoping
+under Poisson open-loop load.
+
+    PYTHONPATH=src python -m benchmarks.serve_vision_bench [--smoke] ...
+
+Three sections, following the repo's gating philosophy (structural
+counters gated, wall-clock reported):
+
+  * **virtual** — the same seeded Poisson arrival trace replayed on the
+    :class:`repro.serve.vision.VirtualClock` with fixed per-bucket step
+    costs: engine steps, slot utilization, and the *exact* SLA-miss
+    accounting are deterministic, so CI gates them
+    (``benchmarks.check_sched_regression`` fails the PR on SLA-miss
+    growth).  The unified schedule counters of the warmed buckets ride
+    along under ``"schedule"``.
+  * **combine sweep** — cross-request combine factor vs batch size,
+    computed statically (``layer_geometry`` + ``build_worklist`` +
+    ``WorkList.combined()`` — no compiles): the batched fetch plan issues
+    one filter-chunk fetch per distinct ``(n_block, chunk)`` per batch,
+    so on static schedules the factor equals the batch width.  Gated: a
+    drop means the dedup regressed.
+  * **wall** — a real wall-clock run of the same server (Poisson
+    arrivals, open loop): p50/p95/p99 latency, img/s, slot utilization.
+    Reported, never gated (CPU interpret-mode wall time is not TPU
+    performance and CI machines vary).
+
+The batched outputs are asserted bitwise-equal to per-request sequential
+execution on BOTH executors (pallas interpret + XLA gather/segment-sum);
+``bitwise_corrupted`` is gated at 0.  ``--out BENCH_serve_vision.json``
+persists the structural record CI diffs against the committed baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.kernels.worklist_core import build_worklist
+from repro.serve.vision import VirtualClock, VisionServer, WallClock
+from repro.vision import (ImageRequest, build_vision_model, layer_geometry,
+                          route_bucket)
+
+STEP_COST_S = {8: 0.02, 16: 0.05, 24: 0.09}
+
+
+def _poisson_requests(rng, n, buckets, mean_gap_s, sla_s):
+    """Open-loop Poisson trace: exponential inter-arrivals, sizes drawn
+    around the canonical buckets (some need padding, some downscaling)."""
+    t = 0.0
+    reqs = []
+    sizes = sorted({s for b in buckets for s in (b - 2, b, b + 1)})
+    for i in range(n):
+        t += float(rng.exponential(mean_gap_s))
+        size = int(sizes[rng.integers(len(sizes))])
+        img = np.abs(rng.normal(size=(size, size, 3))).astype(np.float32)
+        reqs.append(ImageRequest(rid=i, image=img, arrival_s=t,
+                                 deadline_s=t + sla_s))
+    return reqs
+
+
+def _clone(reqs, *, wall=False):
+    return [ImageRequest(r.rid, r.image, arrival_s=r.arrival_s if wall
+                         else r.arrival_s, deadline_s=r.deadline_s)
+            for r in reqs]
+
+
+def combine_sweep(model, size, batches):
+    """Cross-request combine factor vs batch size, statically (one
+    schedule per (layer, batch), zero compiles)."""
+    geo = layer_geometry(model, size)
+    out = {}
+    for b in batches:
+        per_img = fetches = 0
+        for layer, g in zip(model.layers, geo):
+            idx = layer.conv.packed.host_indices()
+            mpi = g["mb_per_img"]
+            cs = build_worklist(idx, b * mpi, mb_per_img=mpi).combined()
+            per_img += cs.per_image_fetches
+            fetches += cs.num_fetches
+        out[str(b)] = round(per_img / max(fetches, 1), 6)
+    return out
+
+
+def bitwise_check(model, buckets, reqs, slots):
+    """Batched vs per-request sequential, both executors, bitwise."""
+    corrupted = 0
+    for executor in ("pallas", "xla"):
+        batched = VisionServer(model, num_slots=slots, buckets=buckets,
+                               clock=VirtualClock(), step_cost_s=1.0,
+                               executor=executor)
+        out_b = batched.run([ImageRequest(r.rid, r.image) for r in reqs])
+        solo = VisionServer(model, num_slots=1, buckets=buckets,
+                            clock=VirtualClock(), step_cost_s=1.0,
+                            executor=executor)
+        out_s = solo.run([ImageRequest(r.rid, r.image) for r in reqs])
+        corrupted += sum(not np.array_equal(out_b[r.rid], out_s[r.rid])
+                         for r in reqs)
+    return corrupted
+
+
+def run(*, arch="VGGNet", num_layers=2, pattern="chunk", density=0.4,
+        buckets=(8, 16), slots=4, requests=16, mean_gap_s=0.03,
+        sla_s=0.2, seed=0, out=None):
+    model = build_vision_model(arch, num_layers=num_layers, seed=seed,
+                               pattern=pattern, density=density)
+    rng = np.random.default_rng(seed)
+    reqs = _poisson_requests(rng, requests, buckets, mean_gap_s, sla_s)
+    step_cost = {b: STEP_COST_S[b] for b in buckets}
+
+    # -- virtual: deterministic admission + SLA accounting (gated) --------
+    vsrv = VisionServer(model, num_slots=slots, buckets=buckets,
+                        clock=VirtualClock(), step_cost_s=step_cost)
+    vsrv.run(_clone(reqs))
+    vs = vsrv.stats
+    virtual = {
+        "images": vs.images, "engine_steps": vs.engine_steps,
+        "deadlined": vs.deadlined, "sla_misses": vs.sla_misses,
+        "sla_miss_rate": round(vs.sla_miss_rate, 6),
+        "slot_utilization": round(vs.slot_utilization, 6),
+        "bucket_steps": {str(k): v for k, v in sorted(vs.bucket_steps.items())},
+    }
+    sched = vsrv.schedule_counters()
+    print(f"[virtual] {vs.images} imgs in {vs.engine_steps} steps, "
+          f"util {vs.slot_utilization:.3f}, SLA miss "
+          f"{vs.sla_misses}/{vs.deadlined} ({vs.sla_miss_rate:.3f})")
+
+    # -- cross-request combine factor vs batch size (gated) ---------------
+    sweep = combine_sweep(model, max(buckets), (1, 2, slots, 2 * slots))
+    print("[combine] factor vs batch: "
+          + ", ".join(f"b={b}: {f:.2f}x" for b, f in sweep.items()))
+    cross = sched["cross_request_combine_factor"]
+    print(f"[combine] served batch factor {cross:.2f}x "
+          f"(intra-image model {sched['combine_factor']:.2f}x)")
+
+    # -- bitwise: batched == sequential on both executors (gated) ---------
+    corrupted = bitwise_check(model, buckets, reqs[:slots], slots)
+    assert corrupted == 0, "batched serving must be bitwise-invariant"
+    print(f"[bitwise] batched == sequential on pallas+xla "
+          f"({slots} mixed-size requests): corrupted={corrupted}")
+
+    # -- wall clock: reported only ----------------------------------------
+    wsrv = VisionServer(model, num_slots=slots, buckets=buckets,
+                        clock=WallClock())
+    wsrv.run(_clone(reqs, wall=True))
+    ws = wsrv.stats
+    p = ws.latency_percentiles()
+    wall = {
+        "p50_ms": round(1e3 * p["p50"], 3),
+        "p95_ms": round(1e3 * p["p95"], 3),
+        "p99_ms": round(1e3 * p["p99"], 3),
+        "img_per_s": round(ws.img_per_s, 2),
+        "slot_utilization": round(ws.slot_utilization, 6),
+        "sla_miss_rate": round(ws.sla_miss_rate, 6),
+        "compile_s": round(ws.compile_s, 4),
+        "wall_s": round(ws.wall_s, 4),
+    }
+    print(f"[wall] p50 {wall['p50_ms']:.1f} ms, p95 {wall['p95_ms']:.1f} ms, "
+          f"p99 {wall['p99_ms']:.1f} ms, {wall['img_per_s']:.1f} img/s, "
+          f"util {ws.slot_utilization:.3f} "
+          f"(compile {ws.compile_s:.2f} s excluded)")
+
+    if out:
+        record = {
+            "bench": "serve_vision", "arch": arch, "num_layers": num_layers,
+            "pattern": pattern, "density": density,
+            "buckets": list(buckets), "slots": slots, "requests": requests,
+            "mean_gap_s": mean_gap_s, "sla_s": sla_s, "seed": seed,
+            # structural: gated by benchmarks.check_sched_regression
+            "virtual": virtual,
+            "combine_sweep": sweep,
+            "cross_request_combine_factor": round(cross, 6),
+            "bitwise_corrupted": corrupted,
+            "schedule": {k: v for k, v in sched.items()
+                         if k != "per_bucket"},
+            # wall-clock: reported, never gated (CI machines vary)
+            "wall": wall,
+        }
+        with open(out, "w") as f:
+            json.dump(record, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"  wrote {out}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="VGGNet")
+    ap.add_argument("--num-layers", type=int, default=2)
+    ap.add_argument("--pattern", default="chunk")
+    ap.add_argument("--density", type=float, default=0.4)
+    ap.add_argument("--buckets", type=int, nargs="+", default=[8, 16])
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--mean-gap-s", type=float, default=0.03)
+    ap.add_argument("--sla-s", type=float, default=0.2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (fewer requests, one layer)")
+    ap.add_argument("--out", default=None,
+                    help="write the structural BENCH_serve_vision.json here")
+    args = ap.parse_args()
+    kw = dict(arch=args.arch, num_layers=args.num_layers,
+              pattern=args.pattern, density=args.density,
+              buckets=tuple(args.buckets), slots=args.slots,
+              requests=args.requests, mean_gap_s=args.mean_gap_s,
+              sla_s=args.sla_s, seed=args.seed, out=args.out)
+    if args.smoke:
+        kw.update(requests=8)
+    run(**kw)
+
+
+if __name__ == "__main__":
+    main()

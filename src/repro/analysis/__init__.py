@@ -28,14 +28,15 @@ from repro.analysis.diagnostics import (AnalysisError, Diagnostic, Severity,
                                         has_errors, raise_on_errors,
                                         render_github, render_text)
 from repro.analysis.verify import (verify_artifact, verify_block_sparse,
-                                   verify_chain, verify_ffn_leaves,
-                                   verify_model, verify_packed_conv,
-                                   verify_sparse_ffn, verify_worklist)
+                                   verify_chain, verify_combined_schedule,
+                                   verify_ffn_leaves, verify_model,
+                                   verify_packed_conv, verify_sparse_ffn,
+                                   verify_worklist)
 
 __all__ = [
     "AnalysisError", "Diagnostic", "Severity", "has_errors",
     "raise_on_errors", "render_github", "render_text",
     "verify_artifact", "verify_block_sparse", "verify_chain",
-    "verify_ffn_leaves", "verify_model", "verify_packed_conv",
-    "verify_sparse_ffn", "verify_worklist",
+    "verify_combined_schedule", "verify_ffn_leaves", "verify_model",
+    "verify_packed_conv", "verify_sparse_ffn", "verify_worklist",
 ]

@@ -53,6 +53,10 @@ register("WL-LIVE-MAP", E, "schedule equals the independently recomputed "
          "§3.2 live map (chunk table ∩ occupancy)", "pack+admission+ci")
 register("WL-STALE-CACHE", E, "cached work lists consistent with the "
          "current packed chunk table", "pack+admission+ci")
+register("WL-CROSS-DEDUP", E, "cross-request combined schedule fetches "
+         "each (stream, n_block, chunk) at most once per batch and covers "
+         "exactly the union of per-image live pairs",
+         "pack+admission+ci")
 
 register("BS-SHAPE", E, "chunk layout divides the packed [K, N] shape",
          "pack+admission+ci")
@@ -294,6 +298,111 @@ def verify_worklist(wl, *, indices: Optional[np.ndarray] = None,
             check_stream(k, indices, live1, "stream-1")
             if gate_indices is not None and k2 is not None:
                 check_stream(k2, gate_indices, live2, "stream-2 (gate)")
+
+    for mpi, cs in sorted(getattr(wl, "_combined", {}).items()):
+        out.extend(verify_combined_schedule(
+            wl, cs, mb_per_img=mpi, path=f"{path}/combined[{mpi}]"))
+    return out
+
+
+def verify_combined_schedule(wl, cs, *, mb_per_img: Optional[int] = None,
+                             path: str = "combined") -> List[Diagnostic]:
+    """Prove one cross-request :class:`~repro.kernels.worklist_core.
+    CombinedSchedule` against its flat schedule (WL-CROSS-DEDUP).
+
+    The per-image live chunk sets are recomputed here from the work
+    list's own flat arrays — never through ``WorkList.combined()`` — so
+    the production dedup cannot vouch for itself. Invariants: no
+    ``(stream, n_block, chunk)`` fetched twice within one combined batch
+    schedule; the fetch set covers *exactly* the union of per-image live
+    pairs; each fetch is issued at the first step requesting its chunk;
+    the request / per-image-baseline counters match the recount.
+    """
+    out: List[Diagnostic] = []
+    mpi = cs.mb_per_img if mb_per_img is None else mb_per_img
+    if mpi <= 0 or wl.mb % mpi or cs.images * mpi != wl.mb:
+        out.append(diag(
+            "WL-CROSS-DEDUP", path,
+            f"image granularity broken: mb_per_img={mpi}, "
+            f"images={cs.images} vs mb={wl.mb}",
+            hint="mb must equal images * mb_per_img (whole images share "
+                 "the batch)"))
+        return out
+    streams = [(0, _np(wl.k))]
+    if wl.k2 is not None:
+        streams.append((1, _np(wl.k2)))
+    n, m = _np(wl.n), _np(wl.m)
+    f_stream, f_n, f_k = (_np(cs.fetch_stream), _np(cs.fetch_n),
+                          _np(cs.fetch_k))
+    f_at = _np(cs.fetch_at)
+    if not (f_stream.shape == f_n.shape == f_k.shape == f_at.shape):
+        out.append(diag(
+            "WL-CROSS-DEDUP", path,
+            f"fetch arrays disagree in shape: {f_stream.shape} / "
+            f"{f_n.shape} / {f_k.shape} / {f_at.shape}",
+            hint="rebuild via WorkList.combined()"))
+        return out
+    fetch_keys = list(zip(f_stream.tolist(), f_n.tolist(), f_k.tolist()))
+    if len(set(fetch_keys)) != len(fetch_keys):
+        seen, dup = set(), None
+        for fk in fetch_keys:
+            if fk in seen:
+                dup = fk
+                break
+            seen.add(fk)
+        out.append(diag(
+            "WL-CROSS-DEDUP", path,
+            f"chunk (stream={dup[0]}, n={dup[1]}, k={dup[2]}) fetched "
+            f"more than once within one combined schedule",
+            hint="the cross-request plan must issue one fetch per "
+                 "distinct (n_block, chunk) per batch"))
+    expected = set()
+    per_image = 0
+    requests = 0
+    first_at = {}
+    for sid, ks in streams:
+        live = np.nonzero(ks >= 0)[0]
+        requests += int(live.size)
+        pairs = set()
+        img_pairs = set()
+        for t in live.tolist():
+            key = (sid, int(n[t]), int(ks[t]))
+            pairs.add(key)
+            img_pairs.add((int(m[t]) // mpi,) + key)
+            if key not in first_at:
+                first_at[key] = t
+        expected |= pairs
+        per_image += len(img_pairs)
+    missing = expected - set(fetch_keys)
+    extra = set(fetch_keys) - expected
+    if missing or extra:
+        out.append(diag(
+            "WL-CROSS-DEDUP", path,
+            f"fetch plan != union of per-image live pairs: "
+            f"{len(missing)} live chunk(s) never fetched, {len(extra)} "
+            f"fetch(es) of dead chunks",
+            hint="the deduped plan must cover exactly the distinct live "
+                 "(stream, n_block, chunk) set of the flat schedule"))
+    else:
+        bad_at = [(fk, int(at)) for fk, at in zip(fetch_keys,
+                                                  f_at.tolist())
+                  if first_at.get(fk) != at]
+        if bad_at:
+            fk, at = bad_at[0]
+            out.append(diag(
+                "WL-CROSS-DEDUP", path,
+                f"fetch for (stream={fk[0]}, n={fk[1]}, k={fk[2]}) issued "
+                f"at step {at}, first request is step {first_at[fk]}",
+                hint="a fetch is issued when the batch's first request "
+                     "for the chunk arrives (§3.2 combining)"))
+    if cs.requests != requests or cs.per_image_fetches != per_image:
+        out.append(diag(
+            "WL-CROSS-DEDUP", path,
+            f"counters drifted: requests {cs.requests} vs {requests} "
+            f"recounted, per_image_fetches {cs.per_image_fetches} vs "
+            f"{per_image}",
+            hint="the combine factor is measured from these — recount "
+                 "from the flat schedule"))
     return out
 
 

@@ -166,6 +166,59 @@ def combine_schedule_requests(chunk_ids: Sequence[int],
             "combine_factor": requests / max(fetches, 1e-9)}
 
 
+def combine_cross_requests(chunk_ids: Sequence[int],
+                           image_of: Sequence[int],
+                           fetch_latency: Optional[float] = None,
+                           groups: Sequence[int] = DEFAULT_TELESCOPE
+                           ) -> dict:
+    """The §3.2 combining model lifted *across the requests of a batch*.
+
+    ``chunk_ids`` is the batched schedule's per-step weight-chunk id (-1
+    = flush-only, no request) and ``image_of`` the image each step
+    belongs to. Two tapers of the same model are compared: the
+    *per-image* baseline runs the combiner over each image's request
+    stream separately (what per-request sequential serving issues — an
+    image can only combine with itself), while the *batched* pass runs
+    it over the interleaved stream, so requests from different images
+    landing inside one fetch window snarf a single fetch. Returns
+    ``requests`` (scheduled reads), ``per_image_fetches``, ``fetches``
+    (batched), ``combine_factor`` (per-image over batched — the
+    cross-request win; 1.0 at batch 1), and ``total_combine_factor``
+    (requests per batched fetch). The exact dedup counterpart —
+    identical schedules collapse to exactly one fetch regardless of
+    window size — is :meth:`repro.kernels.worklist_core.WorkList.
+    combined`; this model keeps the fetch-latency window, so it is the
+    one the cycle simulator's bandwidth story extends to serving.
+    """
+    ids = np.asarray(chunk_ids)
+    imgs = np.asarray(image_of)
+    assert ids.shape == imgs.shape, (ids.shape, imgs.shape)
+    times = np.nonzero(ids >= 0)[0].astype(np.float64)
+    imgs = imgs[ids >= 0]
+    ids = ids[ids >= 0]
+    if ids.size == 0:
+        return {"requests": 0, "per_image_fetches": 0.0, "fetches": 0.0,
+                "combine_factor": 1.0, "total_combine_factor": 1.0}
+    if fetch_latency is None:
+        fetch_latency = float(ids.size) / max(len(np.unique(ids)), 1)
+    batched = 0.0
+    per_image = 0.0
+    for u in np.unique(ids):
+        sel = ids == u
+        batched += telescoping_combine(times[sel], fetch_latency,
+                                       groups=groups).fetches
+        for im in np.unique(imgs[sel]):
+            per_image += telescoping_combine(
+                times[sel & (imgs == im)], fetch_latency,
+                groups=groups).fetches
+    requests = int(ids.size)
+    return {"requests": requests,
+            "per_image_fetches": float(per_image),
+            "fetches": float(batched),
+            "combine_factor": per_image / max(batched, 1e-9),
+            "total_combine_factor": requests / max(batched, 1e-9)}
+
+
 def uncombined_fetches(num_nodes: int, spread: float, fetch_latency: float,
                        rng: np.random.Generator, trials: int = 64) -> float:
     """No-opts baseline: every request past the in-flight window refetches."""

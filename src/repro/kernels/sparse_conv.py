@@ -479,7 +479,8 @@ def sparse_conv2d_nhwc(x: jnp.ndarray, w: bm.BlockSparseMatrix, kh: int,
             # count, so repeat eager calls reuse the compacted list
             wl = wl_cache.get(mb)
         if wl is None:
-            wl = build_worklist(w.host_indices(), mb, occ_blk=occ_blk)
+            wl = build_worklist(w.host_indices(), mb, occ_blk=occ_blk,
+                                mb_per_img=m_pad // bm_rows)
             if occ_blk is None and wl_cache is not None:
                 wl_cache[mb] = wl
         aux["schedule"] = dict(
@@ -491,12 +492,22 @@ def sparse_conv2d_nhwc(x: jnp.ndarray, w: bm.BlockSparseMatrix, kh: int,
             # weight-stationary reuse window)
             aux["schedule"]["combining"] = combine_schedule_requests(
                 wl.k, fetch_latency=wl.num_steps / max(wl.num_pairs, 1))
+            # §3.2 lifted across the batch: the exact deduped fetch plan
+            cs = wl.combined()
+            aux["schedule"]["cross_request"] = {
+                "requests": cs.requests,
+                "per_image_fetches": cs.per_image_fetches,
+                "fetches": cs.num_fetches,
+                "images": cs.images,
+                "combine_factor": cs.cross_request_combine_factor,
+            }
             if occ_blk is not None:
                 # what the static (pack-time-only) schedule would run —
                 # the compiled pipeline's grid size for this geometry
                 wl_s = wl_cache.get(mb) if wl_cache is not None else None
                 if wl_s is None:
-                    wl_s = build_worklist(w.host_indices(), mb)
+                    wl_s = build_worklist(w.host_indices(), mb,
+                                          mb_per_img=m_pad // bm_rows)
                     if wl_cache is not None:
                         wl_cache[mb] = wl_s
                 aux["schedule"]["static_scheduled_steps"] = wl_s.num_steps

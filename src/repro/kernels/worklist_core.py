@@ -41,7 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -124,6 +124,100 @@ def activation_occupancy(x: jnp.ndarray, sub_m: int, bk: int) -> jnp.ndarray:
 # Telescoped work-list compaction (BARISTA §3.2 applied to the grid)
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
+class CombinedSchedule:
+    """Cross-request telescoped fetch plan for one batched schedule.
+
+    §3.2 request combining lifted *across the images of a batch*: the
+    flat work list schedules one weight-chunk read per live step, but
+    images sharing a batch walk the same pack-time chunk lists, so a
+    filter chunk ``(n_block, k-chunk)`` requested by several images needs
+    only **one** fetch per batch. This plan is *derived from* the flat
+    schedule — execution order (and hence the fp32 accumulation-order
+    bitwise contract) is untouched; only the fetch stream is deduped.
+
+    ``fetch_*`` list the deduped fetches in schedule order:
+    ``fetch_at[i]`` is the flat step at which chunk
+    ``(fetch_stream[i], fetch_n[i], fetch_k[i])`` is first requested
+    (stream 1 is the gated FFN's second weight stream). ``requests`` is
+    what the un-combined schedule would issue (one read per live step
+    and stream); ``per_image_fetches`` is the per-image-dedup baseline
+    (each image fetches its own distinct live chunks — what per-request
+    sequential serving does); ``num_fetches`` is the batch-wide dedup.
+    """
+
+    fetch_stream: np.ndarray          # [F] int32 (0 = k, 1 = k2/gate)
+    fetch_n: np.ndarray               # [F] int32 n_block
+    fetch_k: np.ndarray               # [F] int32 weight k-chunk id
+    fetch_at: np.ndarray              # [F] int64 issuing flat step
+    mb_per_img: int
+    images: int
+    requests: int
+    per_image_fetches: int
+
+    @property
+    def num_fetches(self) -> int:
+        return int(self.fetch_n.shape[0])
+
+    @property
+    def cross_request_combine_factor(self) -> float:
+        """Fetches saved vs per-request sequential execution (≈ the batch
+        width when the batch shares one static schedule; 1.0 at batch 1)."""
+        return self.per_image_fetches / max(self.num_fetches, 1)
+
+    @property
+    def combine_factor(self) -> float:
+        """Total schedule reads per actual fetch (intra-image reuse x
+        cross-request dedup)."""
+        return self.requests / max(self.num_fetches, 1)
+
+
+def _build_combined(wl: "WorkList", mpi: int) -> CombinedSchedule:
+    """Dedup the flat schedule's per-step chunk reads batch-wide (one
+    fetch per distinct (stream, n_block, chunk)) and count the per-image
+    baseline. Pure host numpy over the already-built flat arrays."""
+    if wl.mb % mpi:
+        raise ValueError(f"mb_per_img={mpi} does not divide mb={wl.mb}")
+    images = wl.mb // mpi
+    streams: Tuple[Tuple[int, np.ndarray], ...] = ((0, wl.k),)
+    if wl.k2 is not None:
+        streams = streams + ((1, wl.k2),)
+    f_stream, f_n, f_k, f_at = [], [], [], []
+    requests = 0
+    per_image = 0
+    for sid, ks in streams:
+        live = np.nonzero(ks >= 0)[0]
+        if live.size == 0:
+            continue
+        n64 = wl.n[live].astype(np.int64)
+        k64 = ks[live].astype(np.int64)
+        kmax = int(k64.max()) + 1
+        key = n64 * kmax + k64
+        # np.unique's return_index is the *first* occurrence — `live` is
+        # in flat-schedule order, so fetch_at is the earliest request
+        _, first_idx = np.unique(key, return_index=True)
+        f_stream.append(np.full(first_idx.size, sid, np.int32))
+        f_n.append(wl.n[live][first_idx])
+        f_k.append(ks[live][first_idx])
+        f_at.append(live[first_idx].astype(np.int64))
+        requests += int(live.size)
+        img = (wl.m[live] // mpi).astype(np.int64)
+        per_image += int(np.unique(img * (wl.nb * kmax) + key).size)
+    if f_n:
+        stream = np.concatenate(f_stream)
+        n_arr = np.concatenate(f_n)
+        k_arr = np.concatenate(f_k)
+        at = np.concatenate(f_at)
+        order = np.argsort(at, kind="stable")   # schedule-ordered plan
+        stream, n_arr, k_arr, at = (stream[order], n_arr[order],
+                                    k_arr[order], at[order])
+    else:
+        stream = n_arr = k_arr = np.zeros((0,), np.int32)
+        at = np.zeros((0,), np.int64)
+    return CombinedSchedule(stream, n_arr, k_arr, at, mpi, images,
+                            requests, per_image)
+
+
+@dataclasses.dataclass
 class WorkList:
     """Compacted schedule for a chunk-block-sparse matmul grid.
 
@@ -165,6 +259,12 @@ class WorkList:
     mb: int
     max_nz: int
     k2: Optional[np.ndarray] = None
+    # images sharing this batched schedule (mb == images * mb_per_img);
+    # None = unknown (single-image / FFN schedules). Set by the conv
+    # frontend so serving layers can derive cross-request fetch plans.
+    mb_per_img: Optional[int] = None
+    _combined: Dict[int, CombinedSchedule] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     @property
     def num_steps(self) -> int:
@@ -200,6 +300,19 @@ class WorkList:
             arrs = arrs + (self.k2,)
         return tuple(jnp.asarray(a) for a in arrs)
 
+    def combined(self, mb_per_img: Optional[int] = None) -> CombinedSchedule:
+        """The cross-request telescoped fetch plan for this schedule
+        (cached per image granularity). ``mb_per_img`` overrides the
+        build-time value; with neither set the whole batch counts as one
+        image (cross factor 1.0 — nothing to combine across)."""
+        mpi = mb_per_img if mb_per_img is not None else self.mb_per_img
+        mpi = self.mb if mpi is None else mpi
+        cs = self._combined.get(mpi)
+        if cs is None:
+            cs = _build_combined(self, mpi)
+            self._combined[mpi] = cs
+        return cs
+
 
 # imported under this name by the conv frontend since PR 5
 ConvWorkList = WorkList
@@ -222,7 +335,8 @@ def _live_map(indices: np.ndarray, mb: int,
 
 def build_worklist(indices: np.ndarray, mb: int, *,
                    occ_blk: Optional[np.ndarray] = None,
-                   gate_indices: Optional[np.ndarray] = None) -> WorkList:
+                   gate_indices: Optional[np.ndarray] = None,
+                   mb_per_img: Optional[int] = None) -> WorkList:
     """Compact a [nb, max_nz] chunk index table into a :class:`WorkList`.
 
     ``indices`` is the packed weight layout's per-n-block k-chunk list (-1
@@ -234,9 +348,14 @@ def build_worklist(indices: np.ndarray, mb: int, *,
     sharing the slot axis (the gated FFN's aligned in/gate chunk lists):
     the schedule is the *union* of the two streams' live sets and the
     flat ``k``/``k2`` arrays carry each stream's chunk per step (-1 where
-    that stream is dead at the slot).
+    that stream is dead at the slot). ``mb_per_img`` records how many
+    row blocks belong to one image of the batch (the conv frontend's
+    ``m_pad // bm_rows``) so :meth:`WorkList.combined` can derive the
+    cross-request telescoped fetch plan.
     """
     indices = np.asarray(indices)
+    if mb_per_img is not None and mb % mb_per_img:
+        raise ValueError(f"mb_per_img={mb_per_img} does not divide mb={mb}")
     nb, max_nz = indices.shape
     live1 = _live_map(indices, mb, occ_blk)
     if gate_indices is None:
@@ -276,7 +395,7 @@ def build_worklist(indices: np.ndarray, mb: int, *,
     last = (pos == counts[pair] - 1).astype(np.int32)
     return WorkList(n_arr, m_arr, k_arr, j_arr.astype(np.int32), first,
                     last, ragged, steps.astype(np.int32), nb, mb, max_nz,
-                    k2=k2_arr)
+                    k2=k2_arr, mb_per_img=mb_per_img)
 
 
 # ---------------------------------------------------------------------------
@@ -340,8 +459,9 @@ def schedule_stats(patches: Optional[jnp.ndarray], indices: jnp.ndarray, *,
 
 
 def schedule_counters(wl: WorkList, *,
-                      predicated_steps: Optional[int] = None
-                      ) -> Dict[str, float]:
+                      predicated_steps: Optional[int] = None,
+                      combine: bool = False,
+                      mb_per_img: Optional[int] = None) -> Dict[str, float]:
     """The unified schedule-counters record both serving layers report.
 
     ``predicated_steps`` (optional) is the step count of the in-lane
@@ -349,6 +469,13 @@ def schedule_counters(wl: WorkList, *,
     that is the dense grid at ``sub_m`` sub-block granularity over the
     128-row-padded batch, which is what makes the decode compaction
     factor honest about what the old kernel actually iterated.
+
+    ``combine=True`` adds the cross-request telescoped fetch-plan
+    counters (:meth:`WorkList.combined` at ``mb_per_img`` granularity,
+    defaulting to the build-time value): schedule chunk reads, the
+    per-image-dedup baseline (per-request sequential serving), the
+    batch-wide deduped fetches, and the resulting
+    ``cross_request_combine_factor``.
     """
     rec = {"scheduled_steps": wl.num_steps,
            "live_chunk_steps": wl.mac_steps,
@@ -357,6 +484,14 @@ def schedule_counters(wl: WorkList, *,
     if predicated_steps is not None:
         rec["predicated_grid_steps"] = int(predicated_steps)
         rec["compaction_factor"] = predicated_steps / max(wl.num_steps, 1)
+    if combine:
+        cs = wl.combined(mb_per_img)
+        rec["filter_chunk_requests"] = cs.requests
+        rec["per_image_filter_fetches"] = cs.per_image_fetches
+        rec["combined_filter_fetches"] = cs.num_fetches
+        rec["images"] = cs.images
+        rec["cross_request_combine_factor"] = \
+            cs.cross_request_combine_factor
     return rec
 
 

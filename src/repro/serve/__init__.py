@@ -2,17 +2,23 @@
 
 ``engine`` holds the jitted math (per-slot-position decode step, cache-
 writing single-pass prefill, slot admit/reset); ``scheduler`` holds the
-host-side request queue and slot table.
+host-side request queue and slot table. ``vision`` is the image-serving
+counterpart: an SLA-aware, shape-bucketed engine whose batched schedules
+telescope filter-chunk fetches *across* requests.
 """
 from repro.serve.engine import (generate, jitted_admit, jitted_ffn_stats,
                                 jitted_prefill, jitted_serve_step,
                                 make_admit_fn, make_ffn_stats_fn,
                                 make_prefill_fn, make_serve_step, reset_slots)
 from repro.serve.scheduler import Request, Scheduler, ServeStats
+from repro.serve.vision import (RequestRecord, VirtualClock, VisionServer,
+                                VisionServeStats, WallClock)
 
 __all__ = [
     "generate", "jitted_admit", "jitted_ffn_stats", "jitted_prefill",
     "jitted_serve_step", "make_admit_fn", "make_ffn_stats_fn",
     "make_prefill_fn", "make_serve_step", "reset_slots",
     "Request", "Scheduler", "ServeStats",
+    "RequestRecord", "VirtualClock", "VisionServer", "VisionServeStats",
+    "WallClock",
 ]

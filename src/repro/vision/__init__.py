@@ -10,12 +10,14 @@ from repro.kernels.autotune import (ConvTileConfig, TuneRecord, autotune_conv,
 from repro.vision.engine import ImageRequest, VisionEngine, VisionStats
 from repro.vision.model import (SUPPORTED_ARCHS, VisionModel,
                                 build_vision_model, compile_forward,
-                                dense_forward, forward, layer_table,
+                                dense_forward, fit_image, forward,
+                                layer_geometry, layer_table,
                                 measured_densities, oracle_check,
-                                schedule_summary)
+                                route_bucket, schedule_summary)
 
 __all__ = ["ImageRequest", "VisionEngine", "VisionStats", "SUPPORTED_ARCHS",
            "VisionModel", "build_vision_model", "compile_forward",
-           "dense_forward", "forward", "layer_table", "measured_densities",
-           "oracle_check", "schedule_summary", "ConvTileConfig",
+           "dense_forward", "fit_image", "forward", "layer_geometry",
+           "layer_table", "measured_densities", "oracle_check",
+           "route_bucket", "schedule_summary", "ConvTileConfig",
            "TuneRecord", "autotune_conv", "autotune_model"]

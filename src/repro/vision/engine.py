@@ -35,11 +35,22 @@ from repro.vision import model as VM
 
 @dataclasses.dataclass
 class ImageRequest:
-    """One inference request. ``arrival`` is the engine step at which the
-    request becomes visible (staggered arrivals exercise admission)."""
+    """One inference request.
+
+    Two arrival semantics coexist deliberately:
+
+    * ``arrival`` — an engine-*step* index (this engine's deterministic
+      test mode: admission decisions replay exactly, no clock involved);
+    * ``arrival_s`` / ``deadline_s`` — wall-clock seconds relative to the
+      serving run's start, consumed by the SLA-aware
+      :class:`repro.serve.vision.VisionServer` (``deadline_s`` None =
+      best-effort, never counted as an SLA miss).
+    """
     rid: int
     image: np.ndarray            # [H, W, C] float32
     arrival: int = 0
+    arrival_s: float = 0.0
+    deadline_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -118,18 +129,48 @@ class VisionEngine:
         under ``"schedule"`` (:func:`repro.kernels.worklist_core.
         schedule_counters`): ``scheduled_steps`` / ``live_chunk_steps`` /
         ``flush_only_steps`` / ``dense_grid_steps`` plus the derived
-        ``grid_compaction``. ``None`` before the first compile (no work
-        lists built yet).
+        ``grid_compaction``, the §3.2 request-combining model totals
+        (``schedule_requests`` / ``schedule_fetches`` /
+        ``combine_factor`` — previously computed only inside
+        ``vision_bench``), and the exact cross-request dedup counters
+        (``per_image_filter_fetches`` / ``combined_filter_fetches`` /
+        ``cross_request_combine_factor``). ``None`` before the first
+        compile (no work lists built yet).
         """
+        from repro.core.telescope import combine_schedule_requests
         from repro.kernels.worklist_core import schedule_counters
-        records = [schedule_counters(wl)
-                   for layer in self.model.layers
-                   for wl in layer.conv.wl_cache.values()]
-        if not records:
+        wls = [wl for layer in self.model.layers
+               for wl in layer.conv.wl_cache.values()]
+        # count only this engine's batch geometry: other servers sharing
+        # the model leave their own widths in the cache
+        mine = [wl for wl in wls
+                if wl.mb_per_img and wl.mb == self.num_slots * wl.mb_per_img]
+        wls = mine or wls
+        if not wls:
             return None
-        tot = {k: float(sum(r[k] for r in records)) for k in records[0]}
+        records = [schedule_counters(wl, combine=True) for wl in wls]
+        sum_keys = ("scheduled_steps", "live_chunk_steps",
+                    "flush_only_steps", "dense_grid_steps",
+                    "filter_chunk_requests", "per_image_filter_fetches",
+                    "combined_filter_fetches")
+        tot: Dict[str, float] = {k: float(sum(r[k] for r in records))
+                                 for k in sum_keys}
         tot["grid_compaction"] = 1.0 - (tot["scheduled_steps"]
                                         / max(tot["dense_grid_steps"], 1.0))
+        tot["cross_request_combine_factor"] = (
+            tot["per_image_filter_fetches"]
+            / max(tot["combined_filter_fetches"], 1.0))
+        # the §3.2 fetch-window combining model over each layer's schedule
+        # (a fetch stays outstanding for ~one pair's sweep)
+        combining = [combine_schedule_requests(
+            wl.k, fetch_latency=wl.num_steps / max(wl.num_pairs, 1))
+            for wl in wls]
+        tot["schedule_requests"] = float(
+            sum(c["requests"] for c in combining))
+        tot["schedule_fetches"] = float(
+            sum(c["fetches"] for c in combining))
+        tot["combine_factor"] = (tot["schedule_requests"]
+                                 / max(tot["schedule_fetches"], 1e-9))
         return tot
 
     # -- queue -------------------------------------------------------------
@@ -145,7 +186,8 @@ class VisionEngine:
             raise ValueError(
                 f"request {req.rid}: image shape {img.shape} != engine "
                 f"shape {self._image_shape} (one engine serves one size)")
-        self.queue.append(ImageRequest(req.rid, img, req.arrival))
+        self.queue.append(ImageRequest(req.rid, img, req.arrival,
+                                       req.arrival_s, req.deadline_s))
 
     @property
     def idle(self) -> bool:

@@ -27,7 +27,7 @@ import numpy as np
 from repro.core import simulator as S
 from repro.core.sparse import Padding, Stride
 from repro.kernels.bitmask_spmm import DEFAULT_BM
-from repro.kernels.sparse_conv import sparse_conv2d_nhwc
+from repro.kernels.sparse_conv import conv_out_size, sparse_conv2d_nhwc
 from repro.sparsity.conv import PackedConv, build_sparse_chain
 
 # stem geometry per arch: (canonical input size, layer-0 stride, padding)
@@ -118,6 +118,74 @@ def build_vision_model(name: str = "VGGNet", *,
                 if i + 1 < len(specs) else None)
         layers.append(VisionLayer(conv, stride, padding, pool))
     return VisionModel(name, layers, stem_size, density)
+
+
+def route_bucket(buckets: Tuple[int, ...], h: int, w: int) -> int:
+    """Canonical shape for an [h, w] image: the smallest bucket that holds
+    it (zero-pad up — never upsize past the next canonical shape), or the
+    largest bucket when the image exceeds every one (downscale).
+
+    The GrateTile framing: a small set of canonical shapes bounds the
+    compile count while the padding cost per image stays below one bucket
+    step.
+    """
+    if not buckets:
+        raise ValueError("need at least one shape bucket")
+    side = max(h, w)
+    for b in sorted(buckets):
+        if side <= b:
+            return b
+    return max(buckets)
+
+
+def fit_image(image: np.ndarray, size: int) -> np.ndarray:
+    """Canonicalize one [H, W, C] image to [size, size, C].
+
+    Images at or under the bucket are zero-padded bottom/right — content
+    is preserved *exactly* (padded pixels are dead and the two-sided skip
+    elides their row blocks), which is what keeps batched outputs bitwise
+    comparable to per-request runs. Oversized images are area-resampled
+    down (lossy — only taken past the largest bucket).
+    """
+    img = np.asarray(image, np.float32)
+    if img.ndim != 3:
+        raise ValueError(f"image must be [H, W, C], got {img.shape}")
+    h, w, c = img.shape
+    if h <= size and w <= size:
+        return np.pad(img, ((0, size - h), (0, size - w), (0, 0)))
+    out = jax.image.resize(jnp.asarray(img), (size, size, c), "linear")
+    return np.asarray(out, np.float32)
+
+
+def layer_geometry(model: VisionModel, input_size: int, *,
+                   bm_rows: int = DEFAULT_BM,
+                   use_tuned: bool = False) -> List[Dict[str, int]]:
+    """Static per-layer geometry walk for one input size (host arithmetic
+    only — no trace, no kernel). Mirrors :func:`_forward_layers` exactly:
+    conv output size per layer spec, row padding to whole ``bm_rows``
+    blocks, and the pool placement rule of :func:`max_pool` (skipped when
+    the map is smaller than the window). Returns one dict per layer with
+    ``oh/ow/m_img/m_pad/bm_rows/mb_per_img`` — what serving layers need
+    to attribute cached work lists to shape buckets and to build
+    cross-request fetch plans without compiling."""
+    out: List[Dict[str, int]] = []
+    h = w = input_size
+    for layer in model.layers:
+        c = layer.conv
+        cfg = c.tuned.config if (use_tuned and c.tuned is not None) else None
+        bm = cfg.bm_rows if cfg else bm_rows
+        oh, ow = conv_out_size(h, w, c.kh, c.kw, layer.stride, layer.padding)
+        oh, ow = int(oh), int(ow)
+        m_img = oh * ow
+        m_pad = m_img + (-m_img) % bm
+        out.append({"oh": oh, "ow": ow, "m_img": m_img, "m_pad": m_pad,
+                    "bm_rows": bm, "mb_per_img": m_pad // bm})
+        h, w = oh, ow
+        if layer.pool_after is not None and min(h, w) >= layer.pool_after[0]:
+            win, s = layer.pool_after
+            h = (h - win) // s + 1
+            w = (w - win) // s + 1
+    return out
 
 
 def max_pool(x: jnp.ndarray, window: int, stride: int) -> jnp.ndarray:

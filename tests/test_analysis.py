@@ -19,8 +19,9 @@ import pytest
 
 from repro.analysis import (AnalysisError, Severity, has_errors,
                             verify_block_sparse, verify_chain,
-                            verify_ffn_leaves, verify_model,
-                            verify_packed_conv, verify_worklist)
+                            verify_combined_schedule, verify_ffn_leaves,
+                            verify_model, verify_packed_conv,
+                            verify_worklist)
 from repro.analysis.astlint import lint_source, lint_tree
 from repro.analysis.diagnostics import REGISTRY, render_github, render_text
 from repro.core.bitmask import block_sparsify
@@ -118,6 +119,69 @@ def test_defect_wl_wrong_first_last(packed):
     last[np.nonzero(last)[0][0]] = 0
     got = _rules(verify_worklist(_flat_replace(wl, last=last), indices=idx))
     assert "WL-FIRST-LAST" in got
+
+
+@pytest.fixture(scope="module")
+def combined():
+    """A batched work list (2 images x 2 row blocks) plus its
+    cross-request fetch plan, for WL-CROSS-DEDUP mutations."""
+    m = _mat(seed=5)
+    idx = m.host_indices()
+    wl = build_worklist(idx, 4, mb_per_img=2)
+    return idx, wl, wl.combined()
+
+
+def test_defect_cross_duplicate_fetch(combined):
+    """The same (n_block, chunk) fetched twice in one batch — the exact
+    redundancy cross-request telescoping exists to remove."""
+    idx, wl, cs = combined
+    dup = {f: np.concatenate([np.asarray(getattr(cs, f)),
+                              np.asarray(getattr(cs, f))[:1]])
+           for f in ("fetch_stream", "fetch_n", "fetch_k", "fetch_at")}
+    bad = dataclasses.replace(cs, **dup)
+    assert "WL-CROSS-DEDUP" in _rules(verify_combined_schedule(wl, bad))
+
+
+def test_defect_cross_dropped_fetch(combined):
+    """A live chunk nobody fetches: the plan no longer covers the union
+    of per-image live pairs."""
+    idx, wl, cs = combined
+    cut = {f: np.asarray(getattr(cs, f))[1:]
+           for f in ("fetch_stream", "fetch_n", "fetch_k", "fetch_at")}
+    bad = dataclasses.replace(cs, **cut)
+    assert "WL-CROSS-DEDUP" in _rules(verify_combined_schedule(wl, bad))
+
+
+def test_defect_cross_late_fetch(combined):
+    """Fetch issued after the batch's first request for the chunk."""
+    idx, wl, cs = combined
+    at = np.asarray(cs.fetch_at).copy()
+    at[0] += 1
+    bad = dataclasses.replace(cs, fetch_at=at)
+    assert "WL-CROSS-DEDUP" in _rules(verify_combined_schedule(wl, bad))
+
+
+def test_defect_cross_counter_drift(combined):
+    """per_image_fetches feeds the combine factor — a drifted counter
+    silently inflates the reported win."""
+    idx, wl, cs = combined
+    bad = dataclasses.replace(cs, per_image_fetches=cs.per_image_fetches + 3)
+    assert "WL-CROSS-DEDUP" in _rules(verify_combined_schedule(wl, bad))
+
+
+def test_defect_cross_bad_granularity(combined):
+    idx, wl, cs = combined
+    bad = dataclasses.replace(cs, mb_per_img=3)   # does not divide mb=4
+    assert "WL-CROSS-DEDUP" in _rules(verify_combined_schedule(wl, bad))
+
+
+def test_cross_dedup_clean_via_worklist(combined):
+    """verify_worklist walks the populated ``_combined`` cache: the real
+    plans (both image granularities) must verify clean."""
+    idx, wl, cs = combined
+    wl.combined(mb_per_img=1)                     # second granularity
+    assert not _rules(verify_worklist(wl, indices=idx))
+    assert "WL-CROSS-DEDUP" in REGISTRY
 
 
 def test_defect_bs_zeroed_live_tile(packed):

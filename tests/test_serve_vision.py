@@ -1,0 +1,278 @@
+"""SLA-aware vision serving: bucket routing, deterministic admission /
+SLA-miss accounting under the virtual clock, batch-composition bitwise
+invariance on both executors, and the cross-request telescoped schedule
+counters the engine surfaces."""
+import jax
+import numpy as np
+import pytest
+
+from repro.kernels.worklist_core import build_worklist
+from repro.serve.vision import (VirtualClock, VisionServer, WallClock)
+from repro.vision import (ImageRequest, VisionEngine, build_vision_model,
+                          compile_forward, fit_image, layer_geometry,
+                          route_bucket)
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(7)
+
+
+@pytest.fixture(scope="module")
+def model():
+    return build_vision_model("VGGNet", num_layers=1, seed=0)
+
+
+@pytest.fixture(scope="module")
+def model2():
+    return build_vision_model("VGGNet", num_layers=2, seed=0,
+                              pattern="chunk", density=0.4)
+
+
+def _img(rng, size):
+    return np.abs(rng.normal(size=(size, size, 3))).astype(np.float32)
+
+
+def _req(rng, rid, size, arrival_s=0.0, deadline_s=None):
+    return ImageRequest(rid=rid, image=_img(rng, size),
+                        arrival_s=arrival_s, deadline_s=deadline_s)
+
+
+# ---------------------------------------------------------------------------
+# bucket routing + canonicalization
+# ---------------------------------------------------------------------------
+def test_bucket_routing_never_upsizes_past_next():
+    buckets = (8, 16, 24)
+    for side in range(1, 25):
+        expect = next(b for b in buckets if side <= b)
+        assert route_bucket(buckets, side, side) == expect
+        assert route_bucket(buckets, side, 1) == expect   # max(h, w) rules
+    # past the largest canonical shape: downscale, never invent a bucket
+    assert route_bucket(buckets, 25, 25) == 24
+    assert route_bucket(buckets, 100, 3) == 24
+
+
+def test_fit_image_pads_exactly_within_bucket(rng):
+    img = _img(rng, 10)
+    fitted = fit_image(img, 16)
+    assert fitted.shape == (16, 16, 3)
+    np.testing.assert_array_equal(fitted[:10, :10], img)
+    assert (fitted[10:] == 0).all() and (fitted[:, 10:] == 0).all()
+    # oversized images resample down (lossy path, largest bucket only)
+    assert fit_image(_img(rng, 20), 16).shape == (16, 16, 3)
+
+
+def test_layer_geometry_matches_traced_cache(model2):
+    """The static walk must predict exactly the row-block counts the
+    compiled forward bakes into the wl_cache."""
+    size, slots = 16, 2
+    srv = VisionServer(model2, num_slots=slots, buckets=(size,),
+                       clock=VirtualClock(), step_cost_s=0.1)
+    srv.warmup()
+    for layer, g in zip(model2.layers, layer_geometry(model2, size)):
+        assert slots * g["mb_per_img"] in layer.conv.wl_cache
+
+
+# ---------------------------------------------------------------------------
+# deterministic admission + SLA accounting (virtual clock)
+# ---------------------------------------------------------------------------
+def test_virtual_clock_requires_step_cost(model):
+    with pytest.raises(ValueError):
+        VisionServer(model, buckets=(8,), clock=VirtualClock())
+
+
+def test_overload_sla_miss_accounting_exact(rng, model):
+    """6 requests, 2 slots, 1s steps, 1s SLA: batch 1 meets, batches 2
+    and 3 miss — the counts must be exact, and re-derivable from the
+    completion records."""
+    srv = VisionServer(model, num_slots=2, buckets=(8,),
+                       clock=VirtualClock(), step_cost_s=1.0)
+    srv.run([_req(rng, i, 8, arrival_s=0.0, deadline_s=1.0)
+             for i in range(6)])
+    assert srv.stats.images == 6
+    assert srv.stats.engine_steps == 3
+    assert srv.stats.deadlined == 6
+    assert srv.stats.sla_misses == 4
+    assert srv.stats.sla_miss_rate == pytest.approx(4 / 6)
+    # EDF tiebreak is (arrival, rid): completion times replay exactly
+    assert [srv.records[i].done_s for i in range(6)] == \
+        [1.0, 1.0, 2.0, 2.0, 3.0, 3.0]
+    assert sum(r.missed for r in srv.records.values()) == 4
+    assert sorted(srv.stats.latencies_s) == [1.0, 1.0, 2.0, 2.0, 3.0, 3.0]
+
+
+def test_staggered_arrivals_idle_between(rng, model):
+    """Arrival gaps wider than the step cost: the event-driven loop idles
+    to each arrival, so every request sees exactly one step of latency."""
+    srv = VisionServer(model, num_slots=2, buckets=(8,),
+                       clock=VirtualClock(), step_cost_s=1.0)
+    srv.run([_req(rng, i, 8, arrival_s=2.0 * i, deadline_s=2.0 * i + 1.5)
+             for i in range(3)])
+    assert srv.stats.engine_steps == 3
+    assert srv.stats.sla_misses == 0
+    for i in range(3):
+        assert srv.records[i].done_s == pytest.approx(2.0 * i + 1.0)
+        assert srv.records[i].latency_s == pytest.approx(1.0)
+
+
+def test_admission_yields_to_urgent_bucket(rng, model):
+    """Throughput-max would run the full big-bucket batch first, but that
+    would bust the small request's deadline avoidably — SLA-aware
+    admission serves the urgent bucket first."""
+    reqs = [_req(rng, 0, 16, arrival_s=0.0),
+            _req(rng, 1, 16, arrival_s=0.0),
+            _req(rng, 2, 8, arrival_s=0.0, deadline_s=1.5)]
+    srv = VisionServer(model, num_slots=2, buckets=(8, 16),
+                       clock=VirtualClock(),
+                       step_cost_s={8: 1.0, 16: 1.0})
+    srv.run(reqs)
+    assert srv.stats.sla_misses == 0
+    assert srv.records[2].done_s == pytest.approx(1.0)   # small served first
+    assert srv.records[0].done_s == pytest.approx(2.0)
+    # without the deadline, throughput-max runs the fuller bucket first
+    srv2 = VisionServer(model, num_slots=2, buckets=(8, 16),
+                        clock=VirtualClock(),
+                        step_cost_s={8: 1.0, 16: 1.0})
+    srv2.run([ImageRequest(r.rid, r.image, arrival_s=r.arrival_s)
+              for r in reqs])
+    assert srv2.records[0].done_s == pytest.approx(1.0)
+    assert srv2.records[2].done_s == pytest.approx(2.0)
+
+
+def test_round_robin_fallback_when_unconstrained(rng, model):
+    """No deadlines and tied throughput: bucket choice must rotate
+    (BARISTA round-robin), not pin one bucket."""
+    reqs = [_req(rng, 0, 8), _req(rng, 1, 8),
+            _req(rng, 2, 16), _req(rng, 3, 16)]
+    srv = VisionServer(model, num_slots=1, buckets=(8, 16),
+                       clock=VirtualClock(),
+                       step_cost_s={8: 1.0, 16: 1.0})
+    srv.run(reqs)
+    order = sorted(srv.records.values(), key=lambda r: r.done_s)
+    assert [r.bucket for r in order] == [8, 16, 8, 16]
+
+
+def test_best_effort_requests_never_count_as_misses(rng, model):
+    srv = VisionServer(model, num_slots=1, buckets=(8,),
+                       clock=VirtualClock(), step_cost_s=5.0)
+    srv.run([_req(rng, i, 8) for i in range(3)])       # no deadlines
+    assert srv.stats.deadlined == 0
+    assert srv.stats.sla_misses == 0
+    assert srv.stats.sla_miss_rate == 0.0
+
+
+def test_default_sla_applies_to_undeadlined(rng, model):
+    srv = VisionServer(model, num_slots=1, buckets=(8,),
+                       clock=VirtualClock(), step_cost_s=1.0,
+                       default_sla_s=1.5)
+    srv.run([_req(rng, i, 8) for i in range(2)])
+    assert srv.stats.deadlined == 2
+    assert srv.stats.sla_misses == 1                   # second waits a step
+
+
+# ---------------------------------------------------------------------------
+# batch-composition invariance (bitwise, both executors)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("executor", ["pallas", "xla"])
+def test_batched_equals_sequential_bitwise(rng, model, executor):
+    """The batched server's outputs must be bitwise-equal to per-request
+    sequential execution — the §3.2 schedule dedup only touches the fetch
+    plan, never the accumulation order."""
+    reqs = [_req(rng, i, s) for i, s in enumerate((8, 6, 8, 7))]
+    batched = VisionServer(model, num_slots=4, buckets=(8,),
+                           clock=VirtualClock(), step_cost_s=1.0,
+                           executor=executor)
+    out_b = batched.run(reqs)
+    assert batched.stats.engine_steps == 1             # one shared batch
+    solo = VisionServer(model, num_slots=1, buckets=(8,),
+                        clock=VirtualClock(), step_cost_s=1.0,
+                        executor=executor)
+    out_s = solo.run([ImageRequest(r.rid, r.image) for r in reqs])
+    assert solo.stats.engine_steps == 4                # per-request runs
+    for r in reqs:
+        assert np.array_equal(out_b[r.rid], out_s[r.rid]), \
+            f"rid {r.rid} not bitwise-equal under executor={executor}"
+
+
+def test_mixed_buckets_match_compiled_forward(rng, model2):
+    """Routing through different buckets must reproduce the plain
+    compiled forward on the canonicalized image, bitwise."""
+    reqs = [_req(rng, 0, 10), _req(rng, 1, 16), _req(rng, 2, 5)]
+    srv = VisionServer(model2, num_slots=2, buckets=(8, 16),
+                       clock=VirtualClock(), step_cost_s=0.1)
+    out = srv.run(reqs)
+    fwd = compile_forward(model2)
+    for r in reqs:
+        bucket = route_bucket(srv.buckets, *r.image.shape[:2])
+        canon = fit_image(r.image, bucket)
+        pad = np.zeros((srv.num_slots,) + canon.shape, np.float32)
+        pad[0] = canon
+        ref = np.asarray(fwd(pad))[0]
+        assert np.array_equal(out[r.rid], ref)
+
+
+# ---------------------------------------------------------------------------
+# cross-request telescoped schedule counters
+# ---------------------------------------------------------------------------
+def test_cross_request_combine_grows_with_batch(model2):
+    """The §3.2 combine win lifted across requests: at batch >= 4 the
+    deduped fetch plan must beat the intra-image combining baseline
+    (> 1.7x) — and scale with the batch width on static schedules."""
+    from repro.core.telescope import combine_schedule_requests
+    geo = layer_geometry(model2, 16)
+    for layer, g in zip(model2.layers, geo):
+        idx = layer.conv.packed.host_indices()
+        mpi = g["mb_per_img"]
+        wl = build_worklist(idx, 4 * mpi, mb_per_img=mpi)
+        cs = wl.combined()
+        intra = combine_schedule_requests(
+            wl.k, fetch_latency=wl.num_steps / max(wl.num_pairs, 1))
+        assert cs.cross_request_combine_factor == pytest.approx(4.0)
+        assert cs.cross_request_combine_factor > 1.7
+        assert cs.cross_request_combine_factor > intra["combine_factor"]
+        # batch 1 has nothing to combine across
+        wl1 = build_worklist(idx, mpi, mb_per_img=mpi)
+        assert wl1.combined().cross_request_combine_factor == 1.0
+
+
+def test_server_schedule_counters_surface_cross_factor(rng, model2):
+    srv = VisionServer(model2, num_slots=4, buckets=(8, 16),
+                       clock=VirtualClock(), step_cost_s=0.1)
+    srv.run([_req(rng, i, 8 + 8 * (i % 2)) for i in range(8)])
+    rec = srv.schedule_counters()
+    assert rec["cross_request_combine_factor"] == pytest.approx(4.0)
+    assert set(rec["per_bucket"]) == {"8", "16"}
+    for sub in rec["per_bucket"].values():
+        assert sub["per_image_filter_fetches"] == \
+            pytest.approx(4 * sub["combined_filter_fetches"])
+
+
+def test_engine_schedule_counters_include_combining(rng, model2):
+    """Satellite: VisionEngine surfaces the §3.2 combining model (and the
+    cross-request dedup) — previously computed only inside vision_bench."""
+    eng = VisionEngine(model2, num_slots=2)
+    eng.run([ImageRequest(rid=i, image=_img(rng, 8)) for i in range(2)])
+    rec = eng.schedule_counters()
+    assert rec["schedule_requests"] > 0
+    assert rec["schedule_fetches"] > 0
+    assert rec["combine_factor"] >= 1.0
+    assert rec["cross_request_combine_factor"] == pytest.approx(2.0)
+
+
+def test_build_worklist_rejects_ragged_images():
+    with pytest.raises(ValueError):
+        build_worklist(np.array([[0, 1]]), 4, mb_per_img=3)
+
+
+# ---------------------------------------------------------------------------
+# wall-clock mode (reported, not gated — keep assertions structural)
+# ---------------------------------------------------------------------------
+def test_wallclock_run_reports_percentiles(rng, model):
+    srv = VisionServer(model, num_slots=2, buckets=(8,), clock=WallClock())
+    srv.run([_req(rng, i, 8, arrival_s=0.01 * i) for i in range(4)])
+    assert srv.stats.images == 4
+    p = srv.stats.latency_percentiles()
+    assert 0 < p["p50"] <= p["p95"] <= p["p99"]
+    assert srv.stats.img_per_s > 0
+    assert srv.stats.wall_s > 0
+    assert srv.stats.compile_s > 0                     # warmup charged here
