@@ -42,6 +42,20 @@ Vision-serving gates (``benchmarks.serve_vision_bench``):
   * the warmed buckets' unified schedule record regressed
     (shared ``_check_schedule`` gates).
 
+Dist-vision gates (``benchmarks.dist_vision_bench``, the mesh-sharded
+runtime's {1, 2, 4, 8}-device sweep):
+
+  * any ``bitwise_corrupted`` executor — the sharded forward must stay
+    bitwise-equal to the single-device pipeline,
+  * ``device_step_speedup`` / ``step_scaling_efficiency`` dropped, at
+    the headline 8-device point or any device count in either sweep
+    (VGGNet compiled, ResNet-50 static) — cluster scaling regressed,
+  * per-device ``step_imbalance`` grew at any device count, or the
+    shard-balance chain's aggregate imbalance grew past its committed
+    value (the §4 round-robin balance broke),
+  * ``exchange_overlap_fraction`` dropped — the occupancy ring stopped
+    hiding the exchange under the work-list walk.
+
 Wall-clock numbers are *reported* but never gated — CI machines vary; the
 structural counters are what must not regress.
 """
@@ -61,6 +75,9 @@ SERVE_SETTINGS_KEYS = ("bench", "arch", "requests", "slots", "prompt_len",
 SERVE_VISION_SETTINGS_KEYS = ("bench", "arch", "num_layers", "pattern",
                               "density", "buckets", "slots", "requests",
                               "mean_gap_s", "sla_s", "seed")
+DIST_VISION_SETTINGS_KEYS = ("bench", "arch", "num_layers", "pattern",
+                             "density", "image_size", "batch", "devices",
+                             "seed")
 
 
 def _check_schedule(sched_base, sched_new, tag: str, *,
@@ -283,19 +300,122 @@ def report_serve_vision(baseline: dict, new: dict) -> None:
 
 
 # ---------------------------------------------------------------------------
+# dist-vision records (mesh-sharded runtime scaling sweep)
+# ---------------------------------------------------------------------------
+def _check_scaling_sweep(base_sweep: dict, new_sweep: dict,
+                         tag: str) -> list:
+    """Per-device-count gates on one scaling sweep: speedup/efficiency
+    drop, imbalance growth."""
+    failures = []
+    for d in sorted(set(base_sweep) & set(new_sweep), key=int):
+        b, n = base_sweep[d], new_sweep[d]
+        if n["device_step_speedup"] < (b["device_step_speedup"]
+                                       - COMPACTION_TOL):
+            failures.append(
+                f"[{tag}] device_step_speedup[D={d}] dropped: "
+                f"{b['device_step_speedup']:.4f} -> "
+                f"{n['device_step_speedup']:.4f}")
+        if n["step_scaling_efficiency"] < (b["step_scaling_efficiency"]
+                                           - COMPACTION_TOL):
+            failures.append(
+                f"[{tag}] step_scaling_efficiency[D={d}] dropped: "
+                f"{b['step_scaling_efficiency']:.4f} -> "
+                f"{n['step_scaling_efficiency']:.4f}")
+        if n.get("step_imbalance", 0.0) > (b.get("step_imbalance", 0.0)
+                                           + COMPACTION_TOL):
+            failures.append(
+                f"[{tag}] step_imbalance[D={d}] grew: "
+                f"{b.get('step_imbalance'):.4f} -> "
+                f"{n.get('step_imbalance'):.4f}")
+    for d in sorted(set(base_sweep) - set(new_sweep), key=int):
+        failures.append(f"[{tag}] device count {d} present in baseline "
+                        f"but missing from new run")
+    return failures
+
+
+def check_dist_vision(baseline: dict, new: dict) -> list:
+    if not all(baseline.get(k) == new.get(k)
+               for k in DIST_VISION_SETTINGS_KEYS):
+        return [
+            f"settings mismatch: baseline "
+            f"{[baseline.get(k) for k in DIST_VISION_SETTINGS_KEYS]} vs "
+            f"new {[new.get(k) for k in DIST_VISION_SETTINGS_KEYS]} "
+            f"— regenerate the committed baseline at the CI settings"]
+
+    failures = []
+    if new.get("bitwise_corrupted", 0):
+        failures.append(f"bitwise_corrupted = {new['bitwise_corrupted']} "
+                        f"(sharded forward must match the single-device "
+                        f"pipeline bitwise on every executor)")
+    for k in ("device_step_speedup", "step_scaling_efficiency",
+              "exchange_overlap_fraction"):
+        if new.get(k, 0.0) < baseline.get(k, 0.0) - COMPACTION_TOL:
+            failures.append(f"{k} dropped: {baseline[k]:.4f} -> "
+                            f"{new[k]:.4f}")
+    failures.extend(_check_scaling_sweep(baseline.get("scaling") or {},
+                                         new.get("scaling") or {},
+                                         baseline.get("arch", "scaling")))
+    failures.extend(_check_scaling_sweep(
+        baseline.get("resnet50_scaling") or {},
+        new.get("resnet50_scaling") or {}, "ResNet50"))
+    sb_base = baseline.get("shard_balance") or {}
+    sb_new = new.get("shard_balance") or {}
+    if sb_new.get("chain_imbalance", 0.0) > (
+            sb_base.get("chain_imbalance", 0.0) + COMPACTION_TOL):
+        failures.append(
+            f"[balance] chain_imbalance grew: "
+            f"{sb_base.get('chain_imbalance'):.4f} -> "
+            f"{sb_new.get('chain_imbalance'):.4f}")
+    if sb_new.get("chain_imbalance", 0.0) > (
+            sb_new.get("tolerance", 0.0) + COMPACTION_TOL):
+        failures.append(
+            f"[balance] chain_imbalance {sb_new.get('chain_imbalance'):.4f} "
+            f"over the committed {sb_new.get('tolerance')} tolerance")
+    return failures
+
+
+def report_dist_vision(baseline: dict, new: dict) -> None:
+    print(f"{'metric':<34s} {'baseline':>12s} {'new':>12s}")
+    rows = [(k, baseline.get(k), new.get(k))
+            for k in ("bitwise_corrupted", "device_step_speedup",
+                      "step_scaling_efficiency",
+                      "exchange_overlap_fraction")]
+    for sweep, tag in (("scaling", baseline.get("arch", "scaling")),
+                       ("resnet50_scaling", "ResNet50")):
+        b_sw, n_sw = baseline.get(sweep) or {}, new.get(sweep) or {}
+        rows += [(f"{tag}.steps/dev[D={d}]",
+                  (b_sw.get(d) or {}).get("per_device_steps"),
+                  (n_sw.get(d) or {}).get("per_device_steps"))
+                 for d in sorted(set(b_sw) | set(n_sw), key=int)]
+    rows += [(f"img_per_s[D={d}]",
+              ((baseline.get("scaling") or {}).get(d) or {}).get("img_per_s"),
+              rec.get("img_per_s"))
+             for d, rec in sorted((new.get("scaling") or {}).items(),
+                                  key=lambda kv: int(kv[0]))]
+    sb_b = baseline.get("shard_balance") or {}
+    sb_n = new.get("shard_balance") or {}
+    rows += [(f"balance.{k}", sb_b.get(k), sb_n.get(k))
+             for k in ("chain_imbalance", "chain_scaling_efficiency")]
+    for name, b, n in rows:
+        fb = f"{b:.4g}" if isinstance(b, (int, float)) else str(b)
+        fn_ = f"{n:.4g}" if isinstance(n, (int, float)) else str(n)
+        print(f"{name:<34s} {fb:>12s} {fn_:>12s}")
+
+
+# ---------------------------------------------------------------------------
 # dispatch
 # ---------------------------------------------------------------------------
 def kind_of(record: dict) -> str:
     bench = record.get("bench")
-    if bench in ("serve", "serve_vision"):
+    if bench in ("serve", "serve_vision", "dist_vision"):
         return bench
     return "vision"
 
 
 CHECKERS = {"serve": check_serve, "serve_vision": check_serve_vision,
-            "vision": check_vision}
+            "vision": check_vision, "dist_vision": check_dist_vision}
 REPORTERS = {"serve": report_serve, "serve_vision": report_serve_vision,
-             "vision": report_vision}
+             "vision": report_vision, "dist_vision": report_dist_vision}
 
 
 def check(baseline: dict, new: dict) -> list:

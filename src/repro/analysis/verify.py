@@ -86,6 +86,11 @@ register("PC-TUNED", E, "tuned tile config divides evenly, strategy legal "
          "for the layout, repack applied", "pack+admission+ci")
 register("PC-VMEM", E, "tuned config's accumulator/slab estimate inside "
          "the VMEM budget", "pack+admission+ci")
+register("PC-SHARD", E, "cluster shard map a contiguous partition of the "
+         "row blocks, mirrored on the packing, never worse-balanced than "
+         "the contiguous split", "pack+admission+ci")
+register("WL-SHARD-BAL", W, "per-device scheduled-step counts within the "
+         "committed cluster-balance tolerance", "pack+admission+ci")
 
 register("CH-GEOM", E, "fold legality across ReLU/pool: cout_i == "
          "cin_{i+1} (per-channel ops preserve the channel axis)",
@@ -298,6 +303,32 @@ def verify_worklist(wl, *, indices: Optional[np.ndarray] = None,
             check_stream(k, indices, live1, "stream-1")
             if gate_indices is not None and k2 is not None:
                 check_stream(k2, gate_indices, live2, "stream-2 (gate)")
+
+    shard_of = getattr(wl, "shard_of", None)
+    if shard_of is not None:
+        from repro.kernels.worklist_core import (SHARD_BALANCE_TOL,
+                                                 per_shard_steps,
+                                                 shard_imbalance)
+        so = _np(shard_of)
+        if so.shape != (nb,) or (so.size and so.min() < 0):
+            out.append(diag(
+                "WL-SHARD-BAL", path,
+                f"shard_of shape {so.shape} does not map the {nb} row "
+                f"blocks to devices",
+                hint="rebuild via build_worklist(shard_of=packed.shard_of)"))
+        elif int(so.max(initial=0)) > 0:
+            per = per_shard_steps(wl)
+            imb = shard_imbalance(per)
+            if imb > SHARD_BALANCE_TOL + 1e-9:
+                out.append(diag(
+                    "WL-SHARD-BAL", path,
+                    f"per-device scheduled steps {per.tolist()} imbalanced "
+                    f"{imb:.3f} > tolerance {SHARD_BALANCE_TOL} (max/mean "
+                    f"- 1)",
+                    hint="re-run the pack-time cluster balance "
+                         "(mesh_shard_assignment) — or accept the warning "
+                         "when too few row blocks per device make the "
+                         "bound unreachable"))
 
     for mpi, cs in sorted(getattr(wl, "_combined", {}).items()):
         out.extend(verify_combined_schedule(
@@ -658,6 +689,114 @@ def verify_packed_conv(pc, path: str = "conv", *,
                  "integer or double tiles break the MXU contract"))
 
     out.extend(_verify_tuned(pc, path))
+    out.extend(_verify_shard(pc, path))
+    return out
+
+
+def _verify_shard(pc, path: str) -> List[Diagnostic]:
+    """Cluster-shard contract for a mesh-packed layer (PC-SHARD).
+
+    The pack-time greedy balance (``mesh_shard_assignment``) commits to
+    three invariants the SPMD walker depends on: the assignment is a
+    *contiguous* partition of the row blocks over the devices (the shard
+    permutation was folded into the next layer, so device groups must be
+    one block-contiguous slice each — anything else breaks
+    ``shard_worklist_args``); the packing mirrors it (``packed.shard_of``
+    is what ``build_worklist`` threads into the schedules); and the
+    balance is never worse than the plain contiguous equal split — the
+    "never worse than lane-only" guarantee. Tolerance breaches are the
+    *work list's* warning (WL-SHARD-BAL), not an error here: with too few
+    row blocks per device no assignment can meet the bound.
+    """
+    shard = getattr(pc, "shard", None)
+    packed = pc.packed
+    p = f"{path}/shard"
+    out: List[Diagnostic] = []
+    if shard is None:
+        if getattr(packed, "shard_of", None) is not None:
+            out.append(diag(
+                "PC-SHARD", p,
+                "packed.shard_of set but the layer carries no ShardInfo",
+                hint="pack with build_sparse_chain(mesh_devices=...) so "
+                     "the assignment and its audit trail agree"))
+        return out
+    assign = np.asarray(shard.assign)
+    nb = packed.n_blocks
+    d = int(shard.num_devices)
+    if assign.shape != (nb,) or d < 1:
+        out.append(diag(
+            "PC-SHARD", p,
+            f"assign shape {assign.shape} / num_devices {d} does not "
+            f"partition the {nb} row blocks",
+            hint="one device id per packed row block"))
+        return out
+    counts = np.bincount(assign[(assign >= 0) & (assign < d)], minlength=d)
+    if (assign < 0).any() or (assign >= d).any() or (counts == 0).any():
+        out.append(diag(
+            "PC-SHARD", p,
+            f"assignment is not a partition over {d} devices "
+            f"(per-device block counts {counts.tolist()})",
+            hint="every device id in [0, D) must own at least one row "
+                 "block"))
+        return out
+    if (np.diff(assign) < 0).any():
+        out.append(diag(
+            "PC-SHARD", p,
+            "assignment is not block-contiguous",
+            hint="the shard permutation folds into the next layer's cin "
+                 "axis only when each device owns one contiguous slice of "
+                 "row blocks"))
+    so = getattr(packed, "shard_of", None)
+    if so is None or not np.array_equal(np.asarray(so), assign):
+        out.append(diag(
+            "PC-SHARD", p,
+            "packed.shard_of does not mirror the ShardInfo assignment",
+            hint="build_worklist threads packed.shard_of into every "
+                 "schedule — a mismatch splits the audit trail from the "
+                 "walker"))
+    steps = np.asarray(shard.block_steps)
+    if steps.shape != (nb,) or (steps < 1).any():
+        out.append(diag(
+            "PC-SHARD", p,
+            f"block_steps shape {steps.shape} illegal (need ({nb},), "
+            f"all >= 1)",
+            hint="each row block schedules max(live chunks, 1) steps"))
+        return out
+    if shard.mode not in ("greedy", "contiguous"):
+        out.append(diag(
+            "PC-SHARD", p, f"unknown shard mode {shard.mode!r}",
+            hint="modes: 'greedy' | 'contiguous'"))
+        return out
+    if shard.mode != "greedy":
+        # non-movable layers (last layer, ragged cout) take the plain
+        # contiguous split — no balance contract to hold them to
+        return out
+    # the balance contract: never worse than a greedy LPT recompute.
+    # (The pack-time pick is min(greedy, contiguous) over the *original*
+    # block order, which the folded permutation erased — greedy LPT is
+    # order-insensitive on the step multiset, so it is the one baseline
+    # the verifier can reconstruct exactly.)
+    cap = -(-nb // d)
+    load = np.zeros(d)
+    count = np.zeros(d, np.int64)
+    for b in np.argsort(-steps, kind="stable"):
+        open_d = np.nonzero(count < cap)[0]
+        tgt = open_d[np.argmin(load[open_d])]
+        load[tgt] += steps[b]
+        count[tgt] += 1
+    per = np.bincount(assign, weights=steps, minlength=d)
+
+    def imb(c):
+        mean = c.mean()
+        return float(c.max() / mean - 1.0) if mean > 0 else 0.0
+
+    if imb(per) > imb(load) + 1e-9:
+        out.append(diag(
+            "PC-SHARD", p,
+            f"cluster balance contract broken: imbalance {imb(per):.3f} "
+            f"worse than a greedy LPT recompute's {imb(load):.3f}",
+            hint="mesh_shard_assignment must return at least the greedy "
+                 "balance — re-run the pack-time cluster assignment"))
     return out
 
 

@@ -125,6 +125,9 @@ class BlockSparseMatrix:
     wl_cache: static (weight-only) telescoped work lists keyed by
         row-block count — the work-list frontends reuse pack-time
         schedules across calls the way ``PackedConv.wl_cache`` does.
+    shard_of: optional int32 [n_blocks] cluster assignment from the
+        packer's mesh-aware balance step; work-list builders thread it
+        into their schedules so per-device step counts stay observable.
     """
 
     indices: jnp.ndarray
@@ -136,6 +139,8 @@ class BlockSparseMatrix:
         default=None, repr=False, compare=False)
     wl_cache: dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
+    shard_of: np.ndarray | None = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def host_indices(self) -> np.ndarray:
         """Chunk index lists as host numpy (pack-time copy when available)."""

@@ -220,6 +220,15 @@ def batch_spec(mesh) -> P:
     return P(dp_axes(mesh) or None, None)
 
 
+def image_batch_spec(mesh) -> P:
+    """Spec for a [B, H, W, C] image batch: batch over the data-parallel
+    axes, spatial/channel dims replicated — the vision runtime's
+    cluster→device mapping shards whole images (per-image work lists stay
+    device-local, which is what keeps sharded outputs bitwise equal to
+    the single-device pipeline)."""
+    return P(dp_axes(mesh) or None, None, None, None)
+
+
 _ATTN_CACHE = ("k", "v", "cross_k", "cross_v")
 
 

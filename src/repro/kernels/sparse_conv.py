@@ -480,7 +480,8 @@ def sparse_conv2d_nhwc(x: jnp.ndarray, w: bm.BlockSparseMatrix, kh: int,
             wl = wl_cache.get(mb)
         if wl is None:
             wl = build_worklist(w.host_indices(), mb, occ_blk=occ_blk,
-                                mb_per_img=m_pad // bm_rows)
+                                mb_per_img=m_pad // bm_rows,
+                                shard_of=getattr(w, "shard_of", None))
             if occ_blk is None and wl_cache is not None:
                 wl_cache[mb] = wl
         aux["schedule"] = dict(
@@ -507,7 +508,9 @@ def sparse_conv2d_nhwc(x: jnp.ndarray, w: bm.BlockSparseMatrix, kh: int,
                 wl_s = wl_cache.get(mb) if wl_cache is not None else None
                 if wl_s is None:
                     wl_s = build_worklist(w.host_indices(), mb,
-                                          mb_per_img=m_pad // bm_rows)
+                                          mb_per_img=m_pad // bm_rows,
+                                          shard_of=getattr(w, "shard_of",
+                                                           None))
                     if wl_cache is not None:
                         wl_cache[mb] = wl_s
                 aux["schedule"]["static_scheduled_steps"] = wl_s.num_steps

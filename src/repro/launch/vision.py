@@ -3,13 +3,20 @@
     PYTHONPATH=src python -m repro.launch.vision --bench VGGNet --smoke
     PYTHONPATH=src python -m repro.launch.vision --bench AlexNet \
         --image-size 35 --requests 6 --slots 2 --density 0.368
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.vision --bench VGGNet \
+        --mesh 4 --slots 4 --requests 8
 
 Builds a pruned network for one of the simulator's Table-1 benchmarks
 (AlexNet / VGG16 / ResNet-18/50), serves staggered image requests through
 the round-robin vision engine, verifies the first image against the dense
 oracle, and prints per-layer measured densities + skipped-tile fractions.
-``--smoke`` runs a tiny 2-layer net at 16 px (the CI step). Interpret-mode
-wall time is NOT TPU performance; the structural numbers are what carries.
+``--smoke`` runs a tiny 2-layer net at 16 px (the CI step). ``--mesh N``
+shards the engine's image batch over an N-device data mesh (bitwise
+identical to solo; simulate devices on CPU with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before launch) and
+prints the per-device schedule counters. Interpret-mode wall time is NOT
+TPU performance; the structural numbers are what carries.
 """
 from __future__ import annotations
 
@@ -71,14 +78,23 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--stagger", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", type=int, default=None, metavar="N",
+                    help="data-shard the engine batch over an N-device "
+                         "mesh (N must divide --slots; bitwise identical "
+                         "to solo)")
     args = ap.parse_args()
 
+    mesh = None
+    if args.mesh is not None:
+        from repro.vision.mesh import data_mesh
+        mesh = data_mesh(args.mesh)
     layers = 2 if args.smoke and args.layers is None else args.layers
     size = args.image_size if args.image_size is not None else \
         (16 if args.smoke else 32)
     model = build_vision_model(args.bench, density=args.density,
                                num_layers=layers, seed=args.seed,
-                               pattern=args.pattern)
+                               pattern=args.pattern,
+                               mesh_devices=args.mesh)
     if args.autotune:
         recs = autotune_model(model, size)
         for i, r in recs.items():
@@ -104,7 +120,8 @@ def main() -> None:
     fd, md_meas = measured_densities(stats)
     print(f"measured network densities: filters {fd:.3f}, maps {md_meas:.3f}")
 
-    eng = VisionEngine(model, num_slots=args.slots, use_tuned=args.autotune)
+    eng = VisionEngine(model, num_slots=args.slots, use_tuned=args.autotune,
+                       mesh=mesh)
     reqs = [ImageRequest(rid=i, image=imgs[i], arrival=i * args.stagger)
             for i in range(args.requests)]
     produced = eng.run(reqs)
@@ -113,6 +130,12 @@ def main() -> None:
           f"{st.engine_steps} steps, {st.wall_s:.2f}s "
           f"({st.img_per_s:.2f} img/s steady, compile {st.compile_s:.2f}s, "
           f"util {st.slot_utilization:.2f})")
+    if mesh is not None:
+        sc = eng.schedule_counters()
+        print(f"mesh: {sc['num_devices']} devices, per-device steps "
+              f"{sc['per_device_steps']}, imbalance "
+              f"{sc['step_imbalance']:.3f}, scaling efficiency "
+              f"{sc['step_scaling_efficiency']:.3f}")
     assert np.allclose(produced[0], np.asarray(out0)[0], atol=1e-5), \
         "engine output must match the solo forward"
     print("engine output matches solo forward")

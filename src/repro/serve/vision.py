@@ -177,7 +177,8 @@ class VisionServer:
                  interpret: Optional[bool] = None,
                  schedule: str = "compact", executor: Optional[str] = None,
                  im2col: str = "auto", use_tuned: bool = False,
-                 verify_artifacts: bool = True, ewma: float = 0.3):
+                 verify_artifacts: bool = True, ewma: float = 0.3,
+                 mesh=None):
         if verify_artifacts:
             from repro.analysis import raise_on_errors, verify_model
             raise_on_errors(
@@ -208,11 +209,25 @@ class VisionServer:
             if missing:
                 raise ValueError(f"step_cost_s missing buckets {missing}")
         self._ewma = ewma
+        # mesh: data-shard every bucket's slot batch (num_slots / D local
+        # lanes per device; the per-image work lists stay device-local)
+        self.mesh = mesh
+        dp = 1
+        if mesh is not None:
+            import math
+            from repro.dist.partitioning import dp_axes
+            dp = math.prod(int(mesh.shape[a]) for a in dp_axes(mesh)) or 1
+            if num_slots % dp != 0:
+                raise ValueError(
+                    f"num_slots={num_slots} must divide over the mesh's "
+                    f"data extent {dp}")
+        self.num_devices = dp
+        self._local_slots = num_slots // dp
         from repro.kernels.ops import on_tpu
         self._fwd = VM.compile_forward(
             model, sub_m=sub_m, two_sided=two_sided, schedule=schedule,
             executor=executor, im2col=im2col, interpret=interpret,
-            donate=on_tpu(), use_tuned=use_tuned)
+            donate=on_tpu(), use_tuned=use_tuned, mesh=mesh)
         self._channels = model.layers[0].conv.cin
         self._est: Dict[int, float] = dict(self._fixed_cost or {})
         self._warm: set = set()
@@ -400,14 +415,22 @@ class VisionServer:
         (:func:`repro.vision.model.layer_geometry`) re-derives each
         layer's per-image row-block count so the cached schedules are
         attributed to their bucket and deduped batch-wide. ``None``
-        before any bucket warmed."""
+        before any bucket warmed.
+
+        The cache key is the *per-device* batch width: under a mesh each
+        device traced ``num_slots / D`` local lanes, so the lookup uses
+        ``_local_slots`` — matching the global width would miss the
+        sharded entries or collide with a co-resident single-device
+        server's. Mesh runs key ``per_bucket`` records by
+        ``"dev<d>/<bucket>"`` and the totals sum over every (device,
+        bucket) pair — whole-cluster accounting."""
         from repro.core.telescope import combine_schedule_requests
         from repro.kernels.worklist_core import schedule_counters
         sum_keys = ("scheduled_steps", "live_chunk_steps",
                     "flush_only_steps", "dense_grid_steps",
                     "filter_chunk_requests", "per_image_filter_fetches",
                     "combined_filter_fetches")
-        per_bucket: Dict[int, Dict[str, float]] = {}
+        per_bucket: Dict[str, Dict[str, float]] = {}
         requests = fetches = 0.0
         for bucket in sorted(self._warm):
             geo = VM.layer_geometry(self.model, bucket,
@@ -415,7 +438,7 @@ class VisionServer:
             records = []
             for layer, g in zip(self.model.layers, geo):
                 wl = layer.conv.wl_cache.get(
-                    self.num_slots * g["mb_per_img"])
+                    self._local_slots * g["mb_per_img"])
                 if wl is not None:
                     records.append(schedule_counters(
                         wl, combine=True, mb_per_img=g["mb_per_img"]))
@@ -430,9 +453,17 @@ class VisionServer:
                 rec["cross_request_combine_factor"] = (
                     rec["per_image_filter_fetches"]
                     / max(rec["combined_filter_fetches"], 1.0))
-                per_bucket[bucket] = rec
+                if self.num_devices > 1:
+                    # each device walks the same local schedule over its
+                    # own lanes: one record per (device, bucket)
+                    for d in range(self.num_devices):
+                        per_bucket[f"dev{d}/{bucket}"] = dict(rec)
+                else:
+                    per_bucket[str(bucket)] = rec
         if not per_bucket:
             return None
+        mult = self.num_devices if self.num_devices > 1 else 1
+        requests, fetches = requests * mult, fetches * mult
         tot: Dict[str, float] = {
             k: float(sum(r[k] for r in per_bucket.values()))
             for k in sum_keys}
@@ -446,5 +477,7 @@ class VisionServer:
         tot["schedule_requests"] = requests
         tot["schedule_fetches"] = fetches
         tot["combine_factor"] = requests / max(fetches, 1e-9)
-        tot["per_bucket"] = {str(b): per_bucket[b] for b in per_bucket}
+        if self.num_devices > 1:
+            tot["num_devices"] = self.num_devices
+        tot["per_bucket"] = dict(per_bucket)
         return tot

@@ -31,6 +31,8 @@ import numpy as np
 
 from repro.core import balance, bitmask as bm
 from repro.core.sparse import prune_by_magnitude
+from repro.kernels.worklist_core import (SHARD_BALANCE_TOL, shard_imbalance,
+                                         shard_scaling_efficiency)
 from repro.sparsity import structured
 
 
@@ -75,6 +77,94 @@ def pack_conv_filters(w: np.ndarray, chunk: int = bm.CHUNK,
         pad_to=pad_to)
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardInfo:
+    """Cluster (mesh-device) assignment of one layer's packed n-blocks.
+
+    The §4 round-robin load-balance story lifted from lanes to clusters:
+    ``assign[b]`` is the device that owns output-chunk block ``b`` *in the
+    packed (post-permutation) block order*, so it is always contiguous
+    non-decreasing — the shard permutation groups each device's blocks
+    together, which is what keeps the fold into the next layer's cin axis
+    legal (whole blocks move, tile alignment survives) and lets the SPMD
+    executor reassemble the output by concatenating per-device slabs in
+    ring order. ``block_steps[b]`` is the block's static per-row-block
+    scheduled-step count (``max(live chunks, 1)`` — live MACs or the one
+    flush-only step), the unit the balance minimizes.
+    """
+
+    num_devices: int
+    assign: np.ndarray            # [nb] int32, contiguous non-decreasing
+    block_steps: np.ndarray       # [nb] int64 static steps per n-block
+    mode: str                     # "greedy" | "contiguous"
+    tolerance: float = SHARD_BALANCE_TOL
+
+    @property
+    def device_steps(self) -> np.ndarray:
+        return np.bincount(self.assign, weights=self.block_steps,
+                           minlength=self.num_devices).astype(np.int64)
+
+    @property
+    def imbalance(self) -> float:
+        return shard_imbalance(self.device_steps)
+
+    @property
+    def scaling_efficiency(self) -> float:
+        return shard_scaling_efficiency(self.device_steps)
+
+
+def chunk_block_steps(mat: np.ndarray, bk: int, bn: int) -> np.ndarray:
+    """Static per-n-block scheduled steps of a matrixized layer: live
+    k-chunks per ``bn``-column block, floored at 1 (a fully dead block
+    still costs its flush-only step per row block)."""
+    kb, nbt = mat.shape[0] // bk, mat.shape[1] // bn
+    occ = (mat.reshape(kb, bk, nbt, bn) != 0).any(axis=(1, 3))
+    return np.maximum(occ.sum(axis=0), 1).astype(np.int64)
+
+
+def mesh_shard_assignment(block_steps: np.ndarray, num_devices: int
+                          ) -> Tuple[np.ndarray, str]:
+    """Assign n-blocks to mesh devices balancing static scheduled steps.
+
+    Two candidates are scored and the better one wins, so the mesh-aware
+    result is never worse than the lane-only layout:
+
+    * **contiguous** — equal split of the current (lane-balanced) block
+      order: what plain cout-sharding of the existing layout gives.
+    * **greedy** — longest-processing-time first under an equal-count
+      capacity (each device takes at most ``ceil(nb / D)`` blocks): the
+      §4 round-robin policy applied across clusters, with the count cap
+      keeping per-device packed shapes equal for SPMD execution.
+
+    Returns ``(assign, mode)`` with ``assign`` labeling blocks in their
+    *current* order (not yet contiguous — the caller's shard permutation
+    groups them).
+    """
+    block_steps = np.asarray(block_steps, np.int64)
+    nb = block_steps.size
+    d = max(1, min(int(num_devices), nb))
+    sizes = [nb // d + (1 if r < nb % d else 0) for r in range(d)]
+    contiguous = np.repeat(np.arange(d), sizes).astype(np.int32)
+    cap = -(-nb // d)
+    load = np.zeros(d, np.int64)
+    count = np.zeros(d, np.int64)
+    greedy = np.zeros(nb, np.int32)
+    for b in np.argsort(-block_steps, kind="stable"):
+        open_devs = np.nonzero(count < cap)[0]
+        dev = open_devs[np.argmin(load[open_devs])]
+        greedy[b] = dev
+        load[dev] += block_steps[b]
+        count[dev] += 1
+
+    def imb(assign):
+        return shard_imbalance(np.bincount(assign, weights=block_steps,
+                                           minlength=d))
+
+    if imb(greedy) < imb(contiguous) - 1e-12:
+        return greedy, "greedy"
+    return contiguous, "contiguous"
+
+
 @dataclasses.dataclass
 class PackedConv:
     """One conv layer, offline-processed: pruned (permuted/folded) dense
@@ -104,6 +194,11 @@ class PackedConv:
         dataclasses.field(default=None, repr=False, compare=False)
     tuned: Optional[Any] = dataclasses.field(default=None, repr=False,
                                              compare=False)
+    # cluster assignment of the packed n-blocks (mesh-aware balance step);
+    # None on chains built without mesh_devices. ``packed.shard_of``
+    # mirrors ``shard.assign`` so work-list builders see it.
+    shard: Optional[ShardInfo] = dataclasses.field(default=None, repr=False,
+                                                   compare=False)
 
     @property
     def kh(self) -> int:
@@ -143,6 +238,7 @@ def build_sparse_chain(weights: Sequence[np.ndarray], *, density: float = 1.0,
                        balance_filters: bool = True,
                        pattern: str = "unstructured",
                        micro_ranges: int = 3,
+                       mesh_devices: Optional[int] = None,
                        strict: bool = False) -> List[PackedConv]:
     """Offline pipeline for a sequential conv chain: prune -> balance ->
     fold into the next layer -> matrixize -> pack.
@@ -164,6 +260,18 @@ def build_sparse_chain(weights: Sequence[np.ndarray], *, density: float = 1.0,
     pruning in the channel layout — per-layer scalar density stays on
     target either way.  Balancing alternates direction per layer (the
     paper's two fixed permutations); the final layer is left unpermuted.
+
+    ``mesh_devices`` (optional) adds the *cluster-level* balance pass on
+    top of the lane balance: each layer's packed n-blocks are assigned to
+    ``min(mesh_devices, n_blocks)`` devices by
+    :func:`mesh_shard_assignment` (greedy §4 round-robin vs the
+    contiguous lane-only split — whichever balances static per-device
+    scheduled steps better), and the block-granular shard permutation
+    that groups each device's blocks contiguously is folded into the next
+    layer's cin axis exactly like the lane permutation. The last layer is
+    never permuted (its contiguous assignment is recorded as-is), and a
+    cout that is not whole ``bn`` blocks keeps the contiguous split (a
+    partial block cannot move without breaking the packed padding).
     """
     if pattern not in ("unstructured", "chunk"):
         raise ValueError(f"unknown pattern {pattern!r}")
@@ -202,12 +310,44 @@ def build_sparse_chain(weights: Sequence[np.ndarray], *, density: float = 1.0,
             ws[i + 1] = balance.fold_permutation(ws[i + 1], perm, axis_in=2)
         else:
             perm = np.arange(w.shape[3])
+        shard = None
+        if mesh_devices is not None and mesh_devices > 1:
+            mat = matrixize_filters(w, chunk, layout, bk=bk, bn=bn)
+            steps = chunk_block_steps(mat, bk, bn)
+            cout = w.shape[3]
+            movable = (not last) and cout % bn == 0
+            if movable:
+                assign, mode = mesh_shard_assignment(steps, mesh_devices)
+            else:
+                d = max(1, min(int(mesh_devices), steps.size))
+                sizes = [steps.size // d + (1 if r < steps.size % d else 0)
+                         for r in range(d)]
+                assign = np.repeat(np.arange(d), sizes).astype(np.int32)
+                mode = "contiguous"
+            if movable and not np.all(assign[:-1] <= assign[1:]):
+                # group each device's blocks contiguously; fold the
+                # block-granular permutation like the lane permutation
+                mblk = np.argsort(assign, kind="stable")
+                mperm = (mblk[:, None] * bn
+                         + np.arange(bn)[None, :]).reshape(-1)
+                w = w[..., mperm]
+                ws[i + 1] = balance.fold_permutation(ws[i + 1], mperm,
+                                                     axis_in=2)
+                perm = perm[mperm]
+                steps = steps[mblk]
+                assign = assign[mblk]
+                if info is not None:
+                    info = dataclasses.replace(
+                        info, keep=info.keep[:, mblk], quota=info.quota[mblk])
+            shard = ShardInfo(int(assign.max()) + 1, assign, steps, mode)
         packed = pack_conv_filters(w, chunk, layout=layout, bk=bk, bn=bn)
+        if shard is not None:
+            packed.shard_of = shard.assign
         out.append(PackedConv(w, packed, perm, layout=layout,
                               pattern=pattern if layout == "tap"
                               else ("unstructured" if pattern == "chunk"
                                     else pattern),
-                              prune_info=info))
+                              prune_info=info, shard=shard))
     if strict:
         # local import: repro.analysis imports this module
         from repro.analysis import raise_on_errors, verify_chain

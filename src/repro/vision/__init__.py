@@ -3,11 +3,15 @@
 ``model.py`` builds whole pruned CNNs (AlexNet / VGG16 / ResNet-18/50 — the
 simulator's Table-1 benchmarks) and runs them through the implicit-GEMM
 two-sided sparse conv kernel (:mod:`repro.kernels.sparse_conv`);
-``engine.py`` batches images through them with round-robin slot admission.
+``engine.py`` batches images through them with round-robin slot admission;
+``mesh.py`` shards the whole pipeline over a jax device mesh (the paper's
+clusters — data-parallel images and cout-sharded filter chunks).
 """
 from repro.kernels.autotune import (ConvTileConfig, TuneRecord, autotune_conv,
                                     autotune_model)
 from repro.vision.engine import ImageRequest, VisionEngine, VisionStats
+from repro.vision.mesh import (cout_sharded_spmm, data_mesh,
+                               mesh_schedule_counters, shard_forward)
 from repro.vision.model import (SUPPORTED_ARCHS, VisionModel,
                                 build_vision_model, compile_forward,
                                 dense_forward, fit_image, forward,
@@ -20,4 +24,6 @@ __all__ = ["ImageRequest", "VisionEngine", "VisionStats", "SUPPORTED_ARCHS",
            "dense_forward", "fit_image", "forward", "layer_geometry",
            "layer_table", "measured_densities", "oracle_check",
            "route_bucket", "schedule_summary", "ConvTileConfig",
-           "TuneRecord", "autotune_conv", "autotune_model"]
+           "TuneRecord", "autotune_conv", "autotune_model",
+           "cout_sharded_spmm", "data_mesh", "mesh_schedule_counters",
+           "shard_forward"]

@@ -84,7 +84,7 @@ class VisionEngine:
                  interpret: Optional[bool] = None,
                  schedule: str = "compact", executor: Optional[str] = None,
                  im2col: str = "auto", use_tuned: bool = False,
-                 verify_artifacts: bool = True):
+                 verify_artifacts: bool = True, mesh=None):
         # admission gate: an engine admits arbitrary checkpoints, so the
         # packed chain is verified (device-free) before anything compiles;
         # verify_artifacts=False opts hot construction paths out.
@@ -99,6 +99,21 @@ class VisionEngine:
         self.sub_m = sub_m
         self.two_sided = two_sided
         self.interpret = interpret
+        # mesh: data-shard the slot batch — each device walks the full
+        # per-image work lists on its num_slots / D local lanes, bitwise
+        # equal to the single-device pipeline
+        self.mesh = mesh
+        dp = 1
+        if mesh is not None:
+            import math
+            from repro.dist.partitioning import dp_axes
+            dp = math.prod(int(mesh.shape[a]) for a in dp_axes(mesh)) or 1
+            if num_slots % dp != 0:
+                raise ValueError(
+                    f"num_slots={num_slots} must divide over the mesh's "
+                    f"data extent {dp}")
+        self.num_devices = dp
+        self._local_slots = num_slots // dp
         # one jit of the whole net over the telescoped work-list schedule;
         # the engine hands it a fresh batch every step, so the input
         # buffer is donated (where the backend can use donations).
@@ -108,7 +123,7 @@ class VisionEngine:
         self._fwd = VM.compile_forward(
             model, sub_m=sub_m, two_sided=two_sided, schedule=schedule,
             executor=executor, im2col=im2col, interpret=interpret,
-            donate=on_tpu(), use_tuned=use_tuned)
+            donate=on_tpu(), use_tuned=use_tuned, mesh=mesh)
         self._warm_shapes: set = set()
         self.slot_req = np.full(num_slots, -1, np.int64)
         self._slot_img: List[Optional[np.ndarray]] = [None] * num_slots
@@ -136,15 +151,27 @@ class VisionEngine:
         (``per_image_filter_fetches`` / ``combined_filter_fetches`` /
         ``cross_request_combine_factor``). ``None`` before the first
         compile (no work lists built yet).
+
+        Work-list caches live on the shared model, keyed by batch-block
+        width — under a mesh each *device* traces the ``num_slots / D``
+        local width, so the match is against the per-device geometry
+        (``_local_slots``); matching the global width would miss the
+        sharded entries and double-count any co-resident engine's.
+        Mesh runs additionally report ``num_devices`` /
+        ``per_device_steps`` / ``step_imbalance`` /
+        ``step_scaling_efficiency`` (data-parallel: every device walks
+        the same local schedule, so the balance is exact).
         """
         from repro.core.telescope import combine_schedule_requests
         from repro.kernels.worklist_core import schedule_counters
         wls = [wl for layer in self.model.layers
                for wl in layer.conv.wl_cache.values()]
-        # count only this engine's batch geometry: other servers sharing
-        # the model leave their own widths in the cache
+        # count only this engine's *per-device* batch geometry: other
+        # engines/servers sharing the model leave their own widths in the
+        # cache, and a mesh engine's devices trace the local width
         mine = [wl for wl in wls
-                if wl.mb_per_img and wl.mb == self.num_slots * wl.mb_per_img]
+                if wl.mb_per_img
+                and wl.mb == self._local_slots * wl.mb_per_img]
         wls = mine or wls
         if not wls:
             return None
@@ -171,6 +198,18 @@ class VisionEngine:
             sum(c["fetches"] for c in combining))
         tot["combine_factor"] = (tot["schedule_requests"]
                                  / max(tot["schedule_fetches"], 1e-9))
+        if self.num_devices > 1:
+            from repro.kernels.worklist_core import (
+                shard_imbalance, shard_scaling_efficiency)
+            # data-parallel: every device walks the identical local
+            # schedule over its own image slice — exact balance
+            local = int(sum(wl.num_steps for wl in wls))
+            per_dev = np.full(self.num_devices, local, np.int64)
+            tot["num_devices"] = self.num_devices
+            tot["per_device_steps"] = [int(c) for c in per_dev]
+            tot["step_imbalance"] = shard_imbalance(per_dev)
+            tot["step_scaling_efficiency"] = shard_scaling_efficiency(
+                per_dev)
         return tot
 
     # -- queue -------------------------------------------------------------

@@ -77,7 +77,8 @@ def build_vision_model(name: str = "VGGNet", *,
                        num_layers: Optional[int] = None,
                        balance_filters: bool = True,
                        num_shards: int = 16,
-                       pattern: str = "unstructured") -> VisionModel:
+                       pattern: str = "unstructured",
+                       mesh_devices: Optional[int] = None) -> VisionModel:
     """Synthetic pruned network for one simulator benchmark.
 
     ``density`` defaults to the paper's Table-1 filter density for the
@@ -86,6 +87,9 @@ def build_vision_model(name: str = "VGGNet", *,
     selects the pruner (:func:`repro.sparsity.conv.build_sparse_chain`):
     ``"chunk"`` prunes at tile granularity in the tap-major layout, so the
     packed chunk maps carry real dead chunks for the schedule to skip.
+    ``mesh_devices`` additionally runs the pack-time cluster balance
+    (greedy output-chunk-group assignment, paper Section 4 round-robin) so
+    each layer's work lists carry a per-device shard map.
     """
     if name not in ARCH_STEM:
         raise ValueError(f"{name} does not linearize into a conv chain; "
@@ -108,7 +112,7 @@ def build_vision_model(name: str = "VGGNet", *,
     chain = build_sparse_chain(weights, density=density,
                                num_shards=num_shards,
                                balance_filters=balance_filters,
-                               pattern=pattern)
+                               pattern=pattern, mesh_devices=mesh_devices)
     stem_size, stem_stride, stem_pad = ARCH_STEM[name]
     layers: List[VisionLayer] = []
     for i, (spec, conv) in enumerate(zip(specs, chain)):
@@ -230,8 +234,8 @@ def compile_forward(model: VisionModel, *, sub_m: int = 8,
                     executor: Optional[str] = None, im2col: str = "auto",
                     interpret: Optional[bool] = None,
                     donate: bool = False,
-                    use_tuned: bool = False) -> Callable[[jnp.ndarray],
-                                                         jnp.ndarray]:
+                    use_tuned: bool = False,
+                    mesh=None) -> Callable[[jnp.ndarray], jnp.ndarray]:
     """One jit of the full forward (cached on the model per config).
 
     The layer loop is unrolled over the static layer specs inside a single
@@ -245,20 +249,32 @@ def compile_forward(model: VisionModel, *, sub_m: int = 8,
     the input buffer (serving engines hand a fresh batch every step);
     leave it off when the caller reuses ``x``. Retracing per input shape
     is handled by jit.
+
+    ``mesh`` data-shards the forward: the batch dim splits over the
+    mesh's data axes (``B`` must divide by the data extent) and every
+    device runs the full per-image work-list walk on its local slice
+    under ``shard_map`` — no cross-device collective in the graph, so
+    the sharded output is bitwise equal to the single-device pipeline.
     """
     tuned_key = tuple(
         l.conv.tuned.config.key()
         if (use_tuned and l.conv.tuned is not None) else None
         for l in model.layers)
+    mesh_key = None if mesh is None else (
+        tuple(mesh.axis_names), tuple(d.id for d in mesh.devices.flat))
     key = (sub_m, two_sided, schedule, executor, im2col, interpret, donate,
-           use_tuned, tuned_key)
+           use_tuned, tuned_key, mesh_key)
     fn = model._fwd_cache.get(key)
     if fn is None:
         body = functools.partial(
             _forward_layers, model, sub_m=sub_m, two_sided=two_sided,
             schedule=schedule, executor=executor, im2col=im2col,
             interpret=interpret, use_tuned=use_tuned)
-        fn = jax.jit(body, donate_argnums=(0,) if donate else ())
+        if mesh is not None:
+            from repro.vision.mesh import shard_forward
+            fn = shard_forward(body, mesh, donate=donate)
+        else:
+            fn = jax.jit(body, donate_argnums=(0,) if donate else ())
         model._fwd_cache[key] = fn
     return fn
 

@@ -491,3 +491,93 @@ def test_scheduler_admission_rejects_corrupt_leaves():
     bad["blocks"] = blocks
     with pytest.raises(AnalysisError, match="BS-RANGE"):
         Scheduler(cfg_s, bad, num_slots=1, max_len=8)
+
+
+# ---------------------------------------------------------------------------
+# PC-SHARD / WL-SHARD-BAL: the mesh cluster-shard contract
+# ---------------------------------------------------------------------------
+def _mesh_chain(seed=3, mesh_devices=4):
+    rng = np.random.default_rng(seed)
+    ws = [np.asarray(rng.normal(size=(3, 3, 32, 512)), np.float32),
+          np.asarray(rng.normal(size=(3, 3, 512, 1024)), np.float32),
+          np.asarray(rng.normal(size=(3, 3, 1024, 1024)), np.float32)]
+    return build_sparse_chain(ws, density=0.35, pattern="chunk",
+                              mesh_devices=mesh_devices)
+
+
+def test_mesh_chain_verifies_clean():
+    chain = _mesh_chain()
+    diags = verify_chain(chain, deep=True)
+    assert _rules(diags) == set(), render_text(diags)
+    assert all(pc.shard is not None for pc in chain)
+    # the audit trail mirrors the packing on every layer
+    for pc in chain:
+        assert np.array_equal(pc.packed.shard_of, pc.shard.assign)
+
+
+def test_shard_all_one_device_fires():
+    from repro.sparsity.conv import ShardInfo
+    chain = _mesh_chain()
+    pc = chain[1]
+    bad = dataclasses.replace(pc, shard=ShardInfo(
+        pc.shard.num_devices, np.zeros_like(pc.shard.assign),
+        pc.shard.block_steps, "greedy"))
+    assert "PC-SHARD" in _rules(verify_packed_conv(bad, check_values=False))
+
+
+def test_shard_out_of_range_fires():
+    from repro.sparsity.conv import ShardInfo
+    chain = _mesh_chain()
+    pc = chain[1]
+    assign = np.asarray(pc.shard.assign).copy()
+    assign[0] = pc.shard.num_devices + 3          # outside [0, D)
+    bad = dataclasses.replace(pc, shard=ShardInfo(
+        pc.shard.num_devices, assign, pc.shard.block_steps, pc.shard.mode))
+    assert "PC-SHARD" in _rules(verify_packed_conv(bad, check_values=False))
+
+
+def test_shard_noncontiguous_fires():
+    from repro.sparsity.conv import ShardInfo
+    chain = _mesh_chain()
+    pc = chain[1]
+    assign = np.asarray(pc.shard.assign).copy()
+    # swap a block across two device groups: still a partition, but the
+    # folded permutation no longer matches the device slices
+    first0 = int(np.nonzero(assign == 0)[0][0])
+    last = int(np.nonzero(assign == assign.max())[0][-1])
+    assign[first0], assign[last] = assign[last], assign[first0]
+    bad = dataclasses.replace(pc, shard=ShardInfo(
+        pc.shard.num_devices, assign, pc.shard.block_steps, pc.shard.mode))
+    assert "PC-SHARD" in _rules(verify_packed_conv(bad, check_values=False))
+
+
+def test_shard_of_mismatch_fires():
+    chain = _mesh_chain()
+    pc = chain[1]
+    so = np.asarray(pc.packed.shard_of).copy()
+    so[:] = so[::-1]
+    pc.packed.shard_of = so
+    assert "PC-SHARD" in _rules(verify_packed_conv(pc, check_values=False))
+
+
+def test_worklist_shard_imbalance_warns():
+    nb = 8
+    idx = np.full((nb, 4), -1, np.int32)
+    idx[:, 0] = 0
+    idx[0, :4] = [0, 1, 2, 3]                     # block 0 is 4x heavier
+    skew = np.asarray([0] * 7 + [1], np.int32)    # 7 blocks on device 0
+    wl = build_worklist(idx, 2, shard_of=skew)
+    diags = verify_worklist(wl)
+    warns = {d.rule for d in diags if d.severity == Severity.WARNING}
+    assert "WL-SHARD-BAL" in warns
+    assert _rules(diags) == set()                 # a warning, not an error
+
+
+def test_worklist_balanced_shard_is_silent():
+    nb = 8
+    idx = np.full((nb, 4), -1, np.int32)
+    idx[:, :2] = [0, 1]                           # uniform: 2 chunks/block
+    even = np.repeat(np.arange(4), 2).astype(np.int32)
+    wl = build_worklist(idx, 2, shard_of=even)
+    diags = verify_worklist(wl)
+    assert all(d.rule != "WL-SHARD-BAL" for d in diags), render_text(diags)

@@ -1,0 +1,207 @@
+"""Mesh-sharded vision runtime tests.
+
+Eager tests cover the pack-time cluster balance (the greedy assignment
+property) and the shard accounting helpers; the actual multi-device
+semantics run in a subprocess under a forced 8-device CPU topology (the
+main pytest process must keep its 1-device default — see test_dist.py
+for the pattern):
+
+* data-parallel ``compile_forward(mesh=...)`` bitwise-equal to the
+  single-device pipeline, on both executors;
+* the cout-sharded SPMD layer path (padded per-device schedule streams
+  + overlapped occupancy ring) bitwise-equal to ``worklist_spmm``;
+* elastic re-plan: shrinking the data axis after simulated failures
+  yields a smaller mesh the engine keeps serving on.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from hypothesis_stubs import given, settings, st
+
+from repro.kernels.worklist_core import (build_worklist, per_shard_steps,
+                                         shard_imbalance,
+                                         shard_scaling_efficiency,
+                                         shard_worklist_args)
+from repro.sparsity.conv import chunk_block_steps, mesh_shard_assignment
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+SRC = os.path.join(HERE, "..", "src")
+
+
+# ---------------------------------------------------------------------------
+# pack-time cluster balance (eager, 1 device)
+# ---------------------------------------------------------------------------
+def _imb(steps, assign, d):
+    per = np.bincount(assign, weights=np.asarray(steps, np.float64),
+                      minlength=d)
+    return shard_imbalance(per)
+
+
+@settings(deadline=None, max_examples=60)
+@given(st.lists(st.integers(min_value=1, max_value=64), min_size=1,
+                max_size=48),
+       st.integers(min_value=1, max_value=8))
+def test_mesh_balance_never_worse_than_contiguous(steps, d):
+    """The committed guarantee: on any static density profile the
+    mesh-aware assignment is never worse-balanced than the plain
+    contiguous (lane-only) split."""
+    steps = np.asarray(steps, np.int64)
+    assign, mode = mesh_shard_assignment(steps, d)
+    d_eff = int(assign.max()) + 1
+    sizes = [steps.size // d_eff + (1 if r < steps.size % d_eff else 0)
+             for r in range(d_eff)]
+    contig = np.repeat(np.arange(d_eff), sizes)
+    assert mode in ("greedy", "contiguous")
+    assert _imb(steps, assign, d_eff) <= _imb(steps, contig, d_eff) + 1e-9
+    # always a partition with every device non-empty
+    assert np.bincount(assign, minlength=d_eff).min() >= 1
+
+
+def test_mesh_balance_greedy_beats_contiguous_on_skew():
+    # one heavy block first: contiguous piles it with its neighbors,
+    # greedy isolates it
+    steps = np.asarray([40, 40, 1, 1, 1, 1, 1, 1], np.int64)
+    assign, mode = mesh_shard_assignment(steps, 2)
+    assert mode == "greedy"
+    assert _imb(steps, assign, 2) < _imb(steps, np.repeat([0, 1], 4), 2)
+
+
+def test_per_shard_steps_and_efficiency():
+    nb = 8
+    idx = np.full((nb, 4), -1, np.int32)
+    idx[:, :2] = [0, 1]
+    wl = build_worklist(idx, 4,
+                        shard_of=np.repeat(np.arange(4), 2).astype(np.int32))
+    per = per_shard_steps(wl)
+    assert per.sum() == wl.num_steps
+    assert shard_imbalance(per) == 0.0
+    assert shard_scaling_efficiency(per) == 1.0
+    args = shard_worklist_args(wl, 4)
+    assert args["n"].shape[0] == 4
+    # per-device live entries re-index n into the local block range
+    assert args["n"][args["valid"] > 0].max() < nb // 4
+
+
+def test_chunk_block_steps_counts_live_chunks():
+    mat = np.zeros((256, 256), np.float32)
+    mat[0, 0] = 1.0            # block 0: 1 live chunk
+    mat[:, 128:] = 1.0         # block 1: all chunks live
+    steps = chunk_block_steps(mat, 128, 128)
+    assert steps.tolist() == [1, 2]
+
+
+# ---------------------------------------------------------------------------
+# multi-device semantics (subprocess, 8 forced host devices)
+# ---------------------------------------------------------------------------
+DIST_VISION_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np, jax.numpy as jnp
+from repro.vision import model as VM
+from repro.vision.engine import VisionEngine, ImageRequest
+from repro.vision.mesh import (cout_sharded_spmm, data_mesh,
+                               mesh_schedule_counters)
+
+rng = np.random.default_rng(0)
+
+# 1. data-parallel forward bitwise == single device, both executors
+model = VM.build_vision_model("VGGNet", num_layers=3, pattern="chunk",
+                              density=0.4, mesh_devices=4)
+x = np.zeros((8, 24, 24, 3), np.float32)
+dense = rng.standard_normal((8, 24, 24, 3))
+x[:] = np.where(rng.random((8, 24, 24, 3)) < 0.5, dense, 0.0)
+mesh = data_mesh(8)
+for executor, interp in (("xla", None), ("pallas", True)):
+    solo = np.asarray(VM.compile_forward(model, executor=executor,
+                                         interpret=interp)(jnp.asarray(x)))
+    sharded = np.asarray(VM.compile_forward(
+        model, executor=executor, interpret=interp,
+        mesh=mesh)(jnp.asarray(x)))
+    assert sharded.shape == solo.shape, (sharded.shape, solo.shape)
+    assert np.array_equal(sharded, solo), (
+        executor, np.abs(sharded - solo).max())
+    print("DATA_PARALLEL_BITWISE_OK", executor)
+
+# 2. sub-mesh (2 devices) also bitwise — uneven device counts
+mesh2 = data_mesh(2)
+solo = np.asarray(VM.compile_forward(model, executor="xla")(jnp.asarray(x)))
+sh2 = np.asarray(VM.compile_forward(model, executor="xla",
+                                    mesh=mesh2)(jnp.asarray(x)))
+assert np.array_equal(sh2, solo)
+print("SUBMESH_BITWISE_OK")
+
+# 3. cout-sharded SPMD layer: padded per-device streams + occupancy ring
+from jax.sharding import Mesh
+from repro.kernels.worklist_core import build_worklist, worklist_spmm
+from repro.sparsity.conv import mesh_shard_assignment
+nb, kb, max_nz, mb = 8, 6, 4, 2
+idx = np.full((nb, max_nz), -1, np.int32)
+for n in range(nb):
+    k = rng.integers(1, max_nz + 1)
+    idx[n, :k] = np.sort(rng.choice(kb, size=k, replace=False))
+steps = np.maximum((idx >= 0).sum(1), 1).astype(np.int64)
+assign, _ = mesh_shard_assignment(steps, 4)
+order = np.argsort(assign, kind="stable")
+idx, steps, assign = idx[order], steps[order], assign[order]
+wl = build_worklist(idx, mb, shard_of=assign)
+bk, bn, bm_rows = 8, 16, 4
+M, K = bm_rows * mb, kb * bk
+patches = rng.standard_normal((M, K)).astype(np.float32)
+vals = rng.standard_normal((nb, max_nz, bk, bn)).astype(np.float32)
+ref = np.asarray(worklist_spmm(jnp.asarray(patches), jnp.asarray(vals), wl,
+                               bk=bk, bn=bn, bm_rows=bm_rows,
+                               executor="xla")).reshape(M, nb * bn)
+mmesh = Mesh(np.array(jax.devices()[:4]), ("model",))
+out, occ = cout_sharded_spmm(jnp.asarray(patches), vals, wl, mmesh,
+                             bk=bk, bn=bn, bm_rows=bm_rows, occupancy=True)
+assert np.array_equal(np.asarray(out), ref), np.abs(np.asarray(out) - ref).max()
+assert occ.shape[-1] == nb, occ.shape
+print("COUT_SHARD_RING_BITWISE_OK")
+
+# 4. mesh engine serves and reports per-device counters
+eng = VisionEngine(model, num_slots=8, executor="xla", mesh=mesh)
+reqs = [ImageRequest(i, x[i % 8]) for i in range(12)]
+outs = eng.run(reqs)
+assert len(outs) == 12
+sc = eng.schedule_counters()
+assert sc["num_devices"] == 8
+assert len(sc["per_device_steps"]) == 8
+assert sc["step_imbalance"] == 0.0
+msc = mesh_schedule_counters(model, 8)
+assert msc["num_devices"] == 8
+print("MESH_ENGINE_OK")
+
+# 5. elastic re-plan: lose devices, shrink the data axis, keep serving
+from repro.dist.elastic import FailureSimulator, plan_mesh
+sim = FailureSimulator(fail_at={3: 1, 5: 3})
+alive = sim.surviving(5, 8)
+plan = plan_mesh(alive, model_parallel=1, pod_size=8)
+assert plan.data == 4 and plan.model == 1
+small = data_mesh(plan.data)
+eng2 = VisionEngine(model, num_slots=8, executor="xla", mesh=small,
+                    verify_artifacts=False)
+outs2 = eng2.run([ImageRequest(100 + i, x[i % 8]) for i in range(8)])
+assert len(outs2) == 8
+assert np.array_equal(outs2[100], outs[0])
+print("ELASTIC_REPLAN_OK")
+"""
+
+
+def test_mesh_vision_semantics_under_8_devices():
+    """Run the mesh-sharded vision suite in a subprocess with 8 host
+    devices (the main pytest process keeps the 1-device default)."""
+    env = dict(os.environ,
+               PYTHONPATH=SRC + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    r = subprocess.run([sys.executable, "-c", DIST_VISION_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "DATA_PARALLEL_BITWISE_OK xla" in r.stdout
+    assert "DATA_PARALLEL_BITWISE_OK pallas" in r.stdout
+    assert "SUBMESH_BITWISE_OK" in r.stdout
+    assert "COUT_SHARD_RING_BITWISE_OK" in r.stdout
+    assert "MESH_ENGINE_OK" in r.stdout
+    assert "ELASTIC_REPLAN_OK" in r.stdout
